@@ -1,0 +1,165 @@
+//! Ablation studies — regenerates the paper's Table 4 (numerical
+//! precision), Table 5 (stability factor alpha), and Table 6 (gradual mask
+//! contribution).
+//!
+//!     cargo run --release --example ablations -- \
+//!         [--what alpha,gradual,precision] [--model opt-s1] [--config w2a16g128]
+
+use anyhow::Result;
+
+use affinequant::benchx::Table;
+use affinequant::cli::{parse_config, Cli};
+use affinequant::coordinator::{calibrate, CalibOptions};
+use affinequant::data::CorpusKind;
+use affinequant::eval;
+use affinequant::harness::{alpha_sweep, gradual_ablation, Ctx, EVAL_BATCHES};
+use affinequant::linalg;
+use affinequant::model::merge::MergePrecision;
+use affinequant::report::save_table;
+use affinequant::rngx::Pcg32;
+use affinequant::tensor::Tensor;
+use affinequant::util::Timer;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(&[vec!["ablations".to_string()], args].concat())?;
+    let what = cli.str_or("what", "alpha,gradual,precision");
+    let model = cli.str_or("model", "opt-s1");
+    let mut ctx = Ctx::load()?;
+
+    if what.contains("alpha") {
+        // Table 5: full sweep 1e0 .. 1e-8
+        let alphas: Vec<f32> = (0..=8).map(|k| 10f32.powi(-k)).collect();
+        alpha_sweep(&mut ctx, &model, &cli.str_or("config", "w2a16g128"), &alphas, "table5_alpha")?
+            .print();
+    }
+    if what.contains("gradual") {
+        // Table 6
+        gradual_ablation(&mut ctx, &model, &cli.str_or("config", "w3a16"), "table6_gradual")?
+            .print();
+    }
+    if what.contains("precision") {
+        precision_table(&mut ctx, &model)?.print();
+    }
+    if what.contains("projection") {
+        projection_table(&mut ctx, &model)?.print();
+    }
+    Ok(())
+}
+
+/// Extension ablation (DESIGN.md §10 / paper "future work"): can an
+/// explicit SDD re-projection after every epoch rescue stability factors
+/// that are otherwise too aggressive (the NaN rows of Table 5)?
+fn projection_table(ctx: &mut Ctx, model: &str) -> Result<Table> {
+    let (spec, act_bits) = parse_config("w2a16")?;
+    let (rt, fp) = ctx.model(model)?;
+    let mut t = Table::new(
+        "SDD projection extension (alpha stress)",
+        &["alpha", "project_sdd", "diverged", "ppl_wt2s", "last_block_loss"],
+    );
+    for alpha in [1.0f32, 0.5] {
+        for project in [false, true] {
+            let mut opts = CalibOptions::affinequant(spec, act_bits);
+            opts.alpha = alpha;
+            opts.project_sdd = project;
+            let (qps, rep) = calibrate(&rt, &fp, &opts, false)?;
+            let ppl = if rep.any_diverged() {
+                "NaN".to_string()
+            } else {
+                format!("{:.3}", eval::perplexity(&rt, &qps, CorpusKind::Wt2s, EVAL_BATCHES, None)?)
+            };
+            t.row(vec![
+                format!("{alpha}"),
+                format!("{project}"),
+                format!("{}", rep.any_diverged()),
+                ppl,
+                format!("{:.3e}", rep.last_block_loss()),
+            ]);
+            t.print_last();
+        }
+    }
+    save_table(&t, "ext_projection")?;
+    Ok(t)
+}
+
+/// Table 4: merge error (the paper's 1000-run random-matrix protocol at our
+/// dimensions), plus PPL / runtime under the three precision schemes.
+fn precision_table(ctx: &mut Ctx, model: &str) -> Result<Table> {
+    let mut t = Table::new(
+        "Precision schemes (Table 4)",
+        &["scheme", "merge_error", "ppl_wt2s", "runtime_s", "transform_bytes"],
+    );
+    let (spec, act_bits) = parse_config("w2a16")?;
+    let (rt, fp) = ctx.model(model)?;
+    let d = rt.cfg.d_model;
+
+    for (scheme, prec) in [
+        ("double", MergePrecision::F64),
+        ("float", MergePrecision::F32),
+        ("float-double", MergePrecision::F32InvF64),
+    ] {
+        // merge error: ‖XW − (XA⁻¹)(AW)‖² mean over random SDD A (paper §4.3)
+        let runs = 100;
+        let mut err_sum = 0.0f64;
+        let mut rng = Pcg32::seeded(42);
+        for _ in 0..runs {
+            let mut a = Tensor::randn(&[d, d], 1.0 / d as f32, &mut rng);
+            for i in 0..d {
+                let off: f32 =
+                    (0..d).filter(|&j| j != i).map(|j| a.data[i * d + j].abs()).sum();
+                a.data[i * d + i] = 1.2 * (off + 0.05);
+            }
+            let x = Tensor::randn(&[64, d], 1.0, &mut rng);
+            let w = Tensor::randn(&[d, d], 0.05, &mut rng);
+            let ainv = affinequant::model::merge::inverse_prec(&a, prec);
+            let aw = affinequant::model::merge::mm_prec(&a, &w, prec);
+            let y0 = x.matmul(&w);
+            let y1 = x.matmul(&ainv).matmul(&aw);
+            err_sum += y0.mse(&y1);
+        }
+        let merge_err = err_sum / runs as f64;
+
+        // PPL + runtime of a full calibration under this scheme
+        let mut opts = CalibOptions::affinequant(spec, act_bits);
+        opts.prec = prec;
+        let timer = Timer::start();
+        let (qps, _) = calibrate(&rt, &fp, &opts, false)?;
+        let secs = timer.secs();
+        let ppl = eval::perplexity(&rt, &qps, CorpusKind::Wt2s, EVAL_BATCHES, None)?;
+        // transform working-set bytes per block: 2·d² + h·hd² matrices
+        let elems = 2 * d * d + rt.cfg.n_heads * rt.cfg.head_dim * rt.cfg.head_dim;
+        let bytes = match prec {
+            MergePrecision::F32 => elems * 4,
+            MergePrecision::F64 => elems * 8,
+            MergePrecision::F32InvF64 => elems * 4 + d * d * 8,
+        };
+        t.row(vec![
+            scheme.to_string(),
+            format!("{merge_err:.3e}"),
+            format!("{ppl:.3}"),
+            format!("{secs:.1}"),
+            format!("{bytes}"),
+        ]);
+        t.print_last();
+    }
+    // sanity: the f64 inverse is orders tighter on the residual metric
+    let mut rng = Pcg32::seeded(7);
+    let mut a = Tensor::randn(&[d, d], 1.0 / d as f32, &mut rng);
+    for i in 0..d {
+        let off: f32 = (0..d).filter(|&j| j != i).map(|j| a.data[i * d + j].abs()).sum();
+        a.data[i * d + i] = 1.2 * (off + 0.05);
+    }
+    let a64: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+    let r32 = linalg::inverse_residual(
+        &a64,
+        &affinequant::model::merge::inverse_prec(&a, MergePrecision::F32)
+            .data
+            .iter()
+            .map(|&v| v as f64)
+            .collect::<Vec<_>>(),
+        d,
+    );
+    println!("f32 inverse residual at d={d}: {r32:.3e}");
+    save_table(&t, "table4_precision")?;
+    Ok(t)
+}

@@ -1,0 +1,81 @@
+//! Loss-landscape exhibits — regenerates the paper's Figure 3 (last-block
+//! MSE loss curves, AffineQuant vs OmniQuant) and Figures 5/6 (last-block
+//! loss vs model PPL scatter + Pearson correlation).
+//!
+//!     cargo run --release --example loss_landscape -- \
+//!         [--model opt-s1] [--configs w2a16,w3a16g128] [--skip-scatter]
+
+use anyhow::Result;
+
+use affinequant::cli::{parse_config, Cli};
+use affinequant::coordinator::{calibrate, CalibOptions};
+use affinequant::data::CorpusKind;
+use affinequant::eval::{self, pearson};
+use affinequant::harness::{Ctx, EVAL_BATCHES};
+use affinequant::report::{log_line, save_series};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(&[vec!["loss".to_string()], args].concat())?;
+    let model = cli.str_or("model", "opt-s1");
+    let configs: Vec<String> =
+        cli.str_or("configs", "w2a16,w3a16g128").split(',').map(str::to_string).collect();
+    let mut ctx = Ctx::load()?;
+    let (rt, fp) = ctx.model(&model)?;
+
+    // ---- Figure 3: last-block loss curves ------------------------------
+    for config in &configs {
+        let (spec, act_bits) = parse_config(config)?;
+        for (method, opts) in [
+            ("affinequant", CalibOptions::affinequant(spec, act_bits)),
+            ("omniquant", CalibOptions::omniquant(spec, act_bits)),
+        ] {
+            let (_, rep) = calibrate(&rt, &fp, &opts, false)?;
+            let curve = &rep.blocks.last().unwrap().loss_curve;
+            let rows: Vec<(f64, f64)> =
+                curve.iter().enumerate().map(|(e, &l)| ((e + 1) as f64, l)).collect();
+            save_series(&format!("fig3_loss_{model}_{config}_{method}"), "epoch,loss", &rows)?;
+            println!(
+                "fig3 {model} {config} {method}: first {:.3e} last {:.3e}",
+                curve.first().unwrap(),
+                curve.last().unwrap()
+            );
+        }
+    }
+
+    // ---- Figures 5/6: loss ↔ PPL scatter + Pearson r --------------------
+    if !cli.flag("skip-scatter") {
+        let alphas = [1.0f32, 0.3, 0.1, 0.03, 0.01, 1e-3];
+        let mut pts_w: Vec<(f64, f64)> = Vec::new();
+        let mut pts_c: Vec<(f64, f64)> = Vec::new();
+        for &alpha in &alphas {
+            let mut opts = CalibOptions::affinequant(affinequant::quant::QuantSpec::new(4, 0), 4);
+            opts.alpha = alpha;
+            let (qps, rep) = calibrate(&rt, &fp, &opts, false)?;
+            if rep.any_diverged() {
+                println!("alpha {alpha}: diverged, skipped");
+                continue;
+            }
+            let loss = rep.last_block_loss();
+            let qmax = eval::act_qmax(4);
+            let pw = eval::perplexity(&rt, &qps, CorpusKind::Wt2s, EVAL_BATCHES, qmax)?;
+            let pc = eval::perplexity(&rt, &qps, CorpusKind::C4s, EVAL_BATCHES, qmax)?;
+            println!("alpha {alpha:.0e}: loss {loss:.3e} ppl(wt2s) {pw:.3} ppl(c4s) {pc:.3}");
+            pts_w.push((loss, pw));
+            pts_c.push((loss, pc));
+        }
+        save_series(&format!("fig5_scatter_{model}_wt2s"), "last_block_loss,ppl", &pts_w)?;
+        save_series(&format!("fig6_scatter_{model}_c4s"), "last_block_loss,ppl", &pts_c)?;
+        let rw = pearson(
+            &pts_w.iter().map(|p| p.0).collect::<Vec<_>>(),
+            &pts_w.iter().map(|p| p.1).collect::<Vec<_>>(),
+        );
+        let rc = pearson(
+            &pts_c.iter().map(|p| p.0).collect::<Vec<_>>(),
+            &pts_c.iter().map(|p| p.1).collect::<Vec<_>>(),
+        );
+        println!("Pearson r: wt2s {rw:.3}  c4s {rc:.3}  (paper: ≈0.95)");
+        log_line(&format!("fig56 {model}: pearson wt2s={rw:.3} c4s={rc:.3}"))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! PPL vs weighted-memory Pareto frontier — regenerates the paper's
+//! Figure 4: for each model size and quantization config, the deployed
+//! memory (packed codes + scales/zps + kept affine matrices) against PPL,
+//! for AffineQuant vs OmniQuant (the paper's comparison pair).
+//!
+//!     cargo run --release --example pareto_frontier -- \
+//!         [--models opt-s1,opt-s2] [--configs w2a16g64,w3a16,w4a16]
+
+use anyhow::Result;
+
+use affinequant::benchx::Table;
+use affinequant::cli::{parse_config, Cli};
+use affinequant::data::CorpusKind;
+use affinequant::eval::{self, weighted_memory_bytes};
+use affinequant::harness::{method_ppl, Ctx};
+use affinequant::report::save_table;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(&[vec!["pareto".to_string()], args].concat())?;
+    let models: Vec<String> =
+        cli.str_or("models", "opt-s1,opt-s2").split(',').map(str::to_string).collect();
+    let configs: Vec<String> =
+        cli.str_or("configs", "w2a16g64,w3a16,w4a16").split(',').map(str::to_string).collect();
+
+    let mut ctx = Ctx::load()?;
+    let mut t = Table::new(
+        "PPL vs weighted memory (Fig. 4)",
+        &["model", "config", "method", "memory_bytes", "ppl_wt2s", "ppl_c4s"],
+    );
+    for model in &models {
+        // FP16 anchor point
+        let (rt, fp) = ctx.model(model)?;
+        let fp_mem = affinequant::quant::fp16_bytes(fp.theta.len());
+        let ppl_w = eval::perplexity(&rt, &fp, CorpusKind::Wt2s, affinequant::harness::EVAL_BATCHES, None)?;
+        let ppl_c = eval::perplexity(&rt, &fp, CorpusKind::C4s, affinequant::harness::EVAL_BATCHES, None)?;
+        t.row(vec![
+            model.clone(),
+            "fp16".into(),
+            "fp16".into(),
+            format!("{fp_mem}"),
+            format!("{ppl_w:.3}"),
+            format!("{ppl_c:.3}"),
+        ]);
+        t.print_last();
+        for config in &configs {
+            let (spec, act_bits) = parse_config(config)?;
+            for method in ["omniquant", "affinequant"] {
+                let ppl = method_ppl(&mut ctx, model, method, spec, act_bits)?;
+                // AffineQuant keeps the full A⁻¹ per site in weight-only
+                // deployment; OmniQuant's diagonal folds away entirely.
+                let kept = method == "affinequant";
+                let (_, fp2) = ctx.model(model)?;
+                let mem = weighted_memory_bytes(&fp2, spec, kept);
+                t.row(vec![
+                    model.clone(),
+                    config.clone(),
+                    method.into(),
+                    format!("{mem}"),
+                    format!("{:.3}", ppl["wt2s"]),
+                    format!("{:.3}", ppl["c4s"]),
+                ]);
+                t.print_last();
+            }
+        }
+    }
+    t.print();
+    save_table(&t, "fig4_pareto")?;
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! End-to-end driver (DESIGN.md §6): trains (or loads) the `opt-s1`
+//! checkpoint through the AOT `train_step` artifact, runs AffineQuant
+//! calibration at w4a16 and w4a4, and evaluates perplexity on all three
+//! corpora plus the six zero-shot tasks against FP16 and RTN.
+//!
+//!     cargo run --release --example quickstart [-- --model opt-s1]
+
+use anyhow::Result;
+
+use affinequant::benchx::Table;
+use affinequant::cli::{parse_config, Cli};
+use affinequant::data::CorpusKind;
+use affinequant::eval::{self, act_qmax, zeroshot};
+use affinequant::harness::Ctx;
+use affinequant::report::save_table;
+use affinequant::util::Timer;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(&[vec!["quickstart".to_string()], args].concat())?;
+    let model = cli.str_or("model", "opt-s1");
+    let mut ctx = Ctx::load()?;
+    let t = Timer::start();
+
+    println!("== quickstart: {model} ==");
+    let (rt, fp) = ctx.model(&model)?;
+    println!(
+        "model {} ({} params, {} blocks), artifacts loaded",
+        rt.cfg.name,
+        affinequant::util::human_count(rt.cfg.params as f64),
+        rt.cfg.n_layers
+    );
+
+    let mut ppl_t = Table::new(
+        &format!("quickstart PPL — {model}"),
+        &["method", "config", "wt2s", "ptbs", "c4s"],
+    );
+    let mut zs_rows: Vec<(String, Vec<(String, f64)>)> = Vec::new();
+
+    for (method, config) in [
+        ("fp16", "-"),
+        ("rtn", "w4a16"),
+        ("affinequant", "w4a16"),
+        ("rtn", "w4a4"),
+        ("affinequant", "w4a4"),
+    ] {
+        let (qps, qmax) = if method == "fp16" {
+            (fp.clone(), None)
+        } else {
+            let (spec, act_bits) = parse_config(config)?;
+            let q = affinequant::baselines::quantize_with(
+                &rt,
+                &fp,
+                method,
+                spec,
+                act_bits,
+                affinequant::harness::default_alpha(&model, spec),
+            )?;
+            (q, act_qmax(act_bits))
+        };
+        let mut row = vec![method.to_string(), config.to_string()];
+        for kind in CorpusKind::all() {
+            row.push(format!(
+                "{:.3}",
+                eval::perplexity(&rt, &qps, kind, affinequant::harness::EVAL_BATCHES, qmax)?
+            ));
+        }
+        ppl_t.row(row);
+        ppl_t.print_last();
+        zs_rows.push((
+            format!("{method} {config}"),
+            zeroshot::suite(&rt, &qps, affinequant::harness::ZEROSHOT_N, qmax)?,
+        ));
+    }
+    ppl_t.print();
+    save_table(&ppl_t, "quickstart_ppl")?;
+
+    let mut header = vec!["method".to_string()];
+    header.extend(zeroshot::TASKS.iter().map(|s| s.to_string()));
+    header.push("avg".into());
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut zs_t = Table::new(&format!("quickstart zero-shot — {model}"), &hrefs);
+    for (label, suite) in zs_rows {
+        let mut row = vec![label];
+        row.extend(suite.iter().map(|(_, a)| format!("{a:.2}")));
+        zs_t.row(row);
+    }
+    zs_t.print();
+    save_table(&zs_t, "quickstart_zeroshot")?;
+
+    println!("quickstart done in {}", affinequant::util::human_secs(t.secs()));
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Weight-activation (w4a4) evaluation — regenerates the paper's Table 3
+//! (PPL across method set {SmoothQuant, OmniQuant, AffineQuant} vs FP16)
+//! and Table 2 (six-task zero-shot accuracy).
+//!
+//!     cargo run --release --example w4a4_eval -- \
+//!         [--models opt-s1,opt-s2,ll-s1] [--skip-zeroshot]
+
+use anyhow::Result;
+
+use affinequant::cli::Cli;
+use affinequant::harness::{w4a4_ppl_table, zeroshot_table, Ctx};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(&[vec!["w4a4".to_string()], args].concat())?;
+    let models: Vec<String> = cli
+        .str_or("models", "opt-s1,opt-s2,ll-s1")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let methods: Vec<String> =
+        ["fp16", "smoothquant", "omniquant", "affinequant"].map(String::from).to_vec();
+
+    let mut ctx = Ctx::load()?;
+    let t3 = w4a4_ppl_table(&mut ctx, &models, &methods, "table3_w4a4")?;
+    t3.print();
+
+    if !cli.flag("skip-zeroshot") {
+        let zs_methods: Vec<String> =
+            ["fp16", "omniquant", "affinequant"].map(String::from).to_vec();
+        let t2 = zeroshot_table(&mut ctx, &models, &zs_methods, "w4a4", "table2_zeroshot")?;
+        t2.print();
+    }
+    Ok(())
+}

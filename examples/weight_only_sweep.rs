@@ -1,0 +1,38 @@
+//! Full weight-only sweep — regenerates the paper's Tables 1/8/9 (OPT on
+//! WikiText2/PTB/C4) and Tables 10/11 (LLaMA) in one pass: each quantized
+//! model is evaluated on all three corpora.
+//!
+//!     cargo run --release --example weight_only_sweep -- \
+//!         [--models opt-s1,opt-s2,opt-s3] \
+//!         [--configs w2a16g64,w3a16,w3a16g128,w4a16,w4a16g128] \
+//!         [--methods rtn,gptq,awq,omniquant,affinequant]
+
+use anyhow::Result;
+
+use affinequant::cli::Cli;
+use affinequant::harness::{weight_only_tables, Ctx};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(&[vec!["sweep".to_string()], args].concat())?;
+    let models: Vec<String> = cli
+        .str_or("models", "opt-s1,opt-s2,ll-s1")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let configs: Vec<String> = cli
+        .str_or("configs", "w2a16g64,w2a16g128,w3a16,w3a16g128,w4a16,w4a16g128")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let methods: Vec<String> = cli
+        .str_or("methods", "rtn,gptq,awq,omniquant,affinequant")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+
+    let mut ctx = Ctx::load()?;
+    let t = weight_only_tables(&mut ctx, &models, &configs, &methods, "weight_only_sweep")?;
+    t.print();
+    Ok(())
+}

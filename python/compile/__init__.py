@@ -1,0 +1,5 @@
+"""AffineQuant compile path: L1 pallas kernels + L2 jax graphs -> AOT HLO.
+
+This package runs only at build time (`make artifacts`). The rust coordinator
+loads the emitted HLO text through PJRT and never imports python at run time.
+"""

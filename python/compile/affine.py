@@ -1,0 +1,231 @@
+"""AffineQuant calibration graph (the paper's Eq. 4 objective).
+
+Per transformer block we optimize, by gradient descent on the MSE between
+the FP block output and the quantized block output:
+
+  * weight-only mode (``w``): full affine matrices A_qkv (d,d) and
+    A_fc1 (d,d), a per-head block-diagonal A_out (h, hd, hd), and LWC
+    clipping logits for every quantized weight;
+  * weight-activation mode (``a4``): diagonal affine + learnable shift at the
+    LayerNorm sites (so they fold into LN gamma/beta — zero inference
+    overhead, paper §3.3), the same per-head A_out, LWC, and per-token
+    dynamic activation fake-quant at the four linear inputs.
+
+All learnables live in one flat vector ``phi``; the Gradual Mask ``mphi``
+(same layout, entries in {0, alpha, 1}) is element-wise multiplied in-graph,
+so the returned grad d(loss)/d(phi) automatically carries the GM learning-
+rate damping of paper Eq. 9. The rust coordinator owns the mask schedule,
+Adam, and the SDD stability monitor.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import quantize
+from .blocks import attention, layer_norm, rms_norm
+from .flat import Layout
+from .kernels.affine_mm import affine_mm
+from .linalg import inv_sdd, inv_sdd_blocks
+
+
+def phi_layout(cfg, mode, group):
+    """Layout of the flat learnable vector for one block."""
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    named = []
+    if mode == "w":
+        named.append(("A_qkv", (d, d)))
+        named.append(("A_out", (h, hd, hd)))
+        named.append(("A_fc1", (d, d)))
+    else:  # a4
+        named.append(("a_qkv", (d,)))
+        named.append(("A_out", (h, hd, hd)))
+        named.append(("a_fc1", (d,)))
+        if cfg.family == "opt":  # shifts fold into biases; ll has none
+            named.append(("delta_qkv", (d,)))
+            named.append(("delta_fc1", (d,)))
+    named.extend(quantize.lwc_shapes(cfg, group))
+    return Layout(named)
+
+
+def _fq(w, p, name, qmax, group):
+    return quantize.fake_quant_weight(
+        w, p[f"lwc_g_{name}"], p[f"lwc_b_{name}"], qmax, group)
+
+
+def _out_site(cfg, p, ctx, wo, qmax_w, group, act_q):
+    """Per-head block-diagonal affine at out_proj (shared by both modes)."""
+    B, S, d = ctx.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    ao = p["A_out"]
+    inv_ao = inv_sdd_blocks(ao)
+    ctx_h = ctx.reshape(B, S, h, hd)
+    ctx_t = jnp.einsum("bshj,hji->bshi", ctx_h, inv_ao).reshape(B, S, d)
+    if act_q is not None:
+        ctx_t = act_q(ctx_t)
+    wo_h = wo.reshape(h, hd, d)
+    wo_t = jnp.einsum("hij,hjd->hid", ao, wo_h).reshape(d, d)
+    wo_q = _fq(wo_t, p, "wo", qmax_w, group)
+    return ctx_t, wo_q
+
+
+def transformed_fwd_w(cfg, w, p, x, qmax_w, group):
+    """Weight-only transformed+quantized block forward (no act quant)."""
+    a_qkv = p["A_qkv"]
+    inv_a = inv_sdd(a_qkv)
+    a_fc1 = p["A_fc1"]
+    inv_f = inv_sdd(a_fc1)
+    opt = cfg.family == "opt"
+
+    xn = layer_norm(x, w["ln1_g"], w["ln1_b"]) if opt else rms_norm(x, w["rms1_g"])
+    xt = xn @ inv_a
+    names = ("wq", "wk", "wv")
+    proj = [_fq(affine_mm(a_qkv, w[n]), p, n, qmax_w, group) for n in names]
+    if opt:
+        q = xt @ proj[0] + w["bq"]
+        k = xt @ proj[1] + w["bk"]
+        v = xt @ proj[2] + w["bv"]
+    else:
+        q, k, v = (xt @ pj for pj in proj)
+    ctx = attention(cfg, q, k, v)
+    ctx_t, wo_q = _out_site(cfg, p, ctx, w["wo"], qmax_w, group, act_q=None)
+    x = x + ctx_t @ wo_q + (w["bo"] if opt else 0.0)
+
+    xn2 = layer_norm(x, w["ln2_g"], w["ln2_b"]) if opt else rms_norm(x, w["rms2_g"])
+    xt2 = xn2 @ inv_f
+    if opt:
+        w1_q = _fq(affine_mm(a_fc1, w["w1"]), p, "w1", qmax_w, group)
+        w2_q = _fq(w["w2"], p, "w2", qmax_w, group)  # fc2: no affine (paper §4.1)
+        hmid = jax.nn.gelu(xt2 @ w1_q + w["b1"])
+        y = x + hmid @ w2_q + w["b2"]
+    else:
+        wg_q = _fq(affine_mm(a_fc1, w["wg"]), p, "wg", qmax_w, group)
+        wu_q = _fq(affine_mm(a_fc1, w["wu"]), p, "wu", qmax_w, group)
+        wd_q = _fq(w["wd"], p, "wd", qmax_w, group)
+        hmid = jax.nn.silu(xt2 @ wg_q) * (xt2 @ wu_q)
+        y = x + hmid @ wd_q
+    return y
+
+
+def transformed_fwd_a4(cfg, w, p, x, qmax_w, qmax_a, group):
+    """Weight-activation transformed block: diagonal+shift at LN sites,
+    per-head affine at out_proj, per-token activation fake-quant."""
+    opt = cfg.family == "opt"
+    act_q = lambda t: quantize.fake_quant_act(t, qmax_a)
+
+    def diag_site(xn, wnames, a, delta, biases):
+        """Transformed projections sharing one LN input."""
+        xt = (xn - delta) / a
+        xt_q = act_q(xt)
+        outs = []
+        for wn, b in zip(wnames, biases):
+            wt_q = _fq(w[wn] * a[:, None], p, wn, qmax_w, group)
+            weff = wt_q / a[:, None]
+            bias = (b + delta @ weff) if b is not None else delta @ weff
+            outs.append(xt_q @ wt_q + bias)
+        return outs
+
+    a1 = p["a_qkv"]
+    d1 = p["delta_qkv"] if opt else jnp.zeros_like(a1)
+    xn = layer_norm(x, w["ln1_g"], w["ln1_b"]) if opt else rms_norm(x, w["rms1_g"])
+    biases = (w["bq"], w["bk"], w["bv"]) if opt else (None, None, None)
+    q, k, v = diag_site(xn, ("wq", "wk", "wv"), a1, d1, biases)
+    ctx = attention(cfg, q, k, v)
+    ctx_t, wo_q = _out_site(cfg, p, ctx, w["wo"], qmax_w, group, act_q=act_q)
+    x = x + ctx_t @ wo_q + (w["bo"] if opt else 0.0)
+
+    a2 = p["a_fc1"]
+    d2 = p["delta_fc1"] if opt else jnp.zeros_like(a2)
+    xn2 = layer_norm(x, w["ln2_g"], w["ln2_b"]) if opt else rms_norm(x, w["rms2_g"])
+    if opt:
+        (pre1,) = diag_site(xn2, ("w1",), a2, d2, (w["b1"],))
+        hmid = jax.nn.gelu(pre1)
+        w2_q = _fq(w["w2"], p, "w2", qmax_w, group)
+        y = x + act_q(hmid) @ w2_q + w["b2"]
+    else:
+        pre_g, pre_u = diag_site(xn2, ("wg", "wu"), a2, d2, (None, None))
+        hmid = jax.nn.silu(pre_g) * pre_u
+        wd_q = _fq(w["wd"], p, "wd", qmax_w, group)
+        y = x + act_q(hmid) @ wd_q
+    return y
+
+
+def flex_phi_layout(cfg, group):
+    """Per-element log-scales for every quantized weight (FlexRound)."""
+    wshapes = dict(cfg.block_weight_names())
+    named = [(f"ls_{n}", wshapes[n]) for n in cfg.quantized_weight_names()]
+    return Layout(named)
+
+
+def flex_quant(w, ls, qmax, group):
+    """FlexRound-style quantization: learnable element-wise division.
+
+    The base per-group scale/zero-point come from min/max statistics
+    (stop-gradient); the learnable ``exp(ls)`` divides each element before
+    rounding and multiplies back after — gradients flow to ``ls`` only, as
+    in the FlexRound formulation."""
+    din, dout = w.shape
+    wg, wmin, wmax = quantize.group_minmax(w, group)
+    scale = jax.lax.stop_gradient(jnp.maximum((wmax - wmin) / qmax, quantize.EPS))
+    zp = jax.lax.stop_gradient(jnp.round(-wmin / scale))
+    s2 = jnp.exp(ls).reshape(wg.shape)
+    q = jnp.clip(quantize.ste_round(wg / (scale * s2)) + zp, 0.0, qmax)
+    return ((q - zp) * scale * s2).reshape(din, dout)
+
+
+def make_flex_step(cfg, group, block_layout):
+    """FlexRound calibration step: fn(xq, yfp, wb, phi, qmax_w)->(loss,g)."""
+    playout = flex_phi_layout(cfg, group)
+    qnames = list(cfg.quantized_weight_names())
+
+    def quantized_block(wb, phi, xq, qmax_w):
+        p = playout.unflatten(phi)
+        w = dict(block_layout.unflatten(wb))
+        for n in qnames:
+            w[n] = flex_quant(w[n], p[f"ls_{n}"], qmax_w[0], group)
+        from .blocks import block_fwd
+        return block_fwd(cfg, w, xq)
+
+    def loss_fn(phi, wb, xq, yfp, qmax_w):
+        y = quantized_block(wb, phi, xq, qmax_w)
+        return jnp.mean((y - yfp) ** 2)
+
+    def step(xq, yfp, wb, phi, qmax_w):
+        loss, g = jax.value_and_grad(loss_fn)(phi, wb, xq, yfp, qmax_w)
+        return loss.reshape(1), g
+
+    def apply(wb, phi, qmax_w):
+        p = playout.unflatten(phi)
+        w = dict(block_layout.unflatten(wb))
+        for n in qnames:
+            w[n] = flex_quant(w[n], p[f"ls_{n}"], qmax_w[0], group)
+        return block_layout.flatten(w)
+
+    return step, apply, playout
+
+
+def make_calib_step(cfg, mode, group, block_layout):
+    """Returns fn(xq, yfp, wb, phi, mphi, qmax_w[, qmax_a]) -> (loss, gphi)."""
+    playout = phi_layout(cfg, mode, group)
+
+    def loss_fn(phi, mphi, wb, xq, yfp, qmax_w, qmax_a):
+        phi_star = phi * mphi  # Gradual Mask, Eq. 7
+        p = playout.unflatten(phi_star)
+        w = block_layout.unflatten(wb)
+        if mode == "w":
+            y = transformed_fwd_w(cfg, w, p, xq, qmax_w[0], group)
+        else:
+            y = transformed_fwd_a4(cfg, w, p, xq, qmax_w[0], qmax_a[0], group)
+        return jnp.mean((y - yfp) ** 2)
+
+    if mode == "w":
+        def step(xq, yfp, wb, phi, mphi, qmax_w):
+            loss, g = jax.value_and_grad(loss_fn)(
+                phi, mphi, wb, xq, yfp, qmax_w, qmax_w)
+            return loss.reshape(1), g
+    else:
+        def step(xq, yfp, wb, phi, mphi, qmax_w, qmax_a):
+            loss, g = jax.value_and_grad(loss_fn)(
+                phi, mphi, wb, xq, yfp, qmax_w, qmax_a)
+            return loss.reshape(1), g
+
+    return step, playout

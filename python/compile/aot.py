@@ -1,0 +1,189 @@
+"""AOT driver: lower every entry point to HLO text + write the manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the rust ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. Lowered with return_tuple=True; the
+rust side unwraps with ``Literal::to_tuple``.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--models a,b]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import affine, model, quantize
+from .configs import MODELS, GROUPS
+from .flat import Layout
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def spec_dict(name, s):
+    return {
+        "name": name,
+        "dtype": str(s.dtype),
+        "shape": list(s.shape),
+    }
+
+
+def lower_entry(fn, specs, names, out_dir, entry):
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    assert "custom-call" not in text, f"{entry}: HLO contains custom-calls"
+    path = os.path.join(out_dir, f"{entry}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *specs)
+    flat_outs, _ = jax.tree_util.tree_flatten(outs)
+    meta = {
+        # path relative to the artifacts root (manifest lives there)
+        "file": f"{os.path.basename(out_dir)}/{entry}.hlo.txt",
+        "inputs": [spec_dict(n, s) for n, s in zip(names, specs)],
+        "outputs": [spec_dict(f"out{i}", s) for i, s in enumerate(flat_outs)],
+    }
+    print(f"  {entry:>16}: {len(text)/1e3:8.1f} KB  {time.time()-t0:5.1f}s")
+    return meta
+
+
+def build_model(cfg, out_root):
+    out_dir = os.path.join(out_root, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+    B, S, d = cfg.batch, cfg.seq, cfg.d_model
+    Bt = cfg.train_batch
+
+    gl, bl, tl = model.theta_layouts(cfg)
+    entries = {}
+
+    # --- embedding / head / blocks -------------------------------------
+    entries["embed"] = lower_entry(
+        lambda tokens, g: model.embed(cfg, gl, tokens, g),
+        [i32(B, S), f32(gl.size)], ["tokens", "globals"], out_dir, "embed")
+
+    entries["head_nll"] = lower_entry(
+        lambda h, t, m, g: model.head_nll(cfg, gl, h, t, m, g),
+        [f32(B, S, d), i32(B, S), f32(B, S), f32(gl.size)],
+        ["hidden", "targets", "mask", "globals"], out_dir, "head_nll")
+
+    block_fp, block_a4, block_cap = model.make_block_entries(cfg, bl)
+    entries["block_fp"] = lower_entry(
+        block_fp, [f32(B, S, d), f32(bl.size)], ["x", "wb"], out_dir, "block_fp")
+    entries["block_a4"] = lower_entry(
+        block_a4, [f32(B, S, d), f32(bl.size), f32(1)],
+        ["x", "wb", "qmax_a"], out_dir, "block_a4")
+    entries["block_capture"] = lower_entry(
+        block_cap, [f32(B, S, d), f32(bl.size)], ["x", "wb"],
+        out_dir, "block_capture")
+
+    # --- calibration steps ----------------------------------------------
+    phi_meta = {}
+    for group in GROUPS:
+        step, playout = affine.make_calib_step(cfg, "w", group, bl)
+        key = f"w_g{group}"
+        phi_meta[key] = {"size": playout.size, "entries": playout.to_manifest()}
+        entries[f"calib_{key}"] = lower_entry(
+            step,
+            [f32(B, S, d), f32(B, S, d), f32(bl.size),
+             f32(playout.size), f32(playout.size), f32(1)],
+            ["xq", "yfp", "wb", "phi", "mphi", "qmax_w"],
+            out_dir, f"calib_{key}")
+
+    step, playout = affine.make_calib_step(cfg, "a4", 0, bl)
+    phi_meta["a4"] = {"size": playout.size, "entries": playout.to_manifest()}
+    entries["calib_a4"] = lower_entry(
+        step,
+        [f32(B, S, d), f32(B, S, d), f32(bl.size),
+         f32(playout.size), f32(playout.size), f32(1), f32(1)],
+        ["xq", "yfp", "wb", "phi", "mphi", "qmax_w", "qmax_a"],
+        out_dir, "calib_a4")
+
+    # --- FlexRound baseline (Table 7): per-element division rounding -----
+    fstep, fapply, fplayout = affine.make_flex_step(cfg, 0, bl)
+    phi_meta["flex_g0"] = {"size": fplayout.size, "entries": fplayout.to_manifest()}
+    entries["calib_flex_g0"] = lower_entry(
+        fstep,
+        [f32(B, S, d), f32(B, S, d), f32(bl.size), f32(fplayout.size), f32(1)],
+        ["xq", "yfp", "wb", "phi", "qmax_w"], out_dir, "calib_flex_g0")
+    entries["flex_apply_g0"] = lower_entry(
+        fapply, [f32(bl.size), f32(fplayout.size), f32(1)],
+        ["wb", "phi", "qmax_w"], out_dir, "flex_apply_g0")
+
+    # --- weight fake-quant through the pallas kernel --------------------
+    lwc_meta = {}
+    for group in GROUPS:
+        wfq, lwc_layout = model.make_wfq(cfg, bl, group)
+        lwc_meta[f"g{group}"] = {
+            "size": lwc_layout.size, "entries": lwc_layout.to_manifest()}
+        entries[f"wfq_g{group}"] = lower_entry(
+            wfq, [f32(bl.size), f32(lwc_layout.size), f32(1)],
+            ["wb", "lwc", "qmax_w"], out_dir, f"wfq_g{group}")
+
+    # --- training --------------------------------------------------------
+    train_step, _ = model.make_train_step(cfg)
+    entries["train_step"] = lower_entry(
+        train_step, [i32(Bt, S), i32(Bt, S), f32(tl.size)],
+        ["tokens", "targets", "theta"], out_dir, "train_step")
+
+    return {
+        "config": {
+            "name": cfg.name, "family": cfg.family, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff, "vocab": cfg.vocab, "seq": cfg.seq,
+            "batch": cfg.batch, "train_batch": cfg.train_batch,
+            "head_dim": cfg.head_dim, "params": cfg.param_count(),
+        },
+        "globals_layout": gl.to_manifest(),
+        "globals_size": gl.size,
+        "block_layout": bl.to_manifest(),
+        "block_size": bl.size,
+        "theta_size": tl.size,
+        "phi_layouts": phi_meta,
+        "lwc_layouts": lwc_meta,
+        "entries": entries,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(MODELS))
+    args = ap.parse_args()
+
+    manifest = {"version": 1, "models": {}}
+    t0 = time.time()
+    for name in args.models.split(","):
+        cfg = MODELS[name]
+        print(f"[{name}] d={cfg.d_model} h={cfg.n_heads} L={cfg.n_layers} "
+              f"ff={cfg.d_ff} params={cfg.param_count()/1e6:.2f}M")
+        manifest["models"][name] = build_model(cfg, args.out)
+
+    path = os.path.join(args.out, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest -> {path}  (total {time.time()-t0:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""Transformer block forwards for both model families.
+
+``block_fwd`` is the FP/eval path (optionally with per-token activation
+fake-quant at the four linear inputs — the w4a4 serving graph, using the
+pallas ``act_quant`` kernel). ``block_capture`` additionally returns the four
+linear inputs for host-side statistics (GPTQ Hessians, AWQ/SmoothQuant
+scales, shift init).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import quantize
+from .kernels import act_quant
+
+LN_EPS = 1e-5
+
+
+def layer_norm(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + LN_EPS) * g + b
+
+
+def rms_norm(x, g):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + LN_EPS) * g
+
+
+def rope(q, k):
+    """Rotary embeddings over (B, h, S, hd)."""
+    B, h, S, hd = q.shape
+    half = hd // 2
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    freq = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freq[None, :]                      # (S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+
+    def rot(x):
+        x1, x2 = x[..., :half], x[..., half:]
+        return jnp.concatenate(
+            [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+    return rot(q), rot(k)
+
+
+def attention(cfg, q, k, v):
+    """Causal multi-head attention; attention internals stay FP (DESIGN §4).
+
+    Returns the per-head context concatenated back to (B, S, d) — the input
+    of out_proj, i.e. the paper's per-head affine site.
+    """
+    B, S, d = q.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qh = q.reshape(B, S, h, hd).transpose(0, 2, 1, 3)
+    kh = k.reshape(B, S, h, hd).transpose(0, 2, 1, 3)
+    vh = v.reshape(B, S, h, hd).transpose(0, 2, 1, 3)
+    if cfg.family == "ll":
+        qh, kh = rope(qh, kh)
+    scores = qh @ kh.transpose(0, 1, 3, 2) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((S, S), dtype=bool))
+    scores = jnp.where(causal[None, None], scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = probs @ vh                                  # (B, h, S, hd)
+    return ctx.transpose(0, 2, 1, 3).reshape(B, S, d)
+
+
+def _aq(x, act_qmax, act_quant_fn):
+    if act_qmax is None:
+        return x
+    return act_quant_fn(x, act_qmax)
+
+
+def block_fwd(cfg, w, x, act_qmax=None, act_quant_fn=None, capture=False):
+    """One pre-LN transformer block.
+
+    w: dict of block weights (see configs.block_weight_names).
+    act_qmax: None for FP; an array for w?a4 per-token activation quant at
+    the four linear inputs (qkv / out_proj / fc1 / fc2).
+    act_quant_fn: which fake-quant implementation to use (pallas kernel on
+    the serving path, STE jnp twin inside calibration graphs).
+    """
+    if act_quant_fn is None:
+        act_quant_fn = act_quant
+    caps = {}
+    if cfg.family == "opt":
+        xn = layer_norm(x, w["ln1_g"], w["ln1_b"])
+        caps["x_qkv"] = xn
+        xq = _aq(xn, act_qmax, act_quant_fn)
+        q = xq @ w["wq"] + w["bq"]
+        k = xq @ w["wk"] + w["bk"]
+        v = xq @ w["wv"] + w["bv"]
+        ctx = attention(cfg, q, k, v)
+        caps["x_ctx"] = ctx
+        ctxq = _aq(ctx, act_qmax, act_quant_fn)
+        x = x + ctxq @ w["wo"] + w["bo"]
+        xn = layer_norm(x, w["ln2_g"], w["ln2_b"])
+        caps["x_fc1"] = xn
+        xq = _aq(xn, act_qmax, act_quant_fn)
+        hmid = jax.nn.gelu(xq @ w["w1"] + w["b1"])
+        caps["x_fc2"] = hmid
+        hq = _aq(hmid, act_qmax, act_quant_fn)
+        y = x + hq @ w["w2"] + w["b2"]
+    else:
+        xn = rms_norm(x, w["rms1_g"])
+        caps["x_qkv"] = xn
+        xq = _aq(xn, act_qmax, act_quant_fn)
+        q = xq @ w["wq"]
+        k = xq @ w["wk"]
+        v = xq @ w["wv"]
+        ctx = attention(cfg, q, k, v)
+        caps["x_ctx"] = ctx
+        ctxq = _aq(ctx, act_qmax, act_quant_fn)
+        x = x + ctxq @ w["wo"]
+        xn = rms_norm(x, w["rms2_g"])
+        caps["x_fc1"] = xn
+        xq = _aq(xn, act_qmax, act_quant_fn)
+        hmid = jax.nn.silu(xq @ w["wg"]) * (xq @ w["wu"])
+        caps["x_fc2"] = hmid
+        hq = _aq(hmid, act_qmax, act_quant_fn)
+        y = x + hq @ w["wd"]
+    if capture:
+        return y, caps
+    return y
+
+
+def block_capture(cfg, w, x):
+    """FP forward returning (y, x_qkv, x_ctx, x_fc1, x_fc2)."""
+    y, caps = block_fwd(cfg, w, x, capture=True)
+    return y, caps["x_qkv"], caps["x_ctx"], caps["x_fc1"], caps["x_fc2"]

@@ -1,0 +1,107 @@
+"""Model/shape registry shared by the jax graphs and the AOT manifest.
+
+Two families mirror the paper's model zoo:
+  * ``opt`` — LayerNorm + GELU MLP + learned positional embeddings + biases
+    (OPT-style; the paper's Tables 1/8/9 models).
+  * ``ll``  — RMSNorm + SiLU-gated MLP + RoPE, no biases (LLaMA-style; the
+    paper's Tables 3/10/11 models).
+
+All hidden/ff dims are multiples of 128 so every paper group size
+(g64/g128/per-channel) divides evenly. head_dim is 32 everywhere; the
+per-head affine matrices A_out are 32x32 blocks.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str          # "opt" | "ll"
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    vocab: int = 256     # byte-level
+    seq: int = 128
+    # batch sizes baked into the artifacts
+    batch: int = 8       # eval + calibration batch
+    train_batch: int = 16
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def block_weight_names(self):
+        """Ordered (name, shape) list for one transformer block."""
+        d, ff = self.d_model, self.d_ff
+        if self.family == "opt":
+            return [
+                ("ln1_g", (d,)), ("ln1_b", (d,)),
+                ("wq", (d, d)), ("bq", (d,)),
+                ("wk", (d, d)), ("bk", (d,)),
+                ("wv", (d, d)), ("bv", (d,)),
+                ("wo", (d, d)), ("bo", (d,)),
+                ("ln2_g", (d,)), ("ln2_b", (d,)),
+                ("w1", (d, ff)), ("b1", (ff,)),
+                ("w2", (ff, d)), ("b2", (d,)),
+            ]
+        else:
+            return [
+                ("rms1_g", (d,)),
+                ("wq", (d, d)), ("wk", (d, d)), ("wv", (d, d)), ("wo", (d, d)),
+                ("rms2_g", (d,)),
+                ("wg", (d, ff)), ("wu", (d, ff)),
+                ("wd", (ff, d)),
+            ]
+
+    def global_weight_names(self):
+        """Ordered (name, shape) list for embeddings + final norm.
+
+        The LM head is tied to ``tok_emb`` (as in OPT)."""
+        d, v, s = self.d_model, self.vocab, self.seq
+        if self.family == "opt":
+            return [
+                ("tok_emb", (v, d)), ("pos_emb", (s, d)),
+                ("lnf_g", (d,)), ("lnf_b", (d,)),
+            ]
+        return [("tok_emb", (v, d)), ("rmsf_g", (d,))]
+
+    def quantized_weight_names(self):
+        """Weight matrices that get quantized (paper: all linear layers)."""
+        if self.family == "opt":
+            return ["wq", "wk", "wv", "wo", "w1", "w2"]
+        return ["wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+
+    def affine_site_weights(self):
+        """site -> weights sharing that transform's input."""
+        if self.family == "opt":
+            return {"qkv": ["wq", "wk", "wv"], "out": ["wo"], "fc1": ["w1"]}
+        return {"qkv": ["wq", "wk", "wv"], "out": ["wo"], "fc1": ["wg", "wu"]}
+
+    def param_count(self) -> int:
+        n = sum(_numel(s) for _, s in self.global_weight_names())
+        n += self.n_layers * sum(_numel(s) for _, s in self.block_weight_names())
+        return n
+
+
+def _numel(shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+# Size ladder mirroring the paper's OPT-125M..30B / LLaMA-7B..30B ladders at
+# CPU-trainable scale. All dims divisible by 128.
+MODELS = {
+    "opt-s1": ModelConfig("opt-s1", "opt", d_model=128, n_heads=4, n_layers=2, d_ff=512),
+    "opt-s2": ModelConfig("opt-s2", "opt", d_model=256, n_heads=8, n_layers=3, d_ff=1024),
+    "opt-s3": ModelConfig("opt-s3", "opt", d_model=384, n_heads=12, n_layers=4, d_ff=1536),
+    "ll-s1": ModelConfig("ll-s1", "ll", d_model=128, n_heads=4, n_layers=2, d_ff=384),
+    "ll-s2": ModelConfig("ll-s2", "ll", d_model=256, n_heads=8, n_layers=3, d_ff=768),
+}
+
+# Weight-quantization group sizes baked per calib/fakequant artifact.
+# 0 means per-output-channel (one group spanning the whole input dim).
+GROUPS = (0, 64, 128)

@@ -1,0 +1,51 @@
+"""Flat-vector parameter packing.
+
+Every AOT entry point takes parameters as a single f32 vector: PJRT call
+overhead is per-buffer, and a flat layout gives the rust side a trivial
+Adam/optimizer implementation and a trivial checkpoint format. The layout
+(name, shape, offset) is recorded in the manifest so rust can view/patch
+individual tensors in place.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def numel(shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+class Layout:
+    """Ordered mapping name -> (shape, offset) over one flat f32 vector."""
+
+    def __init__(self, named_shapes):
+        self.entries = []  # (name, shape, offset)
+        off = 0
+        for name, shape in named_shapes:
+            self.entries.append((name, tuple(shape), off))
+            off += numel(shape)
+        self.size = off
+        self.index = {name: (shape, off) for name, shape, off in self.entries}
+
+    def slice(self, theta, name):
+        shape, off = self.index[name]
+        return theta[off:off + numel(shape)].reshape(shape)
+
+    def unflatten(self, theta):
+        return {name: self.slice(theta, name) for name, _, _ in self.entries}
+
+    def flatten(self, d):
+        parts = [jnp.ravel(d[name]) for name, _, _ in self.entries]
+        return jnp.concatenate(parts)
+
+    def flatten_np(self, d):
+        parts = [np.ravel(np.asarray(d[name], dtype=np.float32))
+                 for name, _, _ in self.entries]
+        return np.concatenate(parts)
+
+    def to_manifest(self):
+        return [{"name": n, "shape": list(s), "offset": o}
+                for n, s, o in self.entries]

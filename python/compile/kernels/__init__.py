@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (interpret=True on CPU PJRT; see DESIGN.md §8).
+
+Kernels are the eval/serving hot path; the autodiff twin lives in
+``compile.quantize``. ``ref.py`` holds the pure-jnp oracles used by pytest.
+"""
+
+from .fake_quant import group_fq, act_quant  # noqa: F401
+from .affine_mm import affine_mm  # noqa: F401

@@ -1,0 +1,95 @@
+"""Pallas fake-quantization kernels.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's CUDA fake-quant
+kernels assign one threadblock per weight-group; here one pallas grid cell
+covers a ``(group, 128)`` VMEM tile so the min/max reduction stays in-tile
+(VPU work, no MXU). ``interpret=True`` everywhere — the CPU PJRT client
+cannot run Mosaic custom-calls.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-8
+LANE = 128  # output-channel tile width (TPU lane count)
+
+
+def _group_fq_kernel(w_ref, g_ref, b_ref, qmax_ref, o_ref):
+    w = w_ref[...]                       # (g, LANE)
+    gamma = jax.nn.sigmoid(g_ref[...])   # (1, LANE)
+    beta = jax.nn.sigmoid(b_ref[...])
+    qmax = qmax_ref[0]
+    wmin = jnp.min(w, axis=0, keepdims=True)
+    wmax = jnp.max(w, axis=0, keepdims=True)
+    cmax = gamma * wmax
+    cmin = beta * wmin
+    scale = jnp.maximum((cmax - cmin) / qmax, EPS)
+    zp = jnp.round(-cmin / scale)
+    q = jnp.clip(jnp.round(w / scale) + zp, 0.0, qmax)
+    o_ref[...] = (q - zp) * scale
+
+
+def group_fq(w, gamma, beta, qmax, group):
+    """Per-group LWC fake quantization of w: (in, out).
+
+    gamma/beta: (n_groups, out) clipping logits; qmax: (1,) f32 (2^bits - 1);
+    group == 0 -> per-output-channel. Output matches
+    ``quantize.fake_quant_weight`` bit-for-bit (same op order).
+    """
+    din, dout = w.shape
+    g = din if group == 0 else group
+    n_groups = din // g
+    assert dout % LANE == 0, (din, dout)
+    return pl.pallas_call(
+        _group_fq_kernel,
+        grid=(n_groups, dout // LANE),
+        in_specs=[
+            pl.BlockSpec((g, LANE), lambda i, j: (i, j)),
+            pl.BlockSpec((1, LANE), lambda i, j: (i, j)),
+            pl.BlockSpec((1, LANE), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((g, LANE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((din, dout), w.dtype),
+        interpret=True,
+    )(w, gamma, beta, qmax)
+
+
+def _act_quant_kernel(x_ref, qmax_ref, o_ref):
+    x = x_ref[...]                       # (ROWS, d) — one token per row
+    qmax = qmax_ref[0]
+    xmin = jnp.minimum(jnp.min(x, axis=-1, keepdims=True), 0.0)
+    xmax = jnp.maximum(jnp.max(x, axis=-1, keepdims=True), 0.0)
+    scale = jnp.maximum((xmax - xmin) / qmax, EPS)
+    zp = jnp.round(-xmin / scale)
+    q = jnp.clip(jnp.round(x / scale) + zp, 0.0, qmax)
+    o_ref[...] = (q - zp) * scale
+
+
+ROWS = 8  # token rows per grid cell
+
+
+def act_quant(x, qmax):
+    """Per-token dynamic asymmetric fake quantization.
+
+    x: (..., d); rows (tokens) map to grid cells, the feature reduction is a
+    lane reduction within the tile. Matches ``quantize.fake_quant_act``.
+    """
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    n = x2.shape[0]
+    assert n % ROWS == 0, shape
+    out = pl.pallas_call(
+        _act_quant_kernel,
+        grid=(n // ROWS,),
+        in_specs=[
+            pl.BlockSpec((ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x2, qmax)
+    return out.reshape(shape)

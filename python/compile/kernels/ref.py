@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the pallas kernels (pytest ties kernel == oracle).
+
+The oracles are the (differentiable) implementations in ``compile.quantize``
+— the kernels must match them bit-for-bit on the forward path, which is also
+what guarantees the calibration graph (quantize.py) and the serving graph
+(kernels) quantize identically.
+"""
+
+import jax.numpy as jnp
+
+from .. import quantize
+
+
+def ref_group_fq(w, gamma, beta, qmax, group):
+    return quantize.fake_quant_weight(w, gamma, beta, jnp.asarray(qmax)[0], group)
+
+
+def ref_act_quant(x, qmax):
+    return quantize.fake_quant_act(x, jnp.asarray(qmax)[0])
+
+
+def ref_mm(a, b):
+    return a @ b

@@ -1,0 +1,57 @@
+"""Pure-HLO differentiable matrix inverse for SDD matrices.
+
+``jnp.linalg.inv`` lowers to LAPACK custom-calls on CPU, which the rust PJRT
+loader (xla_extension 0.5.1) cannot execute. AffineQuant's Gradual Mask keeps
+the affine matrix strictly diagonally dominant (Levy-Desplanques), so
+Gauss-Jordan elimination *without pivoting* is numerically stable here and
+lowers to a plain `while` HLO loop.
+
+The backward pass uses the analytic identity d(A^{-1}) = -A^{-1} dA A^{-1}
+via jax.custom_vjp, so reverse-mode never differentiates through the loop.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _gj_inverse(a):
+    """Gauss-Jordan inverse, no pivoting. a: (n, n)."""
+    n = a.shape[-1]
+    aug = jnp.concatenate([a, jnp.eye(n, dtype=a.dtype)], axis=-1)
+
+    def body(i, aug):
+        pivot = aug[i, :] / aug[i, i]
+        aug = aug - jnp.outer(aug[:, i], pivot)
+        aug = aug.at[i, :].set(pivot)
+        return aug
+
+    aug = lax.fori_loop(0, n, body, aug)
+    return aug[:, n:]
+
+
+@jax.custom_vjp
+def inv_sdd(a):
+    """Inverse of a strictly diagonally dominant matrix. Differentiable."""
+    return _gj_inverse(a)
+
+
+def _inv_fwd(a):
+    b = _gj_inverse(a)
+    return b, b
+
+
+def _inv_bwd(b, g):
+    return (-(b.T @ g @ b.T),)
+
+
+inv_sdd.defvjp(_inv_fwd, _inv_bwd)
+
+
+def inv_sdd_blocks(a):
+    """Inverse of a stack of SDD blocks. a: (h, n, n) -> (h, n, n).
+
+    Used for the per-head block-diagonal affine matrix at the out_proj site.
+    vmap composes with the custom_vjp batching rule.
+    """
+    return jax.vmap(inv_sdd)(a)

@@ -1,0 +1,111 @@
+"""Full-model graphs: embedding, LM head NLL, training step, weight fake-quant.
+
+Parameter layouts (flat f32 vectors; see flat.py):
+  * ``theta``   — globals then blocks, contiguous: [globals, b0, b1, ...]
+  * ``globals`` — tok_emb (+pos_emb), final norm; the LM head ties tok_emb
+  * ``wb``      — one block's weights
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import block_fwd, block_capture, layer_norm, rms_norm
+from .flat import Layout
+from .kernels import group_fq
+from . import quantize
+
+
+def theta_layouts(cfg):
+    """(globals_layout, block_layout, theta_layout)."""
+    gl = Layout(cfg.global_weight_names())
+    bl = Layout(cfg.block_weight_names())
+    named = list(cfg.global_weight_names())
+    for i in range(cfg.n_layers):
+        named.extend((f"b{i}.{n}", s) for n, s in cfg.block_weight_names())
+    return gl, bl, Layout(named)
+
+
+def embed(cfg, gl, tokens, gtheta):
+    """tokens (B, S) i32 -> hidden (B, S, d)."""
+    p = gl.unflatten(gtheta)
+    h = p["tok_emb"][tokens]
+    if cfg.family == "opt":
+        h = h + p["pos_emb"][None, :, :]
+    return h
+
+
+def head_nll(cfg, gl, hidden, targets, mask, gtheta):
+    """Per-sequence masked NLL (natural log), shape (B,).
+
+    PPL = exp(sum(nll) / sum(mask)) computed host-side; zero-shot scoring
+    masks only the continuation tokens.
+    """
+    p = gl.unflatten(gtheta)
+    if cfg.family == "opt":
+        hf = layer_norm(hidden, p["lnf_g"], p["lnf_b"])
+    else:
+        hf = rms_norm(hidden, p["rmsf_g"])
+    logits = hf @ p["tok_emb"].T
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask, axis=-1)
+
+
+def make_train_step(cfg):
+    """fn(tokens (Bt,S) i32, targets (Bt,S) i32, theta) -> (loss(1,), grad)."""
+    gl, bl, tl = theta_layouts(cfg)
+
+    def loss_fn(theta, tokens, targets):
+        g = theta[:gl.size]
+        h = embed(cfg, gl, tokens, g)
+        off = gl.size
+        for _ in range(cfg.n_layers):
+            wb = bl.unflatten(theta[off:off + bl.size])
+            h = block_fwd(cfg, wb, h)
+            off += bl.size
+        nll = head_nll(cfg, gl, h, targets, jnp.ones_like(targets, jnp.float32), g)
+        return jnp.sum(nll) / (tokens.shape[0] * tokens.shape[1])
+
+    def step(tokens, targets, theta):
+        loss, grad = jax.value_and_grad(loss_fn)(theta, tokens, targets)
+        return loss.reshape(1), grad
+
+    return step, (gl, bl, tl)
+
+
+def make_block_entries(cfg, bl):
+    """block_fp / block_a4 / block_capture over a flat block vector."""
+
+    def block_fp(x, wb):
+        return block_fwd(cfg, bl.unflatten(wb), x)
+
+    def block_a4(x, wb, qmax_a):
+        # serving path: pallas act_quant kernel at the four linear inputs
+        return block_fwd(cfg, bl.unflatten(wb), x, act_qmax=qmax_a)
+
+    def block_cap(x, wb):
+        return block_capture(cfg, bl.unflatten(wb), x)
+
+    return block_fp, block_a4, block_cap
+
+
+def make_wfq(cfg, bl, group):
+    """Fake-quantize the weight matrices inside a flat block vector through
+    the pallas group_fq kernel (norm/bias entries pass through)."""
+    lwc_layout = Layout(quantize.lwc_shapes(cfg, group))
+    qnames = set(cfg.quantized_weight_names())
+
+    def wfq(wb, lwc, qmax_w):
+        w = bl.unflatten(wb)
+        lw = lwc_layout.unflatten(lwc)
+        out = {}
+        for name, _, _ in bl.entries:
+            if name in qnames:
+                out[name] = group_fq(
+                    w[name], lw[f"lwc_g_{name}"], lw[f"lwc_b_{name}"],
+                    qmax_w, group)
+            else:
+                out[name] = w[name]
+        return bl.flatten(out)
+
+    return wfq, lwc_layout

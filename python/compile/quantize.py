@@ -1,0 +1,83 @@
+"""Differentiable (STE) fake-quantization used inside calibration graphs.
+
+Matches the paper's pseudo-quantization (Eq. 1):
+    Q(x) = s * (clamp(round(x/s) + zp, 0, 2^n - 1) - zp)
+with per-group asymmetric weight quantization + OmniQuant-style learnable
+weight clipping (LWC), and per-token dynamic asymmetric activation
+quantization. ``qmax = 2^n - 1`` is a runtime input so one artifact serves
+all bit-widths.
+
+The eval/serving path uses the pallas kernels in ``kernels/``; this module is
+the autodiff-friendly twin, and ``kernels/ref.py`` ties them together in
+tests.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+EPS = 1e-8
+
+
+def ste_round(x):
+    """round() with a straight-through gradient."""
+    return x + lax.stop_gradient(jnp.round(x) - x)
+
+
+def group_minmax(w, group):
+    """Per-group min/max over the input dim of w: (in, out).
+
+    group == 0 means per-output-channel (one group = whole input dim).
+    Returns (wmin, wmax) with shape (n_groups, 1, out) and the grouped view
+    (n_groups, g, out).
+    """
+    din, dout = w.shape
+    g = din if group == 0 else group
+    wg = w.reshape(din // g, g, dout)
+    return wg, jnp.min(wg, axis=1, keepdims=True), jnp.max(wg, axis=1, keepdims=True)
+
+
+def fake_quant_weight(w, gamma, beta, qmax, group):
+    """LWC fake quantization of a weight matrix.
+
+    w: (in, out); gamma/beta: (n_groups, out) learnable clipping logits;
+    qmax: scalar (2^bits - 1). Gradients flow to w via STE and to gamma/beta
+    through the scale/zero-point computation.
+    """
+    din, dout = w.shape
+    wg, wmin, wmax = group_minmax(w, group)
+    cmax = jax.nn.sigmoid(gamma)[:, None, :] * wmax
+    cmin = jax.nn.sigmoid(beta)[:, None, :] * wmin
+    scale = jnp.maximum((cmax - cmin) / qmax, EPS)
+    zp = ste_round(-cmin / scale)
+    q = jnp.clip(ste_round(wg / scale) + zp, 0.0, qmax)
+    wdq = (q - zp) * scale
+    return wdq.reshape(din, dout)
+
+
+def fake_quant_act(x, qmax):
+    """Per-token dynamic asymmetric activation fake quantization.
+
+    x: (..., features); one scale/zp per leading position ("token").
+    """
+    xmin = jnp.min(x, axis=-1, keepdims=True)
+    xmax = jnp.max(x, axis=-1, keepdims=True)
+    # include zero so the quantizer can represent exact zeros (padding etc.)
+    xmin = jnp.minimum(xmin, 0.0)
+    xmax = jnp.maximum(xmax, 0.0)
+    scale = jnp.maximum((xmax - xmin) / qmax, EPS)
+    zp = ste_round(-xmin / scale)
+    q = jnp.clip(ste_round(x / scale) + zp, 0.0, qmax)
+    return (q - zp) * scale
+
+
+def lwc_shapes(cfg, group):
+    """(name, shape) for the LWC gamma/beta of each quantized weight."""
+    shapes = []
+    wshapes = dict(cfg.block_weight_names())
+    for wname in cfg.quantized_weight_names():
+        din, dout = wshapes[wname]
+        g = din if group == 0 else group
+        shapes.append((f"lwc_g_{wname}", (din // g, dout)))
+        shapes.append((f"lwc_b_{wname}", (din // g, dout)))
+    return shapes

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run from python/ ("cd python && python -m pytest tests/"); make the
+# compile package importable also when pytest is invoked from the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

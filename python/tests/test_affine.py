@@ -1,0 +1,140 @@
+"""Calibration graph: equivalence, mask semantics, optimization progress."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import affine
+from compile.blocks import block_fwd
+from compile.configs import MODELS
+from compile.model import theta_layouts
+from tests.test_blocks import init_block
+
+HUGE_QMAX = float(2**24 - 1)
+
+
+def identity_phi(cfg, mode, group):
+    """phi with A = I / a = 1, shifts 0, LWC wide-open."""
+    layout = affine.phi_layout(cfg, mode, group)
+    phi = {}
+    for name, shape, _ in layout.entries:
+        if name == "A_out":
+            phi[name] = jnp.broadcast_to(jnp.eye(shape[-1]), shape)
+        elif name in ("A_qkv", "A_fc1"):
+            phi[name] = jnp.eye(shape[0])
+        elif name in ("a_qkv", "a_fc1"):
+            phi[name] = jnp.ones(shape)
+        elif name.startswith("delta"):
+            phi[name] = jnp.zeros(shape)
+        elif name.startswith("lwc"):
+            phi[name] = jnp.full(shape, 20.0)
+        else:
+            raise KeyError(name)
+    return layout, layout.flatten(phi)
+
+
+@pytest.mark.parametrize("name", ["opt-s1", "ll-s1"])
+@pytest.mark.parametrize("mode,group", [("w", 0), ("w", 64), ("a4", 0)])
+def test_identity_transform_is_equivalent(name, mode, group):
+    """With A = I and quantization effectively off, the transformed block
+    must reproduce the FP block (the paper's equivalence property)."""
+    cfg = MODELS[name]
+    w = init_block(cfg)
+    x = jnp.asarray(np.random.RandomState(0)
+                    .randn(2, cfg.seq, cfg.d_model).astype(np.float32))
+    y_fp = block_fwd(cfg, w, x)
+    layout, phi = identity_phi(cfg, mode, group)
+    p = layout.unflatten(phi)
+    if mode == "w":
+        y_t = affine.transformed_fwd_w(cfg, w, p, x, HUGE_QMAX, group)
+    else:
+        y_t = affine.transformed_fwd_a4(cfg, w, p, x, HUGE_QMAX, HUGE_QMAX, group)
+    assert_allclose(np.asarray(y_t), np.asarray(y_fp), rtol=1e-3, atol=5e-4)
+
+
+@pytest.mark.parametrize("name", ["opt-s1"])
+def test_sdd_transform_is_equivalent_unquantized(name):
+    """Any SDD A is output-invariant when quantization is off (Eq. 2)."""
+    cfg = MODELS[name]
+    w = init_block(cfg)
+    x = jnp.asarray(np.random.RandomState(1)
+                    .randn(2, cfg.seq, cfg.d_model).astype(np.float32))
+    layout, phi = identity_phi(cfg, "w", 0)
+    rng = np.random.RandomState(2)
+    phi_d = layout.unflatten(phi)
+    noise = rng.randn(cfg.d_model, cfg.d_model).astype(np.float32)
+    phi_d = dict(phi_d)
+    phi_d["A_qkv"] = phi_d["A_qkv"] + 0.002 * jnp.asarray(noise)
+    y_fp = block_fwd(cfg, w, x)
+    y_t = affine.transformed_fwd_w(cfg, w, phi_d, x, HUGE_QMAX, 0)
+    assert_allclose(np.asarray(y_t), np.asarray(y_fp), rtol=1e-2, atol=2e-3)
+
+
+def test_mask_zeroes_gradients_outside_band():
+    cfg = MODELS["opt-s1"]
+    w = init_block(cfg)
+    bl = theta_layouts(cfg)[1]
+    wb = bl.flatten(w)
+    step, layout = affine.make_calib_step(cfg, "w", 0, bl)
+    _, phi = identity_phi(cfg, "w", 0)
+
+    # mask: diagonal-only for the A matrices, ones for LWC
+    m = {}
+    for name, shape, _ in layout.entries:
+        if name == "A_out":
+            m[name] = jnp.broadcast_to(jnp.eye(shape[-1]), shape)
+        elif name in ("A_qkv", "A_fc1"):
+            m[name] = jnp.eye(shape[0])
+        else:
+            m[name] = jnp.ones(shape)
+    mphi = layout.flatten(m)
+
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(cfg.batch, cfg.seq, cfg.d_model), jnp.float32)
+    yfp = block_fwd(cfg, w, x)
+    loss, g = step(x, yfp, wb, phi, mphi, jnp.array([7.0]))
+    gA = layout.slice(g, "A_qkv")
+    off_diag = np.asarray(gA) * (1 - np.eye(cfg.d_model))
+    assert np.abs(off_diag).max() == 0.0
+    assert np.abs(np.diag(np.asarray(gA))).max() > 0.0
+    assert float(loss[0]) > 0.0
+
+
+@pytest.mark.parametrize("mode", ["w", "a4"])
+def test_calibration_reduces_loss(mode):
+    """A few SGD steps on phi must reduce the block MSE (Fig. 3 dynamics)."""
+    cfg = MODELS["opt-s1"]
+    w = init_block(cfg)
+    bl = theta_layouts(cfg)[1]
+    wb = bl.flatten(w)
+    step, layout = affine.make_calib_step(cfg, mode, 0, bl)
+    _, phi = identity_phi(cfg, mode, 0)
+    mphi = jnp.ones_like(phi)
+
+    rng = np.random.RandomState(4)
+    x = rng.randn(cfg.batch, cfg.seq, cfg.d_model).astype(np.float32)
+    # outlier channels — the activation pathology the transform exists to fix
+    x[..., ::16] *= 8.0
+    x = jnp.asarray(x)
+    yfp = block_fwd(cfg, w, x)
+    qw = jnp.array([3.0])   # w2: strong quant noise -> clear signal
+    qa = jnp.array([15.0])  # a4
+    args = (qw,) if mode == "w" else (qw, qa)
+
+    # Adam, as the rust coordinator runs it
+    losses = []
+    lr, b1, b2, eps = 5e-3, 0.9, 0.999, 1e-8
+    m = jnp.zeros_like(phi)
+    v = jnp.zeros_like(phi)
+    jstep = jax.jit(step)
+    for t in range(1, 41):
+        loss, g = jstep(x, yfp, wb, phi, mphi, *args)
+        losses.append(float(loss[0]))
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1**t)
+        vh = v / (1 - b2**t)
+        phi = phi - lr * mh / (jnp.sqrt(vh) + eps)
+    assert losses[-1] < losses[0] * 0.9, losses[:3] + losses[-3:]

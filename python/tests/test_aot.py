@@ -1,0 +1,79 @@
+"""Manifest/artifact consistency (requires `make artifacts` to have run)."""
+
+import json
+import os
+
+import pytest
+
+from compile.configs import MODELS, GROUPS
+from compile import affine, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+def load():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_covers_all_models():
+    m = load()
+    assert set(m["models"]) == set(MODELS)
+
+
+def test_files_exist_and_are_pure_hlo():
+    m = load()
+    for name, mm in m["models"].items():
+        for entry, meta in mm["entries"].items():
+            path = os.path.join(ART, meta["file"])
+            assert os.path.exists(path), path
+            text = open(path).read()
+            assert "custom-call" not in text, (name, entry)
+            assert text.lstrip().startswith("HloModule"), (name, entry)
+
+
+def test_layout_sizes_match_configs():
+    m = load()
+    for name, mm in m["models"].items():
+        cfg = MODELS[name]
+        gl, bl, tl = model.theta_layouts(cfg)
+        assert mm["globals_size"] == gl.size
+        assert mm["block_size"] == bl.size
+        assert mm["theta_size"] == tl.size
+        assert mm["theta_size"] == cfg.param_count()
+        for g in GROUPS:
+            pl = affine.phi_layout(cfg, "w", g)
+            assert mm["phi_layouts"][f"w_g{g}"]["size"] == pl.size
+        pa = affine.phi_layout(cfg, "a4", 0)
+        assert mm["phi_layouts"]["a4"]["size"] == pa.size
+
+
+def test_entry_io_shapes():
+    m = load()
+    for name, mm in m["models"].items():
+        cfg = MODELS[name]
+        e = mm["entries"]["calib_w_g0"]
+        b, s, d = cfg.batch, cfg.seq, cfg.d_model
+        assert e["inputs"][0]["shape"] == [b, s, d]
+        assert e["inputs"][2]["shape"] == [mm["block_size"]]
+        p = mm["phi_layouts"]["w_g0"]["size"]
+        assert e["inputs"][3]["shape"] == [p]
+        assert e["outputs"][0]["shape"] == [1]
+        assert e["outputs"][1]["shape"] == [p]
+        tr = mm["entries"]["train_step"]
+        assert tr["inputs"][2]["shape"] == [mm["theta_size"]]
+        assert tr["outputs"][1]["shape"] == [mm["theta_size"]]
+
+
+def test_expected_entry_set():
+    m = load()
+    want = {"embed", "head_nll", "block_fp", "block_a4", "block_capture",
+            "calib_w_g0", "calib_w_g64", "calib_w_g128", "calib_a4",
+            "wfq_g0", "wfq_g64", "wfq_g128", "train_step",
+            "calib_flex_g0", "flex_apply_g0"}
+    for name, mm in m["models"].items():
+        assert set(mm["entries"]) == want, name

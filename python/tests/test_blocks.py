@@ -1,0 +1,80 @@
+"""Transformer block graphs: shapes, causality, quant-noise sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import quantize
+from compile.blocks import block_fwd, block_capture
+from compile.configs import MODELS
+from compile.model import theta_layouts
+
+
+def init_block(cfg, seed=0):
+    rng = np.random.RandomState(seed)
+    w = {}
+    for name, shape in cfg.block_weight_names():
+        if name.startswith(("ln", "rms")) and name.endswith("_g"):
+            w[name] = jnp.ones(shape)
+        elif name.startswith("b") or name.endswith("_b"):
+            w[name] = jnp.zeros(shape)
+        else:
+            w[name] = jnp.asarray(rng.randn(*shape).astype(np.float32) * 0.05)
+    return w
+
+
+@pytest.mark.parametrize("name", ["opt-s1", "ll-s1"])
+def test_block_shapes(name):
+    cfg = MODELS[name]
+    w = init_block(cfg)
+    x = jnp.asarray(np.random.RandomState(1).randn(2, cfg.seq, cfg.d_model),
+                    jnp.float32)
+    y = block_fwd(cfg, w, x)
+    assert y.shape == x.shape
+    y2, xq, xc, x1, x2c = block_capture(cfg, w, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=1e-6)
+    assert xq.shape == x.shape and xc.shape == x.shape
+    assert x1.shape == x.shape and x2c.shape == (2, cfg.seq, cfg.d_ff)
+
+
+@pytest.mark.parametrize("name", ["opt-s1", "ll-s1"])
+def test_causality(name):
+    """Perturbing token t must not change outputs at positions < t."""
+    cfg = MODELS[name]
+    w = init_block(cfg)
+    rng = np.random.RandomState(2)
+    x = rng.randn(1, cfg.seq, cfg.d_model).astype(np.float32)
+    y1 = np.asarray(block_fwd(cfg, w, jnp.asarray(x)))
+    t = cfg.seq // 2
+    x2 = x.copy()
+    x2[0, t:] += 1.0
+    y2 = np.asarray(block_fwd(cfg, w, jnp.asarray(x2)))
+    np.testing.assert_allclose(y1[0, :t], y2[0, :t], atol=1e-5)
+    assert np.abs(y1[0, t:] - y2[0, t:]).max() > 1e-3
+
+
+def test_act_quant_noise_small_at_8bit():
+    cfg = MODELS["opt-s1"]
+    w = init_block(cfg)
+    x = jnp.asarray(np.random.RandomState(3).randn(2, cfg.seq, cfg.d_model)
+                    .astype(np.float32))
+    y_fp = block_fwd(cfg, w, x)
+    y_q8 = block_fwd(cfg, w, x, act_qmax=jnp.array([255.0]),
+                     act_quant_fn=lambda t, q: quantize.fake_quant_act(t, q[0]))
+    y_q4 = block_fwd(cfg, w, x, act_qmax=jnp.array([15.0]),
+                     act_quant_fn=lambda t, q: quantize.fake_quant_act(t, q[0]))
+    e8 = float(jnp.mean((y_q8 - y_fp) ** 2))
+    e4 = float(jnp.mean((y_q4 - y_fp) ** 2))
+    assert e8 < e4
+    assert e8 < 1e-4
+
+
+def test_theta_layout_contiguous_blocks():
+    cfg = MODELS["opt-s2"]
+    gl, bl, tl = theta_layouts(cfg)
+    assert tl.size == gl.size + cfg.n_layers * bl.size
+    # block i occupies [gl.size + i*bl.size, ...): names must line up
+    name, shape, off = tl.entries[len(gl.entries)]
+    assert name == "b0." + bl.entries[0][0]
+    assert off == gl.size

@@ -1,0 +1,74 @@
+"""Gauss-Jordan SDD inverse: accuracy + custom VJP, vs numpy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.linalg import inv_sdd, inv_sdd_blocks
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def sdd(seed, n, dom=1.5):
+    """Random strictly diagonally dominant matrix."""
+    rng = np.random.RandomState(seed)
+    a = rng.randn(n, n).astype(np.float32) / n
+    row = np.abs(a).sum(1) - np.abs(np.diag(a))
+    np.fill_diagonal(a, dom * (row + 0.1) * np.sign(rng.randn(n) + 1e-9))
+    return a
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([4, 16, 64, 128]), seed=st.integers(0, 2**16))
+def test_inverse_matches_numpy(n, seed):
+    a = sdd(seed, n)
+    got = np.asarray(inv_sdd(jnp.asarray(a)))
+    want = np.linalg.inv(a.astype(np.float64)).astype(np.float32)
+    assert_allclose(got, want, rtol=2e-3, atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([8, 32, 128]), seed=st.integers(0, 2**16))
+def test_inverse_identity_residual(n, seed):
+    a = jnp.asarray(sdd(seed, n))
+    b = inv_sdd(a)
+    resid = np.abs(np.asarray(a @ b) - np.eye(n)).max()
+    assert resid < 1e-4, resid
+
+
+def test_blocks_inverse():
+    h, n = 4, 32
+    a = np.stack([sdd(i, n) for i in range(h)])
+    b = np.asarray(inv_sdd_blocks(jnp.asarray(a)))
+    for i in range(h):
+        assert_allclose(a[i] @ b[i], np.eye(n), atol=1e-4)
+
+
+def test_vjp_matches_finite_difference():
+    n = 8
+    a64 = jnp.asarray(sdd(3, n), dtype=jnp.float32)
+    c = jnp.asarray(np.random.RandomState(0).randn(n, n), jnp.float32)
+
+    def loss(a):
+        return jnp.sum(inv_sdd(a) * c)
+
+    g = jax.grad(loss)(a64)
+    eps = 1e-3
+    for (i, j) in [(0, 0), (1, 3), (5, 5), (7, 2)]:
+        ap = a64.at[i, j].add(eps)
+        am = a64.at[i, j].add(-eps)
+        fd = (loss(ap) - loss(am)) / (2 * eps)
+        assert abs(float(g[i, j]) - float(fd)) < 5e-2 * max(1.0, abs(float(fd)))
+
+
+def test_identity_inverse_is_identity():
+    eye = jnp.eye(64)
+    assert_allclose(np.asarray(inv_sdd(eye)), np.eye(64), atol=1e-6)
+
+
+def test_diagonal_inverse():
+    d = jnp.diag(jnp.array([2.0, 4.0, 0.5, 8.0]))
+    got = np.asarray(inv_sdd(d))
+    assert_allclose(got, np.diag([0.5, 0.25, 2.0, 0.125]), atol=1e-6)

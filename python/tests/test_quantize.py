@@ -1,0 +1,96 @@
+"""STE fake-quant twin (the calibration-graph implementation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import quantize
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(seed, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    bits=st.sampled_from([2, 3, 4]),
+    group=st.sampled_from([0, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_weight_error_bound(bits, group, seed):
+    """With no clipping, |w - Q(w)| <= scale/2 element-wise."""
+    din, dout = 128, 64
+    w = rand(seed, din, dout)
+    g = din if group == 0 else group
+    noclip = jnp.full((din // g, dout), 20.0)
+    qmax = 2.0**bits - 1.0
+    wdq = quantize.fake_quant_weight(w, noclip, noclip, qmax, group)
+    wg, wmin, wmax = quantize.group_minmax(w, group)
+    scale = (wmax - wmin) / qmax
+    err = jnp.abs(wdq.reshape(wg.shape) - wg)
+    assert float(jnp.max(err - scale / 2)) < 1e-5
+
+
+def test_ste_grad_is_passthrough():
+    x = rand(0, 32)
+    g = jax.grad(lambda x: jnp.sum(quantize.ste_round(x)))(x)
+    assert_allclose(np.asarray(g), np.ones(32), atol=1e-7)
+
+
+def test_lwc_grads_flow():
+    """Clipping logits must receive nonzero gradients through scale/zp."""
+    w = rand(1, 128, 64)
+    qmax = 7.0
+
+    def loss(gamma, beta):
+        wdq = quantize.fake_quant_weight(w, gamma, beta, qmax, 0)
+        return jnp.mean((wdq - w) ** 2)
+
+    gamma = jnp.full((1, 64), 2.0)
+    beta = jnp.full((1, 64), 2.0)
+    gg, gb = jax.grad(loss, argnums=(0, 1))(gamma, beta)
+    assert float(jnp.abs(gg).max()) > 0
+    assert float(jnp.abs(gb).max()) > 0
+
+
+def test_lwc_clipping_shrinks_range():
+    w = rand(2, 128, 64, scale=2.0)
+    qmax = 15.0
+    noclip = jnp.full((1, 64), 20.0)
+    hardclip = jnp.full((1, 64), -1.0)  # sigmoid(-1) ~ 0.27: strong clip
+    w_no = quantize.fake_quant_weight(w, noclip, noclip, qmax, 0)
+    w_cl = quantize.fake_quant_weight(w, hardclip, hardclip, qmax, 0)
+    assert float(jnp.max(jnp.abs(w_cl))) < float(jnp.max(jnp.abs(w_no)))
+
+
+def test_act_quant_preserves_zero():
+    """Rows padded with zeros must quantize zero exactly (zp on-grid)."""
+    x = rand(3, 16, 64, scale=3.0)
+    x = x.at[:, :8].set(0.0)
+    out = quantize.fake_quant_act(x, 15.0)
+    assert_allclose(np.asarray(out[:, :8]), 0.0, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(bits=st.sampled_from([4, 8]), seed=st.integers(0, 2**16))
+def test_act_quant_grad_passthrough_in_range(bits, seed):
+    x = rand(seed, 8, 32)
+    qmax = 2.0**bits - 1.0
+    g = jax.grad(lambda x: jnp.sum(quantize.fake_quant_act(x, qmax)))(x)
+    # STE: gradient 1 wherever not clipped; min/max rows always in range
+    assert float(jnp.mean(jnp.abs(np.asarray(g) - 1.0) < 0.5)) > 0.9
+
+
+def test_quant_monotone_in_bits():
+    """More bits -> lower quantization error (per-tensor average)."""
+    w = rand(5, 256, 128)
+    noclip = jnp.full((1, 128), 20.0)
+    errs = []
+    for bits in (2, 3, 4, 8):
+        wdq = quantize.fake_quant_weight(w, noclip, noclip, 2.0**bits - 1, 0)
+        errs.append(float(jnp.mean((wdq - w) ** 2)))
+    assert errs == sorted(errs, reverse=True), errs

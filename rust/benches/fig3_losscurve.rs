@@ -1,0 +1,33 @@
+//! Bench: paper Figure 3 — last-transformer-block MSE loss curves,
+//! AffineQuant vs OmniQuant, under two weight-only configs.
+
+use affinequant::cli::parse_config;
+use affinequant::coordinator::{calibrate, CalibOptions};
+use affinequant::harness::{env_list, Ctx};
+use affinequant::report::save_series;
+
+fn main() -> anyhow::Result<()> {
+    let model = env_list("AQ_MODELS", &["opt-s1"]).remove(0);
+    let configs = env_list("AQ_CONFIGS", &["w2a16", "w3a16g128"]);
+    let mut ctx = Ctx::load()?;
+    let (rt, fp) = ctx.model(&model)?;
+    for config in &configs {
+        let (spec, act_bits) = parse_config(config)?;
+        for (method, opts) in [
+            ("affinequant", CalibOptions::affinequant(spec, act_bits)),
+            ("omniquant", CalibOptions::omniquant(spec, act_bits)),
+        ] {
+            let (_, rep) = calibrate(&rt, &fp, &opts, false)?;
+            let curve = &rep.blocks.last().unwrap().loss_curve;
+            let rows: Vec<(f64, f64)> =
+                curve.iter().enumerate().map(|(e, &l)| ((e + 1) as f64, l)).collect();
+            save_series(&format!("fig3_loss_{model}_{config}_{method}"), "epoch,loss", &rows)?;
+            println!(
+                "fig3 {model} {config} {method}: {:.3e} -> {:.3e}",
+                curve.first().unwrap(),
+                curve.last().unwrap()
+            );
+        }
+    }
+    Ok(())
+}

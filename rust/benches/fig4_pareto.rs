@@ -1,0 +1,27 @@
+//! Bench: paper Figure 4 — PPL vs weighted-memory Pareto points
+//! (AffineQuant vs OmniQuant across bit configs). Full sweep in
+//! `examples/pareto_frontier.rs`.
+
+use affinequant::cli::parse_config;
+use affinequant::eval::weighted_memory_bytes;
+use affinequant::harness::{env_list, method_ppl, Ctx};
+use affinequant::report::save_series;
+
+fn main() -> anyhow::Result<()> {
+    let model = env_list("AQ_MODELS", &["opt-s1"]).remove(0);
+    let configs = env_list("AQ_CONFIGS", &["w2a16g64", "w4a16"]);
+    let mut ctx = Ctx::load()?;
+    for method in ["omniquant", "affinequant"] {
+        let mut pts = Vec::new();
+        for config in &configs {
+            let (spec, act_bits) = parse_config(config)?;
+            let ppl = method_ppl(&mut ctx, &model, method, spec, act_bits)?;
+            let (_, fp) = ctx.model(&model)?;
+            let mem = weighted_memory_bytes(&fp, spec, method == "affinequant");
+            println!("{model} {config} {method}: {mem} bytes, ppl {:.3}", ppl["wt2s"]);
+            pts.push((mem as f64, ppl["wt2s"]));
+        }
+        save_series(&format!("fig4_pareto_{model}_{method}"), "memory_bytes,ppl_wt2s", &pts)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Bench: paper Figures 5/6 — last-block quantization loss vs model PPL
+//! scatter (sampled over stability factors) and the Pearson correlation.
+
+use affinequant::coordinator::{calibrate, CalibOptions};
+use affinequant::data::CorpusKind;
+use affinequant::eval::{self, pearson};
+use affinequant::harness::{env_list, Ctx, EVAL_BATCHES};
+use affinequant::quant::QuantSpec;
+use affinequant::report::save_series;
+
+fn main() -> anyhow::Result<()> {
+    let model = env_list("AQ_MODELS", &["opt-s1"]).remove(0);
+    let alphas: Vec<f32> = match std::env::var("AQ_ALPHAS") {
+        Ok(v) => v.split(',').map(|s| s.parse().unwrap()).collect(),
+        Err(_) => vec![1.0, 0.1, 0.01, 1e-3],
+    };
+    let mut ctx = Ctx::load()?;
+    let (rt, fp) = ctx.model(&model)?;
+    let mut pts = Vec::new();
+    for &alpha in &alphas {
+        let mut opts = CalibOptions::affinequant(QuantSpec::new(4, 0), 4);
+        opts.alpha = alpha;
+        let (qps, rep) = calibrate(&rt, &fp, &opts, false)?;
+        if rep.any_diverged() {
+            continue;
+        }
+        let ppl = eval::perplexity(&rt, &qps, CorpusKind::Wt2s, EVAL_BATCHES, eval::act_qmax(4))?;
+        println!("alpha {alpha:.0e}: loss {:.3e} ppl {ppl:.3}", rep.last_block_loss());
+        pts.push((rep.last_block_loss(), ppl));
+    }
+    save_series(&format!("fig56_scatter_{model}"), "last_block_loss,ppl_wt2s", &pts)?;
+    let r = pearson(
+        &pts.iter().map(|p| p.0).collect::<Vec<_>>(),
+        &pts.iter().map(|p| p.1).collect::<Vec<_>>(),
+    );
+    println!("Pearson r = {r:.3} (paper ≈ 0.95)");
+    Ok(())
+}

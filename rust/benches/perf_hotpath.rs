@@ -1,0 +1,138 @@
+//! Perf bench (§Perf in EXPERIMENTS.md): times the L3 hot paths — PJRT
+//! entry executions (eval block forward, calibration step, train step),
+//! host-side merge/GPTQ kernels, and the end-to-end PPL eval — and verifies
+//! the paper's "no inference overhead" claim by comparing merged-model vs
+//! FP eval latency.
+
+use affinequant::benchx::{bench, Table};
+use affinequant::coordinator::stream;
+use affinequant::data::CorpusKind;
+use affinequant::eval;
+use affinequant::harness::{env_list, Ctx};
+use affinequant::quant::QuantSpec;
+use affinequant::report::save_table;
+use affinequant::rngx::Pcg32;
+use affinequant::runtime::Arg;
+use affinequant::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let model = env_list("AQ_MODELS", &["opt-s1"]).remove(0);
+    let mut ctx = Ctx::load()?;
+    let (rt, fp) = ctx.model(&model)?;
+    let cfg = rt.cfg.clone();
+    let mut t = Table::new(&format!("hot-path timings — {model}"), &["path", "median_ms"]);
+    let mut push = |name: &str, r: &affinequant::benchx::BenchResult| {
+        t.row(vec![name.into(), format!("{:.2}", r.median_s * 1e3)]);
+    };
+
+    // PJRT entries
+    let batches = stream::calib_batches(&cfg, 16, 1);
+    let x = stream::embed_stream(&rt, fp.globals(), &batches)?.remove(0);
+    let wb = fp.block(0).to_vec();
+    let r = bench("block_fp", 2, 10, || {
+        let _ = rt.block_fp(&x, &wb).unwrap();
+    });
+    push("block_fp", &r);
+    let r = bench("block_a4", 2, 10, || {
+        let _ = rt.block_a4(&x, &wb, 15.0).unwrap();
+    });
+    push("block_a4", &r);
+
+    let playout = rt.phi_layouts["w_g0"].clone();
+    let phi = vec![0.01f32; playout.size];
+    let mphi = vec![1.0f32; playout.size];
+    let qmax = [7.0f32];
+    let r = bench("calib_w_g0 step", 1, 5, || {
+        let _ = rt
+            .call(
+                "calib_w_g0",
+                &[
+                    Arg::F32(&x.data),
+                    Arg::F32(&x.data),
+                    Arg::F32(&wb),
+                    Arg::F32(&phi),
+                    Arg::F32(&mphi),
+                    Arg::F32(&qmax),
+                ],
+            )
+            .unwrap();
+    });
+    push("calib_w_g0", &r);
+
+    // host-side kernels
+    let d = cfg.d_model;
+    let mut rng = Pcg32::seeded(3);
+    let a = {
+        let mut a = Tensor::randn(&[d, d], 0.001, &mut rng);
+        for i in 0..d {
+            a.data[i * d + i] = 1.0;
+        }
+        a
+    };
+    let w = Tensor::randn(&[d, d], 0.02, &mut rng);
+    let r = bench("merge inverse_prec f32/f64", 2, 10, || {
+        let _ = affinequant::model::merge::inverse_prec(
+            &a,
+            affinequant::model::merge::MergePrecision::F32InvF64,
+        );
+    });
+    push("inverse_prec(f64)", &r);
+    let r = bench("host matmul d^3", 2, 10, || {
+        let _ = a.matmul(&w);
+    });
+    push("host_matmul", &r);
+    let xact = Tensor::randn(&[1024, d], 1.0, &mut rng);
+    // Hessian accumulation: scalar reference vs blocked-matmul path (§Perf)
+    let r = bench("hessian scalar (before)", 1, 5, || {
+        let mut h = vec![0.0f64; d * d];
+        for rr in 0..1024 {
+            let row = xact.row(rr);
+            for a in 0..d {
+                let va = row[a] as f64;
+                let hrow = &mut h[a * d..(a + 1) * d];
+                for b in a..d {
+                    hrow[b] += va * row[b] as f64;
+                }
+            }
+        }
+        std::hint::black_box(h);
+    });
+    push("hessian_scalar", &r);
+    let r = bench("hessian matmul_at (after)", 1, 5, || {
+        let g = xact.matmul_at(&xact);
+        let h: Vec<f64> = g.data.iter().map(|&v| v as f64).collect();
+        std::hint::black_box(h);
+    });
+    push("hessian_matmul", &r);
+    let h: Vec<f64> = {
+        let ht = xact.matmul_at(&xact);
+        ht.data.iter().map(|&v| v as f64).collect()
+    };
+    let r = bench("gptq_weight d x d", 1, 3, || {
+        let _ = affinequant::baselines::gptq::gptq_weight(&w, &h, QuantSpec::new(4, 0)).unwrap();
+    });
+    push("gptq_weight", &r);
+
+    // end-to-end PPL eval: FP vs merged (paper's zero-overhead claim)
+    let qps = affinequant::baselines::rtn::quantize(&rt, &fp, QuantSpec::new(4, 0))?;
+    let r_fp = bench("ppl eval (fp)", 1, 3, || {
+        let _ = eval::perplexity(&rt, &fp, CorpusKind::Wt2s, 2, None).unwrap();
+    });
+    push("ppl_eval_fp", &r_fp);
+    let r_q = bench("ppl eval (merged w4)", 1, 3, || {
+        let _ = eval::perplexity(&rt, &qps, CorpusKind::Wt2s, 2, None).unwrap();
+    });
+    push("ppl_eval_merged", &r_q);
+    let overhead = (r_q.median_s / r_fp.median_s - 1.0) * 100.0;
+    println!("merged-vs-fp eval overhead: {overhead:+.2}% (claim: ≈0)");
+    t.row(vec!["merged_overhead_pct".into(), format!("{overhead:.2}")]);
+
+    // per-entry PJRT accounting
+    println!("\nPJRT entry totals:");
+    for (entry, n, secs) in rt.stats() {
+        println!("  {entry:<16} {n:>5} calls  {secs:8.2}s total");
+    }
+    t.print();
+    save_table(&t, "perf_hotpath")?;
+    Ok(())
+}

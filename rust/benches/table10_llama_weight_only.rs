@@ -1,0 +1,18 @@
+//! Bench: paper Tables 10/11 — LLaMA-family weight-only PPL (C4 +
+//! WikiText2 analogues come out as corpus columns of one sweep), including
+//! the w2a16 configs where the paper's gaps are largest.
+
+use affinequant::benchx::time_once;
+use affinequant::harness::{env_list, weight_only_tables, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let models = env_list("AQ_MODELS", &["ll-s1"]);
+    let configs = env_list("AQ_CONFIGS", &["w2a16", "w3a16"]);
+    let methods = env_list("AQ_METHODS", &["rtn", "gptq", "awq", "omniquant", "affinequant"]);
+    let mut ctx = Ctx::load()?;
+    let (t, _) = time_once("table10/11 llama weight-only sweep", || {
+        weight_only_tables(&mut ctx, &models, &configs, &methods, "table10_llama_weight_only")
+    });
+    t?.print();
+    Ok(())
+}

@@ -1,0 +1,18 @@
+//! Bench: paper Tables 1/8/9 — OPT-family weight-only PPL on the three
+//! corpora (wt2s/ptbs/c4s ≈ WikiText2/PTB/C4), method set M1.
+//! Scale with `AQ_MODELS` / `AQ_CONFIGS` / `AQ_METHODS` env lists.
+
+use affinequant::benchx::time_once;
+use affinequant::harness::{env_list, weight_only_tables, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let models = env_list("AQ_MODELS", &["opt-s1"]);
+    let configs = env_list("AQ_CONFIGS", &["w3a16", "w4a16g128"]);
+    let methods = env_list("AQ_METHODS", &["rtn", "gptq", "awq", "omniquant", "affinequant"]);
+    let mut ctx = Ctx::load()?;
+    let (t, _) = time_once("table1/8/9 weight-only sweep", || {
+        weight_only_tables(&mut ctx, &models, &configs, &methods, "table1_weight_only")
+    });
+    t?.print();
+    Ok(())
+}

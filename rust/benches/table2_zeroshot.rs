@@ -1,0 +1,16 @@
+//! Bench: paper Table 2 — zero-shot accuracy on the six synthetic tasks at
+//! w4a4, OmniQuant vs AffineQuant vs FP16.
+
+use affinequant::benchx::time_once;
+use affinequant::harness::{env_list, zeroshot_table, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let models = env_list("AQ_MODELS", &["opt-s1"]);
+    let methods = env_list("AQ_METHODS", &["fp16", "omniquant", "affinequant"]);
+    let mut ctx = Ctx::load()?;
+    let (t, _) = time_once("table2 zero-shot w4a4", || {
+        zeroshot_table(&mut ctx, &models, &methods, "w4a4", "table2_zeroshot")
+    });
+    t?.print();
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Bench: paper Table 3 — w4a4 PPL across {FP16, SmoothQuant, OmniQuant,
+//! AffineQuant} on the WikiText2/C4 analogues.
+
+use affinequant::benchx::time_once;
+use affinequant::harness::{env_list, w4a4_ppl_table, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let models = env_list("AQ_MODELS", &["opt-s1", "ll-s1"]);
+    let methods = env_list("AQ_METHODS", &["fp16", "smoothquant", "omniquant", "affinequant"]);
+    let mut ctx = Ctx::load()?;
+    let (t, _) = time_once("table3 w4a4 ppl", || {
+        w4a4_ppl_table(&mut ctx, &models, &methods, "table3_w4a4")
+    });
+    t?.print();
+    Ok(())
+}

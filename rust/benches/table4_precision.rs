@@ -1,0 +1,57 @@
+//! Bench: paper Table 4 — numerical-precision ablation. The merge-error
+//! protocol (random SDD affine + random activations, mean output MSE over
+//! repeated runs) plus a timed calibration per precision scheme lives in
+//! `examples/ablations.rs --what precision`; this bench times the
+//! inverse+merge kernels themselves across schemes.
+
+use affinequant::benchx::{bench, Table};
+use affinequant::model::merge::{inverse_prec, mm_prec, MergePrecision};
+use affinequant::report::save_table;
+use affinequant::rngx::Pcg32;
+use affinequant::tensor::Tensor;
+
+fn sdd(d: usize, seed: u64) -> Tensor {
+    let mut rng = Pcg32::seeded(seed);
+    let mut a = Tensor::randn(&[d, d], 1.0 / d as f32, &mut rng);
+    for i in 0..d {
+        let off: f32 = (0..d).filter(|&j| j != i).map(|j| a.data[i * d + j].abs()).sum();
+        a.data[i * d + i] = 1.2 * (off + 0.05);
+    }
+    a
+}
+
+fn main() -> anyhow::Result<()> {
+    let d = std::env::var("AQ_DIM").map(|v| v.parse().unwrap()).unwrap_or(256);
+    let a = sdd(d, 1);
+    let mut rng = Pcg32::seeded(2);
+    let w = Tensor::randn(&[d, d], 0.05, &mut rng);
+    let mut t = Table::new(
+        &format!("Merge kernel timings at d={d} (Table 4 companion)"),
+        &["scheme", "inverse_ms", "merge_mm_ms", "residual"],
+    );
+    for (scheme, prec) in [
+        ("float", MergePrecision::F32),
+        ("double", MergePrecision::F64),
+        ("float-double", MergePrecision::F32InvF64),
+    ] {
+        let rinv = bench(&format!("inverse[{scheme}] d={d}"), 1, 5, || {
+            let _ = inverse_prec(&a, prec);
+        });
+        let rmm = bench(&format!("merge_mm[{scheme}] d={d}"), 1, 5, || {
+            let _ = mm_prec(&a, &w, prec);
+        });
+        let inv = inverse_prec(&a, prec);
+        let a64: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+        let i64v: Vec<f64> = inv.data.iter().map(|&v| v as f64).collect();
+        let res = affinequant::linalg::inverse_residual(&a64, &i64v, d);
+        t.row(vec![
+            scheme.into(),
+            format!("{:.2}", rinv.median_s * 1e3),
+            format!("{:.2}", rmm.median_s * 1e3),
+            format!("{res:.3e}"),
+        ]);
+    }
+    t.print();
+    save_table(&t, "table4_precision_kernels")?;
+    Ok(())
+}

@@ -1,0 +1,20 @@
+//! Bench: paper Table 5 — stability-factor sweep. The full 1e0..1e-8 grid
+//! lives in `examples/ablations.rs`; the bench default covers the shape
+//! (large-alpha instability, small-alpha OmniQuant convergence).
+
+use affinequant::benchx::time_once;
+use affinequant::harness::{alpha_sweep, env_list, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let model = env_list("AQ_MODELS", &["opt-s1"]).remove(0);
+    let alphas: Vec<f32> = match std::env::var("AQ_ALPHAS") {
+        Ok(v) => v.split(',').map(|s| s.parse().unwrap()).collect(),
+        Err(_) => vec![1.0, 0.1, 1e-2, 1e-4, 1e-8],
+    };
+    let mut ctx = Ctx::load()?;
+    let (t, _) = time_once("table5 alpha sweep", || {
+        alpha_sweep(&mut ctx, &model, "w2a16g128", &alphas, "table5_alpha")
+    });
+    t?.print();
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Bench: paper Table 6 — gradual-mask contribution (with vs without the
+//! gradual release of off-diagonal elements).
+
+use affinequant::benchx::time_once;
+use affinequant::harness::{env_list, gradual_ablation, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let model = env_list("AQ_MODELS", &["opt-s1"]).remove(0);
+    let config = env_list("AQ_CONFIGS", &["w3a16"]).remove(0);
+    let mut ctx = Ctx::load()?;
+    let (t, _) = time_once("table6 gradual mask ablation", || {
+        gradual_ablation(&mut ctx, &model, &config, "table6_gradual")
+    });
+    t?.print();
+    Ok(())
+}

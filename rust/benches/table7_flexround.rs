@@ -1,0 +1,16 @@
+//! Bench: paper Table 7 — AffineQuant vs FlexRound at w4a16 on the
+//! zero-shot suite.
+
+use affinequant::benchx::time_once;
+use affinequant::harness::{env_list, zeroshot_table, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let models = env_list("AQ_MODELS", &["opt-s1"]);
+    let methods = env_list("AQ_METHODS", &["fp16", "flexround", "affinequant"]);
+    let mut ctx = Ctx::load()?;
+    let (t, _) = time_once("table7 flexround vs affinequant (w4a16 zero-shot)", || {
+        zeroshot_table(&mut ctx, &models, &methods, "w4a16", "table7_flexround")
+    });
+    t?.print();
+    Ok(())
+}

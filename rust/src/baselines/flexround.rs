@@ -1,0 +1,80 @@
+//! FlexRound (Lee et al. 2023): learnable rounding via element-wise
+//! division — `W_q = QDQ(W / exp(ls))·exp(ls)` with a per-element log-scale
+//! `ls` (plus a per-weight global scale), optimized per block against the
+//! same Eq.-4 MSE objective through the `calib_flex` artifact.
+//!
+//! The paper's Table 7 compares AffineQuant against FlexRound at w4a16;
+//! this module is that comparator. It shares the coordinator's stream and
+//! optimizer machinery but learns *rounding* rather than an equivalence
+//! transform: no merge algebra is needed — the optimized element scales
+//! directly produce the final quantized weights.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::stream;
+use crate::model::ParamStore;
+use crate::quant::QuantSpec;
+use crate::runtime::{Arg, ModelRuntime};
+use crate::train::Adam;
+
+/// Optimize FlexRound element scales per block; returns the quantized model.
+pub fn quantize(
+    rt: &ModelRuntime,
+    fp: &ParamStore,
+    spec: QuantSpec,
+    act_bits: u32,
+) -> Result<ParamStore> {
+    if act_bits < 16 {
+        bail!("flexround baseline is weight-only (paper Table 7 is w4a16)");
+    }
+    let key = format!("flex_g{}", spec.group);
+    let entry = format!("calib_{key}");
+    if !rt.has_entry(&entry) {
+        bail!("artifact {entry} missing — rebuild artifacts (make artifacts)");
+    }
+    let playout = rt.phi_layouts[&key].clone();
+    let cfg = &rt.cfg;
+    let batches = stream::calib_batches(cfg, 128, 1234);
+    let mut xs = stream::embed_stream(rt, fp.globals(), &batches)?;
+    let mut out = fp.clone();
+    let qmax_w = [spec.qmax()];
+    let epochs = 10;
+
+    for i in 0..cfg.n_layers {
+        let wb = fp.block(i).to_vec();
+        let (yfp, _) = stream::capture_block(rt, &wb, &xs)?;
+        // ls init 0 (exp = 1 ⇒ plain RTN starting point)
+        let mut phi = vec![0.0f32; playout.size];
+        let mut adam = Adam::new(playout.size, 1e-3);
+        for _e in 0..epochs {
+            for (x, y) in xs.iter().zip(&yfp) {
+                let mut outs = rt.call(
+                    &entry,
+                    &[
+                        Arg::F32(&x.data),
+                        Arg::F32(&y.data),
+                        Arg::F32(&wb),
+                        Arg::F32(&phi),
+                        Arg::F32(&qmax_w),
+                    ],
+                )?;
+                let grad = outs.remove(1);
+                let loss = outs.remove(0).data[0];
+                if !loss.is_finite() {
+                    bail!("flexround diverged at block {i}");
+                }
+                adam.step(&mut phi, &grad.data, 1.0);
+            }
+        }
+        // materialize the final quantized weights through the wfq-style
+        // artifact path: the flex entry also exposes them via `flex_apply`.
+        let wq = rt.call(
+            &format!("flex_apply_g{}", spec.group),
+            &[Arg::F32(&wb), Arg::F32(&phi), Arg::F32(&qmax_w)],
+        )?;
+        out.block_mut(i).copy_from_slice(&wq[0].data);
+        let wbm = out.block(i).to_vec();
+        stream::advance(rt, &wbm, &mut xs, None)?;
+    }
+    Ok(out)
+}

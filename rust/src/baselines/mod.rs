@@ -1,0 +1,54 @@
+//! Comparison baselines (the paper's method set):
+//!
+//! * [`rtn`] — round-to-nearest, no calibration.
+//! * [`scale_eq`] — SmoothQuant (fixed-alpha diagonal scaling, w4a4) and
+//!   AWQ (grid-searched diagonal scaling, weight-only).
+//! * [`gptq`] — Hessian-based error-compensating rounding.
+//! * OmniQuant — [`crate::coordinator::CalibOptions::omniquant`], i.e. the
+//!   AffineQuant coordinator restricted to diagonal transforms.
+//! * [`flexround`] — learnable element-wise division rounding (Table 7).
+
+pub mod flexround;
+pub mod gptq;
+pub mod rtn;
+pub mod scale_eq;
+
+use anyhow::Result;
+
+use crate::coordinator::CalibOptions;
+use crate::model::ParamStore;
+use crate::quant::QuantSpec;
+use crate::runtime::ModelRuntime;
+
+/// All baseline method names in the paper's table order.
+pub const METHODS_WEIGHT_ONLY: [&str; 5] = ["rtn", "gptq", "awq", "omniquant", "affinequant"];
+pub const METHODS_W4A4: [&str; 4] = ["smoothquant", "omniquant", "affinequant", "fp16"];
+
+/// Quantize `fp` with the named method. A single entry point so the table
+/// benches can sweep method × config uniformly.
+pub fn quantize_with(
+    rt: &ModelRuntime,
+    fp: &ParamStore,
+    method: &str,
+    spec: QuantSpec,
+    act_bits: u32,
+    alpha: f32,
+) -> Result<ParamStore> {
+    match method {
+        "rtn" => rtn::quantize(rt, fp, spec),
+        "gptq" => gptq::quantize(rt, fp, spec, act_bits),
+        "awq" => scale_eq::awq(rt, fp, spec, act_bits),
+        "smoothquant" => scale_eq::smoothquant(rt, fp, spec, act_bits),
+        "omniquant" => {
+            let opts = CalibOptions::omniquant(spec, act_bits);
+            Ok(crate::coordinator::calibrate(rt, fp, &opts, false)?.0)
+        }
+        "affinequant" => {
+            let mut opts = CalibOptions::affinequant(spec, act_bits);
+            opts.alpha = alpha;
+            Ok(crate::coordinator::calibrate(rt, fp, &opts, false)?.0)
+        }
+        "flexround" => flexround::quantize(rt, fp, spec, act_bits),
+        other => anyhow::bail!("unknown method {other:?}"),
+    }
+}

@@ -1,0 +1,54 @@
+//! Round-to-nearest: per-group asymmetric quantization of every linear
+//! weight, no calibration data, no transforms. The floor every PTQ paper
+//! measures against.
+
+use anyhow::Result;
+
+use crate::model::merge::{merge_block_weight_only, BlockTransforms, MergePrecision};
+use crate::model::ParamStore;
+use crate::quant::QuantSpec;
+use crate::runtime::ModelRuntime;
+
+pub fn quantize(rt: &ModelRuntime, fp: &ParamStore, spec: QuantSpec) -> Result<ParamStore> {
+    let mut out = fp.clone();
+    let bl = rt.block_layout.clone();
+    let t = BlockTransforms::identity();
+    for i in 0..rt.cfg.n_layers {
+        merge_block_weight_only(&bl, out.block_mut(i), &t, spec, rt.cfg.n_heads, MergePrecision::F32);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quant_dequant;
+
+    // RTN through the merge path must equal direct quant_dequant.
+    #[test]
+    fn rtn_is_plain_qdq() {
+        use crate::model::test_layout;
+        use crate::rngx::Pcg32;
+        use crate::tensor::Tensor;
+        let bl = test_layout(vec![
+            ("wq", vec![8, 8]),
+            ("wk", vec![8, 8]),
+            ("wv", vec![8, 8]),
+            ("wo", vec![8, 8]),
+            ("w1", vec![8, 16]),
+            ("w2", vec![16, 8]),
+        ]);
+        let mut rng = Pcg32::seeded(3);
+        let mut wb: Vec<f32> = (0..bl.size).map(|_| rng.normal() as f32).collect();
+        let orig = wb.clone();
+        let t = BlockTransforms::identity();
+        let spec = QuantSpec::new(3, 0);
+        crate::model::merge::merge_block_weight_only(&bl, &mut wb, &t, spec, 2, MergePrecision::F32);
+        for name in ["wq", "wo", "w2"] {
+            let w0 = bl.tensor(&orig, name);
+            let want = quant_dequant(&w0, spec, None);
+            let got = bl.tensor(&wb, name);
+            assert_eq!(got, want, "{name}");
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Micro-benchmark harness (criterion is not vendored offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries built on this:
+//! warmup, fixed-iteration timing, median/p10/p90 statistics, and a
+//! markdown-ish line printer consistent across all bench targets.
+
+use crate::util::Timer;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median_s
+    }
+}
+
+/// Run `f` repeatedly: `warmup` discarded iterations, then `iters` timed.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        times.push(t.secs());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pick = |q: f64| times[((times.len() - 1) as f64 * q) as usize];
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_s: pick(0.5),
+        p10_s: pick(0.1),
+        p90_s: pick(0.9),
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+    };
+    println!(
+        "bench {:<42} {:>10} median  [{} .. {}]  ({} iters)",
+        res.name,
+        fmt_s(res.median_s),
+        fmt_s(res.p10_s),
+        fmt_s(res.p90_s),
+        iters
+    );
+    res
+}
+
+/// Time a single long-running closure (end-to-end benches).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    let secs = t.secs();
+    println!("bench {:<42} {:>10} (single run)", name, fmt_s(secs));
+    (out, secs)
+}
+
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Markdown table printer used by the table-reproduction benches.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let padded: Vec<String> = cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&line(&sep));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_quantiles() {
+        let mut x = 0u64;
+        let r = bench("noop", 2, 20, || {
+            x = x.wrapping_add(1);
+        });
+        assert!(r.p10_s <= r.median_s && r.median_s <= r.p90_s);
+        assert_eq!(r.iters, 20);
+    }
+
+    #[test]
+    fn table_markdown() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| a | bb |"));
+        assert!(md.contains("| 1 | 2  |"));
+        assert_eq!(t.to_csv(), "a,bb\n1,2\n");
+    }
+}

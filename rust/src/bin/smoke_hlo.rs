@@ -1,0 +1,58 @@
+//! Derisk smoke test: load the prototype calibration-step HLO (5 inputs,
+//! 2 outputs: loss + grad-wrt-A) produced by /tmp/proto/proto.py, run it on
+//! the PJRT CPU client, and compare against python golden values.
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+fn parse_golden(path: &str) -> Result<HashMap<String, Vec<f32>>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = HashMap::new();
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        let name = it.next().context("empty line")?.to_string();
+        let vals: Vec<f32> = it.map(|v| v.parse().unwrap()).collect();
+        out.insert(name, vals);
+    }
+    Ok(out)
+}
+
+fn main() -> Result<()> {
+    let hlo = std::env::args().nth(1).unwrap_or("/tmp/proto/step.hlo.txt".into());
+    let golden = parse_golden("/tmp/proto/golden.txt")?;
+
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(&hlo)?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+
+    let d = 8usize;
+    let lit = |name: &str, dims: &[i64]| -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&golden[name]).reshape(dims)?)
+    };
+    let a = lit("a", &[d as i64, d as i64])?;
+    let x = lit("x", &[16, d as i64])?;
+    let w = lit("w", &[d as i64, d as i64])?;
+    let mask = lit("mask", &[d as i64, d as i64])?;
+    let qmax = xla::Literal::vec1(&golden["qmax"]);
+
+    let result = exe.execute::<xla::Literal>(&[a, x, w, mask, qmax])?[0][0].to_literal_sync()?;
+    let (loss_l, ga_l) = result.to_tuple2()?;
+    let loss = loss_l.to_vec::<f32>()?[0];
+    let ga = ga_l.to_vec::<f32>()?;
+
+    let want_loss = golden["loss"][0];
+    println!("loss rust={loss} python={want_loss}");
+    if (loss - want_loss).abs() > 1e-5 {
+        bail!("loss mismatch");
+    }
+    let want_ga = &golden["ga"];
+    let mut max_diff = 0f32;
+    for (g, wg) in ga.iter().zip(want_ga) {
+        max_diff = max_diff.max((g - wg).abs());
+    }
+    println!("grad max|diff|={max_diff}");
+    if max_diff > 1e-4 {
+        bail!("grad mismatch");
+    }
+    println!("smoke_hlo OK");
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Tiny CLI substrate (clap is not vendored offline): `--key value` /
+//! `--flag` parsing plus the shared config-label grammar ("w3a16g128").
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::quant::QuantSpec;
+
+/// Parsed command line: subcommand + options.
+pub struct Cli {
+    pub cmd: String,
+    opts: HashMap<String, String>,
+}
+
+impl Cli {
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        if args.is_empty() {
+            bail!("no subcommand");
+        }
+        let cmd = args[0].clone();
+        let mut opts = HashMap::new();
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    opts.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    opts.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                bail!("unexpected positional argument {a:?}");
+            }
+        }
+        Ok(Cli { cmd, opts })
+    }
+
+    pub fn from_env() -> Result<Cli> {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        Cli::parse(&args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().expect(key)).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).map(|v| v.parse().expect(key)).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+}
+
+/// Parse a paper-notation config label: `w<bits>a<bits>[g<group>]`.
+pub fn parse_config(label: &str) -> Result<(QuantSpec, u32)> {
+    let rest = label
+        .strip_prefix('w')
+        .ok_or_else(|| anyhow::anyhow!("config must start with 'w': {label}"))?;
+    let apos = rest.find('a').ok_or_else(|| anyhow::anyhow!("missing 'a' in {label}"))?;
+    let wbits: u32 = rest[..apos].parse()?;
+    let rest = &rest[apos + 1..];
+    let (abits, group) = match rest.find('g') {
+        Some(g) => (rest[..g].parse()?, rest[g + 1..].parse()?),
+        None => (rest.parse()?, 0usize),
+    };
+    Ok((QuantSpec::new(wbits, group), abits))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_options_and_flags() {
+        let c = Cli::parse(&s(&["train", "--model", "opt-s1", "--all", "--steps", "10"])).unwrap();
+        assert_eq!(c.cmd, "train");
+        assert_eq!(c.get("model"), Some("opt-s1"));
+        assert!(c.flag("all"));
+        assert_eq!(c.usize_or("steps", 0), 10);
+        assert_eq!(c.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn config_labels_roundtrip() {
+        for (label, bits, abits, group) in [
+            ("w3a16", 3u32, 16u32, 0usize),
+            ("w3a16g128", 3, 16, 128),
+            ("w2a16g64", 2, 16, 64),
+            ("w4a4", 4, 4, 0),
+        ] {
+            let (spec, a) = parse_config(label).unwrap();
+            assert_eq!(spec.bits, bits, "{label}");
+            assert_eq!(a, abits, "{label}");
+            assert_eq!(spec.group, group, "{label}");
+            assert_eq!(spec.label(a), label);
+        }
+        assert!(parse_config("x4a4").is_err());
+    }
+}

@@ -1,0 +1,374 @@
+//! Per-block calibration: the Adam loop over the affine/shift/LWC
+//! learnables `phi`, driven by the AOT `calib_*` artifact (which returns
+//! the paper's Eq. 4 block-MSE loss and `d loss / d phi` with the Gradual
+//! Mask folded in).
+
+use anyhow::Result;
+
+use crate::coordinator::mask::MaskSchedule;
+use crate::coordinator::stability;
+use crate::coordinator::stream::SiteStats;
+use crate::model::merge::BlockTransforms;
+use crate::model::{Layout, ModelConfig};
+use crate::quant::QuantSpec;
+use crate::runtime::{Arg, ModelRuntime};
+use crate::tensor::Tensor;
+use crate::train::Adam;
+
+/// Calibration configuration (one quantization run).
+#[derive(Clone, Debug)]
+pub struct CalibOptions {
+    /// Weight quantization spec (bits + group size).
+    pub spec: QuantSpec,
+    /// Activation bits; 16 ⇒ weight-only mode, 4 ⇒ w?a4 mode.
+    pub act_bits: u32,
+    /// Target epochs `t` of the gradual mask.
+    pub epochs: usize,
+    /// Stability factor `alpha` (Eq. 6).
+    pub alpha: f32,
+    /// Adam LR on the affine entries.
+    pub lr: f32,
+    /// Adam LR on the LWC / shift entries.
+    pub lr_lwc: f32,
+    /// `false` ⇒ diagonal-only (the OmniQuant baseline / alpha→0 limit).
+    pub full_affine: bool,
+    /// `false` ⇒ whole band live from epoch 1 (Table 6 ablation).
+    pub gradual: bool,
+    /// Optional SDD re-projection after every epoch (extension).
+    pub project_sdd: bool,
+    /// Calibration segments (paper: 128).
+    pub n_calib: usize,
+    /// SmoothQuant init exponent for the diagonal.
+    pub sq_alpha: f32,
+    /// Numerical scheme of the final inverse+merge (paper Table 4).
+    pub prec: crate::model::merge::MergePrecision,
+    pub seed: u64,
+}
+
+impl CalibOptions {
+    pub fn affinequant(spec: QuantSpec, act_bits: u32) -> Self {
+        // `AQ_EPOCHS` / `AQ_NCALIB` scale every sweep (bench fast-mode).
+        let env_usize = |k: &str, d: usize| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        CalibOptions {
+            spec,
+            act_bits,
+            epochs: env_usize("AQ_EPOCHS", 10),
+            alpha: 0.1,
+            lr: 5e-3,
+            lr_lwc: 1e-2,
+            full_affine: true,
+            gradual: true,
+            project_sdd: false,
+            n_calib: env_usize("AQ_NCALIB", 128),
+            sq_alpha: 0.5,
+            prec: crate::model::merge::MergePrecision::F32InvF64,
+            seed: 1234,
+        }
+    }
+
+    /// OmniQuant = AffineQuant restricted to the diagonal (paper §3.2:
+    /// "as alpha approaches 0 ... equivalent to OmniQuant").
+    pub fn omniquant(spec: QuantSpec, act_bits: u32) -> Self {
+        CalibOptions { full_affine: false, ..Self::affinequant(spec, act_bits) }
+    }
+
+    pub fn weight_only(&self) -> bool {
+        self.act_bits >= 16
+    }
+
+    /// Manifest key of the phi layout / calib entry for this run.
+    pub fn mode_key(&self) -> String {
+        if self.weight_only() {
+            format!("w_g{}", self.spec.group)
+        } else {
+            "a4".to_string()
+        }
+    }
+
+    pub fn schedule(&self) -> MaskSchedule {
+        MaskSchedule {
+            alpha: self.alpha,
+            epochs: self.epochs,
+            full_affine: self.full_affine,
+            gradual: self.gradual,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        self.spec.label(self.act_bits)
+    }
+}
+
+/// Outcome of one block's optimization.
+pub struct BlockResult {
+    /// Mean Eq.-4 loss per epoch (Fig. 3 curves).
+    pub loss_curve: Vec<f64>,
+    /// Minimum SDD margin across sites per epoch (Fig. 7 evidence).
+    pub sdd_margins: Vec<f32>,
+    /// Final (masked) transforms, merge-ready.
+    pub transforms: BlockTransforms,
+    /// True if the loss went NaN (Table 5's collapse rows).
+    pub diverged: bool,
+    pub final_loss: f64,
+}
+
+/// SmoothQuant-style diagonal init: `s_j = actmax_j^a / wmax_j^(1-a)`,
+/// clamped for numerical sanity.
+pub fn sq_scale(actmax: &[f32], wmax: &[f32], a: f32) -> Vec<f32> {
+    actmax
+        .iter()
+        .zip(wmax)
+        .map(|(&x, &w)| {
+            let s = x.max(1e-5).powf(a) / w.max(1e-5).powf(1.0 - a);
+            s.clamp(1e-2, 1e2)
+        })
+        .collect()
+}
+
+/// Per-input-channel max |W| across all weights sharing a site.
+fn site_wmax(bl: &Layout, wb: &[f32], names: &[&str]) -> Vec<f32> {
+    let mut out: Vec<f32> = Vec::new();
+    for name in names {
+        let w = bl.tensor(wb, name);
+        let (din, dout) = w.dims2();
+        if out.is_empty() {
+            out = vec![0.0; din];
+        }
+        for r in 0..din {
+            for c in 0..dout {
+                out[r] = out[r].max(w.data[r * dout + c].abs());
+            }
+        }
+    }
+    out
+}
+
+/// Initialize phi: SmoothQuant scales on the diagonals, OS+ shifts, open
+/// LWC logits. The affine matrices start diagonal — strictly diagonally
+/// dominant by construction (Levy-Desplanques holds at epoch 0).
+pub fn init_phi(
+    cfg: &ModelConfig,
+    playout: &Layout,
+    bl: &Layout,
+    wb: &[f32],
+    stats: &SiteStats,
+    opts: &CalibOptions,
+) -> Vec<f32> {
+    let mut phi = vec![0.0f32; playout.size];
+    let opt_family = cfg.family == "opt";
+    let qkv_w = site_wmax(bl, wb, &["wq", "wk", "wv"]);
+    let fc1_names: &[&str] = if opt_family { &["w1"] } else { &["wg", "wu"] };
+    let fc1_w = site_wmax(bl, wb, fc1_names);
+    let out_w = site_wmax(bl, wb, &["wo"]);
+
+    let use_shift = !opts.weight_only() && opt_family && playout.has("delta_qkv");
+    let qkv_stats = &stats["x_qkv"];
+    let fc1_stats = &stats["x_fc1"];
+    let (qkv_act, fc1_act) = if use_shift {
+        (qkv_stats.shifted_absmax(), fc1_stats.shifted_absmax())
+    } else {
+        (qkv_stats.absmax.clone(), fc1_stats.absmax.clone())
+    };
+    let s_qkv = sq_scale(&qkv_act, &qkv_w, opts.sq_alpha);
+    let s_fc1 = sq_scale(&fc1_act, &fc1_w, opts.sq_alpha);
+    let s_out = sq_scale(&stats["x_ctx"].absmax, &out_w, opts.sq_alpha);
+
+    for (name, shape, _) in playout.entries.clone() {
+        let r = playout.range(&name);
+        match name.as_str() {
+            "A_qkv" => set_diag(&mut phi[r], shape[0], &s_qkv),
+            "A_fc1" => set_diag(&mut phi[r], shape[0], &s_fc1),
+            "a_qkv" => phi[r].copy_from_slice(&s_qkv),
+            "a_fc1" => phi[r].copy_from_slice(&s_fc1),
+            "A_out" => {
+                let (h, hd) = (shape[0], shape[1]);
+                for hi in 0..h {
+                    let s = r.start + hi * hd * hd;
+                    set_diag(&mut phi[s..s + hd * hd], hd, &s_out[hi * hd..(hi + 1) * hd]);
+                }
+            }
+            "delta_qkv" => phi[r].copy_from_slice(&qkv_stats.shift()),
+            "delta_fc1" => phi[r].copy_from_slice(&fc1_stats.shift()),
+            _ if name.starts_with("lwc_") => phi[r].fill(4.0), // sigmoid≈0.982
+            _ => panic!("init_phi: unknown entry {name}"),
+        }
+    }
+    phi
+}
+
+fn set_diag(a: &mut [f32], n: usize, vals: &[f32]) {
+    for i in 0..n {
+        a[i * n + i] = vals[i];
+    }
+}
+
+/// Per-element Adam LR scale: affine entries get `1`, LWC/shift entries
+/// get `lr_lwc / lr` (one Adam instance, two effective rates).
+fn lr_scales(playout: &Layout, opts: &CalibOptions) -> Vec<f32> {
+    let ratio = opts.lr_lwc / opts.lr;
+    let mut s = vec![1.0f32; playout.size];
+    for (name, _, _) in playout.entries.clone() {
+        if name.starts_with("lwc_") || name.starts_with("delta_") {
+            s[playout.range(&name)].fill(ratio);
+        }
+    }
+    s
+}
+
+/// Optimize one block's phi against (xq, yfp) calibration pairs.
+///
+/// `record_sdd` also measures the masked transform every epoch (a host-side
+/// matrix scan — cheap relative to the XLA step, but skippable).
+pub fn optimize_block(
+    rt: &ModelRuntime,
+    opts: &CalibOptions,
+    wb: &[f32],
+    xs: &[Tensor],
+    yfp: &[Tensor],
+    stats: &SiteStats,
+    record_sdd: bool,
+) -> Result<BlockResult> {
+    let playout = rt.phi_layouts[&opts.mode_key()].clone();
+    let entry = format!("calib_{}", opts.mode_key());
+    let mut phi = init_phi(&rt.cfg, &playout, &rt.block_layout, wb, stats, opts);
+    let sched = opts.schedule();
+    let mut adam = Adam::new(playout.size, opts.lr);
+    let scales = lr_scales(&playout, opts);
+    let qmax_w = [opts.spec.qmax()];
+    let qmax_a = [(1u64 << opts.act_bits.min(16)) as f32 - 1.0];
+
+    let mut loss_curve = Vec::with_capacity(opts.epochs);
+    let mut sdd_margins = Vec::new();
+    let mut diverged = false;
+
+    'epochs: for e in 1..=opts.epochs {
+        let mphi = sched.mphi(&playout, e);
+        let mut epoch_losses = Vec::with_capacity(xs.len());
+        for (x, y) in xs.iter().zip(yfp) {
+            let mut args = vec![
+                Arg::F32(&x.data),
+                Arg::F32(&y.data),
+                Arg::F32(wb),
+                Arg::F32(&phi),
+                Arg::F32(&mphi),
+                Arg::F32(&qmax_w),
+            ];
+            if !opts.weight_only() {
+                args.push(Arg::F32(&qmax_a));
+            }
+            let mut outs = rt.call(&entry, &args)?;
+            let grad = outs.remove(1);
+            let loss = outs.remove(0).data[0] as f64;
+            if !loss.is_finite() {
+                diverged = true;
+                loss_curve.push(f64::NAN);
+                break 'epochs;
+            }
+            adam.step_elem(&mut phi, &grad.data, &scales);
+            epoch_losses.push(loss);
+        }
+        loss_curve.push(crate::util::mean(&epoch_losses));
+        if opts.project_sdd {
+            stability::project_phi(&playout, &mut phi, 1e-3);
+        }
+        if record_sdd {
+            sdd_margins.push(stability::measure(&playout, &phi, &mphi_final(&sched, &playout, e)).min_margin());
+        }
+    }
+
+    let mphi = mphi_final(&sched, &playout, opts.epochs);
+    let transforms = transforms_from_phi(&rt.cfg, &playout, &phi, &mphi, opts);
+    let final_loss = *loss_curve.last().unwrap_or(&f64::NAN);
+    Ok(BlockResult { loss_curve, sdd_margins, transforms, diverged, final_loss })
+}
+
+fn mphi_final(sched: &MaskSchedule, playout: &Layout, e: usize) -> Vec<f32> {
+    sched.mphi(playout, e)
+}
+
+/// Extract merge-ready transforms from the raw phi: the *effective*
+/// transform the graph optimized is `phi ∘ GM_t`, so the deployed matrices
+/// carry the final mask (off-diagonals damped by alpha).
+pub fn transforms_from_phi(
+    cfg: &ModelConfig,
+    playout: &Layout,
+    phi: &[f32],
+    mphi: &[f32],
+    opts: &CalibOptions,
+) -> BlockTransforms {
+    let masked = |name: &str| -> Tensor {
+        let r = playout.range(name);
+        let data: Vec<f32> = phi[r.clone()].iter().zip(&mphi[r]).map(|(p, m)| p * m).collect();
+        Tensor::new(playout.shape(name).to_vec(), data)
+    };
+    let mut t = BlockTransforms::identity();
+    if playout.has("A_qkv") {
+        t.a_qkv = Some(masked("A_qkv"));
+    }
+    if playout.has("A_fc1") {
+        t.a_fc1 = Some(masked("A_fc1"));
+    }
+    if playout.has("A_out") {
+        t.a_out = Some(masked("A_out"));
+    }
+    if playout.has("a_qkv") {
+        let a = phi[playout.range("a_qkv")].to_vec();
+        let d = if playout.has("delta_qkv") {
+            phi[playout.range("delta_qkv")].to_vec()
+        } else {
+            vec![0.0; a.len()]
+        };
+        t.diag_qkv = Some((a, d));
+    }
+    if playout.has("a_fc1") {
+        let a = phi[playout.range("a_fc1")].to_vec();
+        let d = if playout.has("delta_fc1") {
+            phi[playout.range("delta_fc1")].to_vec()
+        } else {
+            vec![0.0; a.len()]
+        };
+        t.diag_fc1 = Some((a, d));
+    }
+    for (name, _, _) in playout.entries.clone() {
+        if name.starts_with("lwc_") {
+            t.lwc.insert(name.clone(), phi[playout.range(&name)].to_vec());
+        }
+    }
+    let _ = (cfg, opts);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sq_scale_formula_and_clamp() {
+        let s = sq_scale(&[4.0, 1e-9, 1e9], &[1.0, 1.0, 1e-9], 0.5);
+        assert!((s[0] - 2.0).abs() < 1e-6);
+        assert_eq!(s[1], 1e-2); // clamped low
+        assert_eq!(s[2], 1e2); // clamped high
+    }
+
+    #[test]
+    fn options_mode_keys() {
+        let w = CalibOptions::affinequant(QuantSpec::new(3, 128), 16);
+        assert_eq!(w.mode_key(), "w_g128");
+        assert!(w.weight_only());
+        let a = CalibOptions::affinequant(QuantSpec::new(4, 0), 4);
+        assert_eq!(a.mode_key(), "a4");
+        assert!(!a.weight_only());
+        assert_eq!(a.label(), "w4a4");
+        let o = CalibOptions::omniquant(QuantSpec::new(4, 0), 4);
+        assert!(!o.full_affine);
+    }
+
+    #[test]
+    fn set_diag_writes_diagonal_only() {
+        let mut a = vec![0.0f32; 9];
+        set_diag(&mut a, 3, &[1.0, 2.0, 3.0]);
+        assert_eq!(a, vec![1.0, 0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, 3.0]);
+    }
+}

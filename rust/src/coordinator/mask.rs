@@ -1,0 +1,180 @@
+//! Gradual Mask (paper Eq. 6): the learning-rate regulator that keeps the
+//! affine matrix strictly diagonally dominant during optimization.
+//!
+//! `GM_ij = 1` on the diagonal, `alpha` within the epoch-dependent band
+//! `0 < |i-j| <= e/t * size`, `0` outside. The mask is element-wise
+//! multiplied with `A` *inside* the L2 calibration graph (`phi* = phi ∘
+//! mphi`), so the returned gradient automatically carries the Eq. 9
+//! damping; this module only owns the schedule and the mask layout.
+
+use crate::model::Layout;
+
+/// Mask schedule parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MaskSchedule {
+    /// Stability factor `alpha` (paper Table 5 sweeps 1e0..1e-8).
+    pub alpha: f32,
+    /// Target epochs `t`.
+    pub epochs: usize,
+    /// `false` ⇒ diagonal-only forever (OmniQuant-equivalent, alpha→0).
+    pub full_affine: bool,
+    /// `false` ⇒ no gradual release: the whole band opens at epoch 1
+    /// (paper Table 6 "Without Gradual" ablation).
+    pub gradual: bool,
+}
+
+impl MaskSchedule {
+    /// Band half-width at epoch `e` (1-based) for a matrix of size `n`.
+    pub fn band(&self, e: usize, n: usize) -> f32 {
+        if !self.full_affine {
+            return 0.0;
+        }
+        if !self.gradual {
+            return n as f32;
+        }
+        (e.min(self.epochs) as f32 / self.epochs as f32) * n as f32
+    }
+
+    /// Fill a square-matrix mask for epoch `e` into `out` (row-major n×n).
+    pub fn fill_square(&self, e: usize, n: usize, out: &mut [f32]) {
+        let band = self.band(e, n);
+        for i in 0..n {
+            for j in 0..n {
+                let dist = (i as f32 - j as f32).abs();
+                out[i * n + j] = if i == j {
+                    1.0
+                } else if dist <= band {
+                    self.alpha
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+
+    /// Build the full `mphi` vector for one calibration phi layout at epoch
+    /// `e`. Full affine entries (`A_qkv`, `A_fc1`) get the banded mask over
+    /// their own size; per-head `A_out` gets it per head (paper §3.2:
+    /// "within the attention module we apply a gradual mask in each
+    /// attention head"); every other learnable (diagonal transforms,
+    /// shifts, LWC logits) is always live (mask 1).
+    pub fn mphi(&self, playout: &Layout, e: usize) -> Vec<f32> {
+        let mut m = vec![1.0f32; playout.size];
+        for (name, shape, _) in playout.entries.clone() {
+            match name.as_str() {
+                "A_qkv" | "A_fc1" => {
+                    let n = shape[0];
+                    self.fill_square(e, n, &mut m[playout.range(&name)]);
+                }
+                "A_out" => {
+                    let (h, hd) = (shape[0], shape[1]);
+                    let r = playout.range(&name);
+                    let base = r.start;
+                    for hi in 0..h {
+                        self.fill_square(e, hd, &mut m[base + hi * hd * hd..base + (hi + 1) * hd * hd]);
+                    }
+                }
+                _ => {}
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_layout;
+
+    fn sched(alpha: f32, gradual: bool) -> MaskSchedule {
+        MaskSchedule { alpha, epochs: 10, full_affine: true, gradual }
+    }
+
+    #[test]
+    fn band_widens_linearly() {
+        let s = sched(0.1, true);
+        assert_eq!(s.band(1, 100), 10.0);
+        assert_eq!(s.band(5, 100), 50.0);
+        assert_eq!(s.band(10, 100), 100.0);
+        assert_eq!(s.band(99, 100), 100.0); // clamped past t
+    }
+
+    #[test]
+    fn square_mask_values() {
+        let s = sched(0.25, true);
+        let mut m = vec![0.0; 16];
+        s.fill_square(2, 4, &mut m); // band = 2/10*4 = 0.8 -> only diagonal
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert_eq!(m[i * 4 + j], want, "({i},{j})");
+            }
+        }
+        s.fill_square(10, 4, &mut m); // full band
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.25 };
+                assert_eq!(m[i * 4 + j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn diag_only_mode_never_opens() {
+        let s = MaskSchedule { alpha: 0.5, epochs: 10, full_affine: false, gradual: true };
+        let mut m = vec![9.0; 9];
+        s.fill_square(10, 3, &mut m);
+        assert_eq!(m, vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn no_gradual_opens_immediately() {
+        let s = sched(0.3, false);
+        let mut m = vec![0.0; 9];
+        s.fill_square(1, 3, &mut m);
+        assert!(m.iter().filter(|&&v| v == 0.3).count() == 6);
+    }
+
+    #[test]
+    fn mphi_layout_rules() {
+        let pl = test_layout(vec![
+            ("A_qkv", vec![4, 4]),
+            ("A_out", vec![2, 2, 2]),
+            ("a_fc1", vec![4]),
+            ("lwc_g_wq", vec![1, 4]),
+        ]);
+        let s = sched(0.5, true);
+        let m = s.mphi(&pl, 10);
+        // A_qkv: diag 1, off 0.5
+        assert_eq!(m[0], 1.0);
+        assert_eq!(m[1], 0.5);
+        // A_out head 0: 2x2 per head
+        let r = pl.range("A_out");
+        assert_eq!(m[r.start], 1.0);
+        assert_eq!(m[r.start + 1], 0.5);
+        assert_eq!(m[r.start + 3], 1.0);
+        // vectors + lwc all ones
+        assert!(m[pl.range("a_fc1")].iter().all(|&v| v == 1.0));
+        assert!(m[pl.range("lwc_g_wq")].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn mask_never_writes_outside_band() {
+        // property: entries with |i-j| > band are exactly zero at every epoch
+        let s = sched(0.9, true);
+        for e in 1..=10 {
+            let n = 32;
+            let mut m = vec![0.0; n * n];
+            s.fill_square(e, n, &mut m);
+            let band = s.band(e, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let dist = (i as f32 - j as f32).abs();
+                    if dist > band {
+                        assert_eq!(m[i * n + j], 0.0);
+                    }
+                }
+            }
+        }
+    }
+}

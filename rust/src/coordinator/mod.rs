@@ -1,0 +1,18 @@
+//! The AffineQuant coordinator — the paper's contribution, orchestrated.
+//!
+//! * [`mask`] — the Gradual Mask schedule (paper Eq. 6-9).
+//! * [`stability`] — SDD margin monitoring + optional projection
+//!   (Levy-Desplanques invariant, Appendix A.2 / Fig. 7).
+//! * [`stream`] — calibration activation streams + per-site statistics.
+//! * [`block_opt`] — the per-block Adam loop over the `calib_*` artifacts.
+//! * [`pipeline`] — whole-model calibration producing a merged quantized
+//!   [`crate::model::ParamStore`].
+
+pub mod block_opt;
+pub mod mask;
+pub mod pipeline;
+pub mod stability;
+pub mod stream;
+
+pub use block_opt::CalibOptions;
+pub use pipeline::{calibrate, CalibReport};

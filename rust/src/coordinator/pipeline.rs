@@ -1,0 +1,102 @@
+//! Whole-model calibration pipeline: block-by-block AffineQuant (or the
+//! diagonal-only OmniQuant mode) over a trained checkpoint, producing a
+//! merged, quantized [`ParamStore`] that evaluates under the standard
+//! `block_fp` / `block_a4` serving graphs with zero extra ops.
+
+use anyhow::Result;
+
+use crate::coordinator::block_opt::{optimize_block, CalibOptions};
+use crate::coordinator::stream;
+use crate::model::merge::{merge_block_a4, merge_block_weight_only};
+use crate::model::ParamStore;
+use crate::runtime::ModelRuntime;
+use crate::util::Timer;
+
+/// Per-block record kept for the figure benches.
+pub struct BlockRecord {
+    pub loss_curve: Vec<f64>,
+    pub sdd_margins: Vec<f32>,
+    pub final_loss: f64,
+    pub diverged: bool,
+    pub secs: f64,
+}
+
+pub struct CalibReport {
+    pub blocks: Vec<BlockRecord>,
+    pub total_secs: f64,
+}
+
+impl CalibReport {
+    /// Loss of the last transformer block — the paper's model-quality proxy
+    /// (Figs. 3/5/6, Pearson r ≈ 0.95 vs PPL).
+    pub fn last_block_loss(&self) -> f64 {
+        self.blocks.last().map(|b| b.final_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn any_diverged(&self) -> bool {
+        self.blocks.iter().any(|b| b.diverged)
+    }
+}
+
+/// Run the full calibration: returns the merged quantized model plus the
+/// per-block optimization records. `record_sdd` additionally traces SDD
+/// margins per epoch (Fig. 7).
+pub fn calibrate(
+    rt: &ModelRuntime,
+    fp: &ParamStore,
+    opts: &CalibOptions,
+    record_sdd: bool,
+) -> Result<(ParamStore, CalibReport)> {
+    let t_all = Timer::start();
+    let cfg = &rt.cfg;
+    let batches = stream::calib_batches(cfg, opts.n_calib, opts.seed);
+    let mut xs = stream::embed_stream(rt, fp.globals(), &batches)?;
+
+    let mut merged = fp.clone();
+    let mut records = Vec::with_capacity(cfg.n_layers);
+    let act_qmax =
+        if opts.weight_only() { None } else { Some((1u64 << opts.act_bits) as f32 - 1.0) };
+
+    for i in 0..cfg.n_layers {
+        let t = Timer::start();
+        let wb = fp.block(i).to_vec();
+        // FP targets + init statistics from the current quantized stream.
+        let (yfp, stats) = stream::capture_block(rt, &wb, &xs)?;
+        let res = optimize_block(rt, opts, &wb, &xs, &yfp, &stats, record_sdd)?;
+
+        // Merge the learned transforms into this block's parameters.
+        let bl = rt.block_layout.clone();
+        let wbm = merged.block_mut(i);
+        if opts.weight_only() {
+            merge_block_weight_only(&bl, wbm, &res.transforms, opts.spec, cfg.n_heads, opts.prec);
+        } else {
+            merge_block_a4(&bl, wbm, &res.transforms, opts.spec, cfg.n_heads, opts.prec);
+        }
+
+        // Advance the calibration stream through the quantized block.
+        let wbm = merged.block(i).to_vec();
+        stream::advance(rt, &wbm, &mut xs, act_qmax)?;
+
+        let secs = t.secs();
+        if std::env::var("AQ_QUIET").is_err() {
+            println!(
+                "[calib {} {}] block {}/{} loss {:.3e}{} ({:.1}s)",
+                cfg.name,
+                opts.label(),
+                i + 1,
+                cfg.n_layers,
+                res.final_loss,
+                if res.diverged { " DIVERGED" } else { "" },
+                secs
+            );
+        }
+        records.push(BlockRecord {
+            loss_curve: res.loss_curve,
+            sdd_margins: res.sdd_margins,
+            final_loss: res.final_loss,
+            diverged: res.diverged,
+            secs,
+        });
+    }
+    Ok((merged, CalibReport { blocks: records, total_secs: t_all.secs() }))
+}

@@ -1,0 +1,180 @@
+//! Calibration activation streams + per-site statistics.
+//!
+//! PTQ calibration walks the model block by block: the running stream `x`
+//! holds each calibration batch's input to the *current* block, propagated
+//! through the already-quantized prefix (OmniQuant protocol — the
+//! optimization target for block `i` is `f_i^fp(x)` computed from the same
+//! quantized-stream input, paper Eq. 4). One `block_capture` pass per batch
+//! yields both the FP target and the four linear-input captures that seed
+//! the transform initialization (SmoothQuant scales, OS+ shifts) and the
+//! GPTQ/AWQ baselines.
+
+use anyhow::Result;
+use std::collections::HashMap;
+
+use crate::data::{self, CorpusKind};
+use crate::rngx::Pcg32;
+use crate::runtime::ModelRuntime;
+use crate::tensor::Tensor;
+
+/// Names of the captured linear inputs, in `block_capture` output order.
+pub const CAPTURE_NAMES: [&str; 4] = ["x_qkv", "x_ctx", "x_fc1", "x_fc2"];
+
+/// Per-channel statistics of one site's input activations, accumulated
+/// over all calibration batches.
+#[derive(Clone, Debug)]
+pub struct ChannelStats {
+    pub absmax: Vec<f32>,
+    pub min: Vec<f32>,
+    pub max: Vec<f32>,
+}
+
+impl ChannelStats {
+    fn new(d: usize) -> Self {
+        ChannelStats {
+            absmax: vec![0.0; d],
+            min: vec![f32::INFINITY; d],
+            max: vec![f32::NEG_INFINITY; d],
+        }
+    }
+
+    fn update(&mut self, x2d: &Tensor) {
+        let (mn, mx) = x2d.col_min_max();
+        for j in 0..self.absmax.len() {
+            self.min[j] = self.min[j].min(mn[j]);
+            self.max[j] = self.max[j].max(mx[j]);
+            self.absmax[j] = self.absmax[j].max(mn[j].abs()).max(mx[j].abs());
+        }
+    }
+
+    /// OS+ shift init: channel midpoint.
+    pub fn shift(&self) -> Vec<f32> {
+        self.min
+            .iter()
+            .zip(&self.max)
+            .map(|(&a, &b)| (a + b) / 2.0)
+            .collect()
+    }
+
+    /// Per-channel |x| range after shifting by `shift()`.
+    pub fn shifted_absmax(&self) -> Vec<f32> {
+        self.min
+            .iter()
+            .zip(&self.max)
+            .map(|(&a, &b)| (b - a) / 2.0)
+            .collect()
+    }
+}
+
+/// Stats for all four capture sites of one block.
+pub type SiteStats = HashMap<&'static str, ChannelStats>;
+
+/// Flatten (B, S, d) to a (B·S, d) row view for column statistics.
+pub fn rows2d(x: &Tensor) -> Tensor {
+    let d = *x.shape.last().unwrap();
+    Tensor::new(vec![x.numel() / d, d], x.data.clone())
+}
+
+/// The calibration token batches (fixed seed → fixed dataset, as in the
+/// paper's "128 segments of 2048 tokens from the WikiText2 train set").
+pub fn calib_batches(
+    cfg: &crate::model::ModelConfig,
+    n_segments: usize,
+    seed: u64,
+) -> Vec<Vec<i32>> {
+    let corpus = data::gen_corpus(CorpusKind::Wt2s, 2_000_000, 1);
+    let mut rng = Pcg32::seeded(seed);
+    let segs = data::sample_segments(&corpus, cfg.seq, n_segments, &mut rng);
+    segs.chunks(cfg.batch)
+        .filter(|c| c.len() == cfg.batch)
+        .map(|c| data::to_batch(c).0)
+        .collect()
+}
+
+/// Embed every calibration batch: the initial stream.
+pub fn embed_stream(rt: &ModelRuntime, globals: &[f32], batches: &[Vec<i32>]) -> Result<Vec<Tensor>> {
+    batches.iter().map(|b| rt.embed(b, globals)).collect()
+}
+
+/// One block_capture sweep: returns the FP block outputs (the optimization
+/// targets) and the accumulated per-site channel statistics.
+pub fn capture_block(
+    rt: &ModelRuntime,
+    wb: &[f32],
+    xs: &[Tensor],
+) -> Result<(Vec<Tensor>, SiteStats)> {
+    let mut stats: SiteStats = HashMap::new();
+    let mut yfp = Vec::with_capacity(xs.len());
+    for x in xs {
+        let mut outs = rt.block_capture(x, wb)?;
+        // outs: [y, x_qkv, x_ctx, x_fc1, x_fc2]
+        for (i, name) in CAPTURE_NAMES.iter().enumerate().rev() {
+            let t = outs.remove(1 + i);
+            let r = rows2d(&t);
+            let d = r.shape[1];
+            stats.entry(name).or_insert_with(|| ChannelStats::new(d)).update(&r);
+        }
+        yfp.push(outs.remove(0));
+    }
+    Ok((yfp, stats))
+}
+
+/// Visit the raw captures batch-by-batch (GPTQ Hessian accumulation etc.)
+/// without retaining them all in memory.
+pub fn for_each_capture<F: FnMut(&[Tensor; 4])>(
+    rt: &ModelRuntime,
+    wb: &[f32],
+    xs: &[Tensor],
+    mut f: F,
+) -> Result<()> {
+    for x in xs {
+        let mut outs = rt.block_capture(x, wb)?;
+        let x_fc2 = outs.remove(4);
+        let x_fc1 = outs.remove(3);
+        let x_ctx = outs.remove(2);
+        let x_qkv = outs.remove(1);
+        f(&[x_qkv, x_ctx, x_fc1, x_fc2]);
+    }
+    Ok(())
+}
+
+/// Advance the stream through a (merged, quantized) block.
+pub fn advance(
+    rt: &ModelRuntime,
+    wb: &[f32],
+    xs: &mut [Tensor],
+    act_qmax: Option<f32>,
+) -> Result<()> {
+    for x in xs.iter_mut() {
+        *x = match act_qmax {
+            Some(q) => rt.block_a4(x, wb, q)?,
+            None => rt.block_fp(x, wb)?,
+        };
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_stats_accumulate() {
+        let mut s = ChannelStats::new(2);
+        s.update(&Tensor::new(vec![2, 2], vec![1.0, -2.0, 3.0, 0.5]));
+        s.update(&Tensor::new(vec![1, 2], vec![-4.0, 0.0]));
+        assert_eq!(s.absmax, vec![4.0, 2.0]);
+        assert_eq!(s.min, vec![-4.0, -2.0]);
+        assert_eq!(s.max, vec![3.0, 0.5]);
+        assert_eq!(s.shift(), vec![-0.5, -0.75]);
+        assert_eq!(s.shifted_absmax(), vec![3.5, 1.25]);
+    }
+
+    #[test]
+    fn rows2d_flattens_leading_dims() {
+        let x = Tensor::new(vec![2, 3, 4], (0..24).map(|v| v as f32).collect());
+        let r = rows2d(&x);
+        assert_eq!(r.shape, vec![6, 4]);
+        assert_eq!(r.data[4], 4.0);
+    }
+}

@@ -1,0 +1,325 @@
+//! Synthetic corpora + byte-level tokenizer (substitute for WikiText2 / PTB
+//! / C4, which are not available offline — see DESIGN.md §2).
+//!
+//! Three corpus flavors share a syllable-built vocabulary with Zipfian word
+//! frequencies and an SVO sentence grammar, but differ in markup, casing,
+//! and topic distribution — reproducing the paper's "calibrate on
+//! WikiText2, evaluate on WikiText2/PTB/C4" distribution shifts. The
+//! grammar embeds learnable regularities (function-word bigrams, bracket
+//! pairs, repeated-phrase structure) that the zero-shot tasks probe.
+
+use crate::rngx::Pcg32;
+
+pub const VOCAB_SIZE: usize = 256; // byte-level
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CorpusKind {
+    /// WikiText2-like: section headers, mixed punctuation, full vocab.
+    Wt2s,
+    /// PTB-like: lowercase, digits replaced by `N`, reduced vocab.
+    Ptbs,
+    /// C4-like: web noise (url-ish tokens), shifted topic distribution.
+    C4s,
+}
+
+impl CorpusKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorpusKind::Wt2s => "wt2s",
+            CorpusKind::Ptbs => "ptbs",
+            CorpusKind::C4s => "c4s",
+        }
+    }
+
+    pub fn all() -> [CorpusKind; 3] {
+        [CorpusKind::Wt2s, CorpusKind::Ptbs, CorpusKind::C4s]
+    }
+}
+
+// ------------------------------------------------------------ vocabulary
+
+const ONSETS: [&str; 12] = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t"];
+const NUCLEI: [&str; 6] = ["a", "e", "i", "o", "u", "ai"];
+const CODAS: [&str; 8] = ["", "n", "r", "s", "t", "l", "nd", "st"];
+
+/// Deterministic synthetic content vocabulary, grouped by syntactic role.
+pub struct Vocab {
+    pub nouns: Vec<String>,
+    pub verbs: Vec<String>,
+    pub adjs: Vec<String>,
+}
+
+impl Vocab {
+    pub fn build(seed: u64) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let mut word = |syll: usize, suffix: &str| -> String {
+            let mut w = String::new();
+            for _ in 0..syll {
+                w.push_str(ONSETS[rng.below(ONSETS.len())]);
+                w.push_str(NUCLEI[rng.below(NUCLEI.len())]);
+                w.push_str(CODAS[rng.below(CODAS.len())]);
+            }
+            w.push_str(suffix);
+            w
+        };
+        let nouns = (0..60).map(|_| word(2, "")).collect();
+        let verbs = (0..40).map(|i| word(1 + (i % 2), "s")).collect();
+        let adjs = (0..30).map(|_| word(2, "y")).collect();
+        Vocab { nouns, verbs, adjs }
+    }
+}
+
+/// Zipfian index sampler over [0, n), optionally shifted to model a
+/// different "topic" distribution (C4 flavor).
+fn zipf(rng: &mut Pcg32, n: usize, shift: usize) -> usize {
+    let weights: f64 = (1..=n).map(|i| 1.0 / i as f64).sum();
+    let mut x = rng.uniform() * weights;
+    for i in 1..=n {
+        x -= 1.0 / i as f64;
+        if x <= 0.0 {
+            return (i - 1 + shift) % n;
+        }
+    }
+    n - 1
+}
+
+// --------------------------------------------------------------- grammar
+
+struct Style {
+    lowercase: bool,
+    headers: bool,
+    urls: bool,
+    digits_as_n: bool,
+    topic_shift: usize,
+}
+
+impl Style {
+    fn of(kind: CorpusKind) -> Style {
+        match kind {
+            CorpusKind::Wt2s => Style {
+                lowercase: false,
+                headers: true,
+                urls: false,
+                digits_as_n: false,
+                topic_shift: 0,
+            },
+            CorpusKind::Ptbs => Style {
+                lowercase: true,
+                headers: false,
+                urls: false,
+                digits_as_n: true,
+                topic_shift: 7,
+            },
+            CorpusKind::C4s => Style {
+                lowercase: false,
+                headers: false,
+                urls: true,
+                digits_as_n: false,
+                topic_shift: 19,
+            },
+        }
+    }
+}
+
+/// One sentence from the SVO grammar. Also used by the zero-shot task
+/// generators (eval::zeroshot), hence public.
+pub fn sentence(vocab: &Vocab, rng: &mut Pcg32, topic_shift: usize) -> String {
+    let noun = |rng: &mut Pcg32| vocab.nouns[zipf(rng, vocab.nouns.len(), topic_shift)].clone();
+    let verb = |rng: &mut Pcg32| vocab.verbs[zipf(rng, vocab.verbs.len(), topic_shift)].clone();
+    let adj = |rng: &mut Pcg32| vocab.adjs[zipf(rng, vocab.adjs.len(), topic_shift)].clone();
+
+    let mut parts: Vec<String> = vec!["the".into()];
+    if rng.uniform() < 0.4 {
+        parts.push(adj(rng));
+    }
+    parts.push(noun(rng));
+    // optional parenthesized aside — teaches bracket closing
+    if rng.uniform() < 0.15 {
+        parts.push("(".into());
+        parts.push("of".into());
+        parts.push("the".into());
+        parts.push(noun(rng));
+        parts.push(")".into());
+    }
+    parts.push(verb(rng));
+    parts.push(if rng.uniform() < 0.5 { "the".into() } else { "a".into() });
+    if rng.uniform() < 0.3 {
+        parts.push(adj(rng));
+    }
+    parts.push(noun(rng));
+    if rng.uniform() < 0.25 {
+        parts.push(["in", "of", "to", "with"][rng.below(4)].into());
+        parts.push("the".into());
+        parts.push(noun(rng));
+    }
+    // occasional repeated-phrase structure — teaches copying
+    if rng.uniform() < 0.1 {
+        parts.push("and".into());
+        let n = parts.len();
+        parts.push(parts[n - 2].clone());
+        parts.push(parts[n - 1].clone());
+    }
+    parts.join(" ")
+}
+
+/// Generate `n_bytes` of corpus text.
+pub fn gen_corpus(kind: CorpusKind, n_bytes: usize, seed: u64) -> Vec<u8> {
+    let vocab = Vocab::build(1234); // shared vocabulary across flavors
+    let style = Style::of(kind);
+    let mut rng = Pcg32::new(seed, kind as u64 + 1);
+    let mut out = String::with_capacity(n_bytes + 256);
+    let mut section = 1;
+    while out.len() < n_bytes {
+        if style.headers && rng.uniform() < 0.02 {
+            out.push_str(&format!("\n= Section {} =\n", section));
+            section += 1;
+        }
+        if style.urls && rng.uniform() < 0.05 {
+            let host = &vocab.nouns[rng.below(vocab.nouns.len())];
+            out.push_str(&format!("http://{}.net ", host));
+        }
+        let mut s = sentence(&vocab, &mut rng, style.topic_shift);
+        if rng.uniform() < 0.12 {
+            let year = 1900 + rng.below(120);
+            s.push_str(&format!(" in {}", year));
+        }
+        if style.digits_as_n {
+            s = s.chars().map(|c| if c.is_ascii_digit() { 'N' } else { c }).collect();
+        }
+        let mut s = if style.lowercase {
+            s.to_lowercase()
+        } else {
+            // capitalize sentence start
+            let mut cs = s.chars();
+            match cs.next() {
+                Some(f) => f.to_uppercase().collect::<String>() + cs.as_str(),
+                None => s,
+            }
+        };
+        s.push_str(if rng.uniform() < 0.9 { ". " } else { "; " });
+        out.push_str(&s);
+        if rng.uniform() < 0.08 {
+            out.push('\n');
+        }
+    }
+    out.truncate(n_bytes);
+    out.into_bytes()
+}
+
+// ---------------------------------------------------------------- sampling
+
+/// Calibration/eval segment: `seq + 1` bytes so input/target shift by one.
+pub fn sample_segments(corpus: &[u8], seq: usize, n: usize, rng: &mut Pcg32) -> Vec<Vec<u8>> {
+    assert!(corpus.len() > seq + 1);
+    (0..n)
+        .map(|_| {
+            let off = rng.below(corpus.len() - seq - 1);
+            corpus[off..off + seq + 1].to_vec()
+        })
+        .collect()
+}
+
+/// Sequential non-overlapping eval segments (deterministic PPL protocol).
+pub fn eval_segments(corpus: &[u8], seq: usize, max_n: usize) -> Vec<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut off = 0;
+    while off + seq + 1 <= corpus.len() && out.len() < max_n {
+        out.push(corpus[off..off + seq + 1].to_vec());
+        off += seq;
+    }
+    out
+}
+
+/// Segments -> (tokens, targets) i32 batch of shape (b, seq) each.
+pub fn to_batch(segments: &[Vec<u8>]) -> (Vec<i32>, Vec<i32>) {
+    let seq = segments[0].len() - 1;
+    let mut toks = Vec::with_capacity(segments.len() * seq);
+    let mut tgts = Vec::with_capacity(segments.len() * seq);
+    for s in segments {
+        assert_eq!(s.len(), seq + 1);
+        toks.extend(s[..seq].iter().map(|&b| b as i32));
+        tgts.extend(s[1..].iter().map(|&b| b as i32));
+    }
+    (toks, tgts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = gen_corpus(CorpusKind::Wt2s, 4096, 1);
+        let b = gen_corpus(CorpusKind::Wt2s, 4096, 1);
+        assert_eq!(a, b);
+        let c = gen_corpus(CorpusKind::Wt2s, 4096, 2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn flavors_differ_but_share_vocab() {
+        let w = gen_corpus(CorpusKind::Wt2s, 20_000, 1);
+        let p = gen_corpus(CorpusKind::Ptbs, 20_000, 1);
+        let c = gen_corpus(CorpusKind::C4s, 20_000, 1);
+        assert_ne!(w, p);
+        let p_str = String::from_utf8(p).unwrap();
+        assert!(p_str.chars().all(|ch| !ch.is_ascii_uppercase() || ch == 'N'),
+            "ptbs must be lowercase (except N)");
+        assert!(String::from_utf8(c).unwrap().contains("http://"));
+        assert!(String::from_utf8(w.clone()).unwrap().contains("= Section"));
+    }
+
+    #[test]
+    fn corpus_is_ascii_and_exact_len() {
+        for kind in CorpusKind::all() {
+            let c = gen_corpus(kind, 10_000, 3);
+            assert_eq!(c.len(), 10_000);
+            assert!(c.iter().all(|&b| b < 128), "{:?}", kind);
+        }
+    }
+
+    #[test]
+    fn corpus_has_structure() {
+        // function words must dominate — that's what makes it learnable
+        let c = String::from_utf8(gen_corpus(CorpusKind::Wt2s, 50_000, 4)).unwrap();
+        let the_count = c.matches(" the ").count();
+        assert!(the_count > 200, "{the_count}");
+        // bracket balance within tolerance
+        let open = c.matches('(').count() as i64;
+        let close = c.matches(')').count() as i64;
+        assert!((open - close).abs() <= 1, "{open} vs {close}");
+    }
+
+    #[test]
+    fn segment_sampling() {
+        let c = gen_corpus(CorpusKind::Wt2s, 10_000, 5);
+        let mut rng = Pcg32::seeded(0);
+        let segs = sample_segments(&c, 128, 8, &mut rng);
+        assert_eq!(segs.len(), 8);
+        assert!(segs.iter().all(|s| s.len() == 129));
+        let (toks, tgts) = to_batch(&segs);
+        assert_eq!(toks.len(), 8 * 128);
+        // target is input shifted by one
+        assert_eq!(toks[1], tgts[0]);
+    }
+
+    #[test]
+    fn eval_segments_are_disjoint_and_ordered() {
+        let c = gen_corpus(CorpusKind::Ptbs, 10_000, 6);
+        let segs = eval_segments(&c, 128, 1000);
+        assert!(segs.len() >= 70);
+        assert_eq!(&c[..129], &segs[0][..]);
+        assert_eq!(&c[128..257], &segs[1][..]);
+    }
+
+    #[test]
+    fn sentences_are_parseable() {
+        let vocab = Vocab::build(1234);
+        let mut rng = Pcg32::seeded(9);
+        for _ in 0..50 {
+            let s = sentence(&vocab, &mut rng, 0);
+            assert!(s.starts_with("the "));
+            assert!(s.split(' ').count() >= 4);
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Evaluation harnesses: perplexity over the three corpora, the six
+//! synthetic zero-shot tasks (paper Table 2 protocol: pick the candidate
+//! continuation with the higher log-probability), and the correlation
+//! statistics behind Figs. 5/6.
+
+pub mod zeroshot;
+
+use anyhow::Result;
+
+use crate::data::{self, CorpusKind};
+use crate::model::ParamStore;
+use crate::runtime::ModelRuntime;
+use crate::tensor::Tensor;
+
+/// Forward a token batch through embed + all blocks. `act_qmax` selects the
+/// serving graph: None ⇒ `block_fp`, Some ⇒ `block_a4` (per-token dynamic
+/// activation fake-quant at the four linear inputs).
+pub fn forward_hidden(
+    rt: &ModelRuntime,
+    ps: &ParamStore,
+    tokens: &[i32],
+    act_qmax: Option<f32>,
+) -> Result<Tensor> {
+    let mut h = rt.embed(tokens, ps.globals())?;
+    for i in 0..ps.cfg.n_layers {
+        h = match act_qmax {
+            Some(q) => rt.block_a4(&h, ps.block(i), q)?,
+            None => rt.block_fp(&h, ps.block(i))?,
+        };
+    }
+    Ok(h)
+}
+
+/// Activation qmax for a bit-width (None ⇒ FP activations).
+pub fn act_qmax(act_bits: u32) -> Option<f32> {
+    if act_bits >= 16 {
+        None
+    } else {
+        Some((1u64 << act_bits) as f32 - 1.0)
+    }
+}
+
+/// Deterministic PPL protocol: sequential non-overlapping segments,
+/// `max_batches` batches of the artifact batch size.
+pub fn perplexity(
+    rt: &ModelRuntime,
+    ps: &ParamStore,
+    kind: CorpusKind,
+    max_batches: usize,
+    act_qmax: Option<f32>,
+) -> Result<f64> {
+    let cfg = &ps.cfg;
+    let corpus = data::gen_corpus(kind, (max_batches * cfg.batch * cfg.seq + cfg.seq) * 2, 99);
+    let segs = data::eval_segments(&corpus, cfg.seq, max_batches * cfg.batch);
+    let ones = vec![1.0f32; cfg.batch * cfg.seq];
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0usize;
+    for chunk in segs.chunks(cfg.batch) {
+        if chunk.len() < cfg.batch {
+            break;
+        }
+        let (toks, tgts) = data::to_batch(chunk);
+        let h = forward_hidden(rt, ps, &toks, act_qmax)?;
+        let nll = rt.head_nll(&h, &tgts, &ones, ps.globals())?;
+        total_nll += nll.data.iter().map(|&v| v as f64).sum::<f64>();
+        total_tok += cfg.batch * cfg.seq;
+    }
+    Ok((total_nll / total_tok as f64).exp())
+}
+
+/// Pearson correlation coefficient (Figs. 5/6: loss ↔ PPL, r ≈ 0.95).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    sxy / (sxx.sqrt() * syy.sqrt()).max(1e-300)
+}
+
+/// Weighted deployed memory of a quantized model (Fig. 4 x-axis): packed
+/// integer codes + per-group fp16 scale/zp for every quantized matrix,
+/// fp16 for everything else, plus — in weight-only mode — the kept
+/// `A⁻¹`/`A_out` matrices per block (d² + h·hd² fp16 each).
+pub fn weighted_memory_bytes(
+    ps: &ParamStore,
+    spec: crate::quant::QuantSpec,
+    weight_only_affine_kept: bool,
+) -> usize {
+    let cfg = &ps.cfg;
+    let quantized: Vec<(&str, usize, usize)> = cfg.quantized_weights();
+    let mut total = 0usize;
+    // globals stay fp16
+    total += crate::quant::fp16_bytes(ps.globals_layout.size);
+    for _ in 0..cfg.n_layers {
+        for (name, shape, _) in ps.block_layout.entries.clone() {
+            if let Some((_, din, dout)) = quantized.iter().find(|(n, _, _)| *n == name) {
+                total += crate::quant::weight_bytes(*din, *dout, spec);
+            } else {
+                total += crate::quant::fp16_bytes(crate::tensor::numel(&shape));
+            }
+        }
+        if weight_only_affine_kept {
+            // A_qkv⁻¹, A_fc1⁻¹ (d×d each) + per-head A_out (h·hd²)
+            total += crate::quant::fp16_bytes(
+                2 * cfg.d_model * cfg.d_model + cfg.n_heads * cfg.head_dim * cfg.head_dim,
+            );
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_extremes() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-12);
+        let noise = [1.0, -1.0, 1.0, -1.0];
+        assert!(pearson(&x, &noise).abs() < 0.5);
+    }
+
+    #[test]
+    fn act_qmax_values() {
+        assert_eq!(act_qmax(16), None);
+        assert_eq!(act_qmax(4), Some(15.0));
+        assert_eq!(act_qmax(8), Some(255.0));
+    }
+}

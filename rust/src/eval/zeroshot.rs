@@ -1,0 +1,211 @@
+//! Six synthetic zero-shot tasks (substitutes for PIQA / ARC-e / WinoGrande
+//! / BoolQ / ARC-c / HellaSwag — DESIGN.md §2). Each task is a two-choice
+//! continuation problem over the synthetic grammar; scoring follows the
+//! standard harness: pick the continuation with the lower mean NLL. The
+//! tasks probe regularities the corpus actually teaches (grammaticality,
+//! bracket closing, copying, word frequency, adjective order, word class),
+//! so accuracy degrades with quantization noise like the paper's suite.
+
+use anyhow::Result;
+
+use crate::data::{self, Vocab};
+use crate::eval::forward_hidden;
+use crate::model::ParamStore;
+use crate::rngx::Pcg32;
+use crate::runtime::ModelRuntime;
+
+pub const TASKS: [&str; 6] = ["accept", "bracket", "copy", "freq", "order", "suffix"];
+
+/// One two-choice example: shared prompt + (correct, wrong) continuations.
+pub struct Example {
+    pub prompt: String,
+    pub good: String,
+    pub bad: String,
+}
+
+/// Generate one example for `task`.
+pub fn gen_example(task: &str, vocab: &Vocab, rng: &mut Pcg32) -> Example {
+    let noun = |rng: &mut Pcg32| vocab.nouns[rng.below(vocab.nouns.len())].clone();
+    let sent = |rng: &mut Pcg32| data::sentence(vocab, rng, 0);
+    match task {
+        // grammatical sentence vs its word-shuffled permutation
+        "accept" => {
+            let good = format!("{}. ", sent(rng));
+            let mut words: Vec<String> =
+                good.trim_end_matches(". ").split(' ').map(String::from).collect();
+            // deterministic derangement: rotate by half
+            let half = words.len() / 2;
+            words.rotate_left(half);
+            let bad = format!("{}. ", words.join(" "));
+            Example { prompt: format!("{}. ", sent(rng)), good, bad }
+        }
+        // close the open parenthesis vs opening another
+        "bracket" => {
+            let prompt = format!("{}. the {} ( of the {}", sent(rng), noun(rng), noun(rng));
+            Example { prompt, good: " )".into(), bad: " (".into() }
+        }
+        // repeated-phrase copying: "... the X and the" -> X
+        "copy" => {
+            let x = noun(rng);
+            let mut y = noun(rng);
+            while y == x {
+                y = noun(rng);
+            }
+            let prompt = format!("{}. the {} and the", sent(rng), x);
+            Example { prompt, good: format!(" {x}"), bad: format!(" {y}") }
+        }
+        // Zipf head vs tail noun after "the"
+        "freq" => {
+            let common = vocab.nouns[rng.below(3)].clone();
+            let rare = vocab.nouns[vocab.nouns.len() - 1 - rng.below(3)].clone();
+            let prompt = format!("{}. the", sent(rng));
+            Example { prompt, good: format!(" {common}"), bad: format!(" {rare}") }
+        }
+        // adjective precedes noun in the grammar, never follows
+        "order" => {
+            let a = vocab.adjs[rng.below(vocab.adjs.len())].clone();
+            let n = noun(rng);
+            let prompt = format!("{}. the", sent(rng));
+            Example { prompt, good: format!(" {a} {n}"), bad: format!(" {n} {a}") }
+        }
+        // after "the <noun>" a verb (s-suffixed) is grammatical, "the" is not
+        "suffix" => {
+            let v = vocab.verbs[rng.below(vocab.verbs.len())].clone();
+            let prompt = format!("{}. the {}", sent(rng), noun(rng));
+            Example { prompt, good: format!(" {v}"), bad: " the the".into() }
+        }
+        other => panic!("unknown zero-shot task {other:?}"),
+    }
+}
+
+/// Build a fixed-length token sequence `[pad..., prompt, continuation]` and
+/// the target-position mask over the continuation bytes.
+fn build_seq(prompt: &str, cont: &str, seq: usize, pad: &[u8]) -> (Vec<i32>, Vec<f32>) {
+    let p = prompt.as_bytes();
+    let c = cont.as_bytes();
+    assert!(p.len() + c.len() < seq, "example longer than context");
+    let total = seq + 1;
+    let mut bytes = Vec::with_capacity(total);
+    let pad_n = total - p.len() - c.len();
+    bytes.extend_from_slice(&pad[pad.len() - pad_n..]);
+    bytes.extend_from_slice(p);
+    bytes.extend_from_slice(c);
+    let toks: Vec<i32> = bytes[..seq].iter().map(|&b| b as i32).collect();
+    // target t predicts bytes[t+1]; continuation occupies the last c.len()
+    let mut mask = vec![0.0f32; seq];
+    for m in mask.iter_mut().skip(seq - c.len()) {
+        *m = 1.0;
+    }
+    (toks, mask)
+}
+
+/// Accuracy of `ps` on `task` over `n` examples (must be a multiple of
+/// batch/2). Candidates are scored by mean NLL over continuation tokens.
+pub fn accuracy(
+    rt: &ModelRuntime,
+    ps: &ParamStore,
+    task: &str,
+    n: usize,
+    act_qmax: Option<f32>,
+    seed: u64,
+) -> Result<f64> {
+    let cfg = &ps.cfg;
+    let vocab = Vocab::build(1234);
+    let mut rng = Pcg32::seeded(seed);
+    let pad = data::gen_corpus(data::CorpusKind::Wt2s, 4 * cfg.seq, 5);
+    let per_batch = cfg.batch / 2; // two candidates per example
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    let mut examples: Vec<Example> = (0..n).map(|_| gen_example(task, &vocab, &mut rng)).collect();
+    while examples.len() % per_batch != 0 {
+        examples.pop();
+    }
+    for chunk in examples.chunks(per_batch) {
+        let mut toks = Vec::with_capacity(cfg.batch * cfg.seq);
+        let mut tgts = Vec::with_capacity(cfg.batch * cfg.seq);
+        let mut masks = Vec::with_capacity(cfg.batch * cfg.seq);
+        let mut counts = Vec::with_capacity(cfg.batch);
+        for ex in chunk {
+            for cont in [&ex.good, &ex.bad] {
+                let (seq_toks, mask) = build_seq(&ex.prompt, cont, cfg.seq, &pad);
+                // shift: input toks[..seq], target toks[1..] + last cont byte
+                let full: Vec<i32> = {
+                    let mut f = seq_toks.clone();
+                    f.push(*cont.as_bytes().last().unwrap() as i32);
+                    f
+                };
+                toks.extend_from_slice(&full[..cfg.seq]);
+                tgts.extend_from_slice(&full[1..]);
+                counts.push(mask.iter().sum::<f32>());
+                masks.extend_from_slice(&mask);
+            }
+        }
+        let h = forward_hidden(rt, ps, &toks, act_qmax)?;
+        let nll = rt.head_nll(&h, &tgts, &masks, ps.globals())?;
+        for (i, _) in chunk.iter().enumerate() {
+            let mean_good = nll.data[2 * i] / counts[2 * i];
+            let mean_bad = nll.data[2 * i + 1] / counts[2 * i + 1];
+            if mean_good < mean_bad {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(100.0 * correct as f64 / total as f64)
+}
+
+/// Average accuracy over all six tasks.
+pub fn suite(
+    rt: &ModelRuntime,
+    ps: &ParamStore,
+    n_per_task: usize,
+    act_qmax: Option<f32>,
+) -> Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for (ti, task) in TASKS.iter().enumerate() {
+        let acc = accuracy(rt, ps, task, n_per_task, act_qmax, 1000 + ti as u64)?;
+        out.push((task.to_string(), acc));
+    }
+    let avg = out.iter().map(|(_, a)| *a).sum::<f64>() / out.len() as f64;
+    out.push(("avg".into(), avg));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn examples_well_formed() {
+        let vocab = Vocab::build(1234);
+        let mut rng = Pcg32::seeded(7);
+        for task in TASKS {
+            for _ in 0..20 {
+                let ex = gen_example(task, &vocab, &mut rng);
+                assert_ne!(ex.good, ex.bad, "{task}");
+                assert!(ex.prompt.len() + ex.good.len() < 120, "{task} too long");
+                assert!(ex.prompt.len() + ex.bad.len() < 120, "{task} too long");
+            }
+        }
+    }
+
+    #[test]
+    fn build_seq_mask_covers_continuation() {
+        let pad = vec![b'x'; 512];
+        let (toks, mask) = build_seq("the cat", " sat", 64, &pad);
+        assert_eq!(toks.len(), 64);
+        assert_eq!(mask.len(), 64);
+        assert_eq!(mask.iter().sum::<f32>(), 4.0);
+        // masked positions are the last 4
+        assert!(mask[60..].iter().all(|&m| m == 1.0));
+        assert!(mask[..60].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn bracket_task_is_single_byte_fair() {
+        let vocab = Vocab::build(1234);
+        let mut rng = Pcg32::seeded(8);
+        let ex = gen_example("bracket", &vocab, &mut rng);
+        assert_eq!(ex.good.len(), ex.bad.len());
+    }
+}

@@ -1,0 +1,264 @@
+//! Experiment harness shared by `examples/` and `rust/benches/`: one
+//! function per paper exhibit, parameterized by model/config/method lists
+//! so the bench binaries can run scaled-down defaults while the examples
+//! expose the full sweeps. Every function prints a markdown table and
+//! saves CSV/markdown under `results/`.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::baselines;
+use crate::benchx::Table;
+use crate::cli::parse_config;
+use crate::coordinator::{calibrate, CalibOptions};
+use crate::data::CorpusKind;
+use crate::eval::{self, act_qmax, zeroshot};
+use crate::model::ParamStore;
+use crate::quant::QuantSpec;
+use crate::report::save_table;
+use crate::runtime::{ModelRuntime, Runtime};
+use crate::train::{ensure_checkpoint, TrainConfig};
+
+/// PPL eval batches (×batch×seq tokens). 8 batches ≈ 8k tokens/corpus.
+pub const EVAL_BATCHES: usize = 8;
+pub const ZEROSHOT_N: usize = 64;
+
+/// Shared experiment context: runtime + trained checkpoints.
+pub struct Ctx {
+    pub rt_root: Runtime,
+    pub ckpt_dir: String,
+    cache: HashMap<String, (std::rc::Rc<ModelRuntime>, ParamStore)>,
+}
+
+impl Ctx {
+    pub fn load() -> Result<Ctx> {
+        let artifacts = std::env::var("AQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        let ckpt_dir = std::env::var("AQ_CKPT").unwrap_or_else(|_| "checkpoints".into());
+        Ok(Ctx { rt_root: Runtime::load(&artifacts)?, ckpt_dir, cache: HashMap::new() })
+    }
+
+    /// Model runtime + trained FP checkpoint (trains on first use).
+    pub fn model(&mut self, name: &str) -> Result<(std::rc::Rc<ModelRuntime>, ParamStore)> {
+        if let Some((rt, ps)) = self.cache.get(name) {
+            return Ok((std::rc::Rc::clone(rt), ps.clone()));
+        }
+        let rt = std::rc::Rc::new(self.rt_root.model(name)?);
+        let mut ps =
+            ParamStore::new(rt.cfg.clone(), rt.globals_layout.clone(), rt.block_layout.clone());
+        ensure_checkpoint(&rt, &mut ps, &self.ckpt_dir, &TrainConfig::default())?;
+        self.cache.insert(name.into(), (std::rc::Rc::clone(&rt), ps.clone()));
+        Ok((rt, ps))
+    }
+}
+
+/// Env-var list override helper for the bench binaries
+/// (`AQ_MODELS=opt-s1,opt-s2 cargo bench ...`).
+pub fn env_list(key: &str, default: &[&str]) -> Vec<String> {
+    match std::env::var(key) {
+        Ok(v) => v.split(',').map(str::to_string).collect(),
+        Err(_) => default.iter().map(|s| s.to_string()).collect(),
+    }
+}
+
+/// Quantize with a method and measure PPL on the three corpora.
+pub fn method_ppl(
+    ctx: &mut Ctx,
+    model: &str,
+    method: &str,
+    spec: QuantSpec,
+    act_bits: u32,
+) -> Result<HashMap<&'static str, f64>> {
+    let (rt, fp) = ctx.model(model)?;
+    let qps = if method == "fp16" {
+        fp.clone()
+    } else {
+        baselines::quantize_with(&rt, &fp, method, spec, act_bits, default_alpha(model, spec))?
+    };
+    let qmax = if method == "fp16" { None } else { act_qmax(act_bits) };
+    let mut out = HashMap::new();
+    for kind in CorpusKind::all() {
+        out.insert(kind.name(), eval::perplexity(&rt, &qps, kind, EVAL_BATCHES, qmax)?);
+    }
+    Ok(out)
+}
+
+/// Paper §4.1: the stability factor shrinks as models grow / bits drop.
+pub fn default_alpha(model: &str, spec: QuantSpec) -> f32 {
+    let small = model.ends_with("s1");
+    match (small, spec.bits) {
+        (true, _) => 0.1,
+        (false, b) if b >= 3 => 1e-2,
+        (false, _) => 1e-3,
+    }
+}
+
+/// Tables 1/8/9 (OPT weight-only) and 10/11 (LLaMA weight-only): one
+/// sweep, three corpus columns per (model, config, method) row.
+pub fn weight_only_tables(
+    ctx: &mut Ctx,
+    models: &[String],
+    configs: &[String],
+    methods: &[String],
+    stem: &str,
+) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Weight-only PPL ({stem})"),
+        &["model", "config", "method", "wt2s", "ptbs", "c4s"],
+    );
+    for model in models {
+        for config in configs {
+            let (spec, act_bits) = parse_config(config)?;
+            for method in methods {
+                let ppl = method_ppl(ctx, model, method, spec, act_bits)?;
+                t.row(vec![
+                    model.clone(),
+                    config.clone(),
+                    method.clone(),
+                    format!("{:.3}", ppl["wt2s"]),
+                    format!("{:.3}", ppl["ptbs"]),
+                    format!("{:.3}", ppl["c4s"]),
+                ]);
+                t.print_last();
+            }
+        }
+    }
+    save_table(&t, stem)?;
+    Ok(t)
+}
+
+/// Table 2: zero-shot accuracy at w4a4.
+pub fn zeroshot_table(
+    ctx: &mut Ctx,
+    models: &[String],
+    methods: &[String],
+    config: &str,
+    stem: &str,
+) -> Result<Table> {
+    let (spec, act_bits) = parse_config(config)?;
+    let mut header = vec!["model".to_string(), "method".to_string()];
+    header.extend(zeroshot::TASKS.iter().map(|s| s.to_string()));
+    header.push("avg".into());
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&format!("Zero-shot accuracy {config}"), &hrefs);
+    for model in models {
+        for method in methods {
+            let (rt, fp) = ctx.model(model)?;
+            let (qps, qmax) = if method == "fp16" {
+                (fp.clone(), None)
+            } else {
+                let q = baselines::quantize_with(
+                    &rt,
+                    &fp,
+                    method,
+                    spec,
+                    act_bits,
+                    default_alpha(model, spec),
+                )?;
+                (q, act_qmax(act_bits))
+            };
+            let suite = zeroshot::suite(&rt, &qps, ZEROSHOT_N, qmax)?;
+            let mut row = vec![model.clone(), method.clone()];
+            row.extend(suite.iter().map(|(_, a)| format!("{a:.2}")));
+            t.row(row);
+            t.print_last();
+        }
+    }
+    save_table(&t, stem)?;
+    Ok(t)
+}
+
+/// Table 3: w4a4 PPL (WikiText2 + C4 analogues) across method set M2.
+pub fn w4a4_ppl_table(ctx: &mut Ctx, models: &[String], methods: &[String], stem: &str) -> Result<Table> {
+    let mut t = Table::new("w4a4 PPL", &["model", "method", "wt2s", "c4s"]);
+    for model in models {
+        for method in methods {
+            let ppl = method_ppl(ctx, model, method, QuantSpec::new(4, 0), 4)?;
+            t.row(vec![
+                model.clone(),
+                method.clone(),
+                format!("{:.3}", ppl["wt2s"]),
+                format!("{:.3}", ppl["c4s"]),
+            ]);
+            t.print_last();
+        }
+    }
+    save_table(&t, stem)?;
+    Ok(t)
+}
+
+/// Table 5: stability-factor sweep. NaN rows (training collapse) are
+/// reported as "NaN", matching the paper.
+pub fn alpha_sweep(
+    ctx: &mut Ctx,
+    model: &str,
+    config: &str,
+    alphas: &[f32],
+    stem: &str,
+) -> Result<Table> {
+    let (spec, act_bits) = parse_config(config)?;
+    let mut t = Table::new(
+        &format!("Alpha sweep {model} {config}"),
+        &["alpha", "wt2s", "ptbs", "c4s", "last_block_loss"],
+    );
+    let (rt, fp) = ctx.model(model)?;
+    for &alpha in alphas {
+        let mut opts = CalibOptions::affinequant(spec, act_bits);
+        opts.alpha = alpha;
+        let (qps, rep) = calibrate(&rt, &fp, &opts, false)?;
+        let qmax = act_qmax(act_bits);
+        let mut row = vec![format!("{alpha:.0e}")];
+        if rep.any_diverged() {
+            row.extend(["NaN".to_string(), "NaN".into(), "NaN".into()]);
+        } else {
+            for kind in CorpusKind::all() {
+                row.push(format!("{:.3}", eval::perplexity(&rt, &qps, kind, EVAL_BATCHES, qmax)?));
+            }
+        }
+        row.push(format!("{:.3e}", rep.last_block_loss()));
+        t.row(row);
+        t.print_last();
+    }
+    save_table(&t, stem)?;
+    Ok(t)
+}
+
+/// Table 6: gradual mask on/off.
+pub fn gradual_ablation(ctx: &mut Ctx, model: &str, config: &str, stem: &str) -> Result<Table> {
+    let (spec, act_bits) = parse_config(config)?;
+    let mut t = Table::new(
+        &format!("Gradual mask ablation {model} {config}"),
+        &["scheme", "wt2s", "ptbs", "c4s"],
+    );
+    let (rt, fp) = ctx.model(model)?;
+    for (scheme, gradual) in [("with_gradual", true), ("without_gradual", false)] {
+        let mut opts = CalibOptions::affinequant(spec, act_bits);
+        // paper §4.1 uses alpha = 1 at this model scale — the regime where
+        // releasing all off-diagonals at epoch 1 actually bites (Table 6)
+        opts.alpha = 1.0;
+        opts.gradual = gradual;
+        let (qps, rep) = calibrate(&rt, &fp, &opts, false)?;
+        let qmax = act_qmax(act_bits);
+        let mut row = vec![scheme.to_string()];
+        if rep.any_diverged() {
+            row.extend(["NaN".to_string(), "NaN".into(), "NaN".into()]);
+        } else {
+            for kind in CorpusKind::all() {
+                row.push(format!("{:.3}", eval::perplexity(&rt, &qps, kind, EVAL_BATCHES, qmax)?));
+            }
+        }
+        t.row(row);
+        t.print_last();
+    }
+    save_table(&t, stem)?;
+    Ok(t)
+}
+
+impl Table {
+    /// Print the most recent row (progress feedback during long sweeps).
+    pub fn print_last(&self) {
+        if let Some(r) = self.rows.last() {
+            println!("  {}", r.join(" | "));
+        }
+    }
+}

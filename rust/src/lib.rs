@@ -1,0 +1,39 @@
+//! # AffineQuant reproduction (ICLR 2024)
+//!
+//! Post-training quantization of transformer LMs with learnable **affine
+//! equivalent transformations**: weights become `Q(A·W)` while activations
+//! are multiplied by `A⁻¹`, and `A` is optimized per transformer block
+//! against the MSE between the FP and quantized block outputs. A **Gradual
+//! Mask** keeps `A` strictly diagonally dominant — hence invertible
+//! (Levy-Desplanques) — throughout the optimization.
+//!
+//! Architecture (see `DESIGN.md`): this crate is Layer 3 of a three-layer
+//! stack. Layer 1 (pallas kernels) and Layer 2 (jax block/calibration
+//! graphs) are AOT-lowered to HLO text at build time (`make artifacts`);
+//! this crate loads them through the PJRT CPU client (`runtime`), owns the
+//! calibration pipeline (`coordinator`), the pre-training driver (`train`),
+//! the baselines (RTN / GPTQ / AWQ / SmoothQuant / OmniQuant / FlexRound),
+//! and the evaluation harnesses (perplexity + zero-shot).
+//!
+//! Substrate modules (`jsonx`, `rngx`, `tensor`, `linalg`, `quant`, `data`,
+//! `benchx`, `proptestx`) are implemented from scratch: the offline build
+//! environment vendors only the `xla` crate closure.
+
+pub mod baselines;
+pub mod benchx;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod harness;
+pub mod jsonx;
+pub mod linalg;
+pub mod model;
+pub mod proptestx;
+pub mod quant;
+pub mod report;
+pub mod rngx;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,386 @@
+//! Dense linear-algebra substrate, generic over f32/f64.
+//!
+//! The f32/f64 duality is load-bearing: the paper's Table 4 studies how the
+//! numerical precision of the affine-matrix inverse affects the merge error
+//! and final perplexity. `inverse` (LU, partial pivoting) is the general
+//! path; `gj_inverse_nopivot` mirrors the in-graph Gauss-Jordan used by the
+//! L2 calibration step (stable only for SDD matrices — which the Gradual
+//! Mask guarantees); `cholesky` backs the GPTQ baseline.
+
+use num_traits::Float;
+
+/// Row-major n x n matrix wrapper over a borrowed slice.
+fn idx(n: usize, i: usize, j: usize) -> usize {
+    i * n + j
+}
+
+/// LU-decomposition inverse with partial pivoting. Returns None if singular
+/// to working precision.
+pub fn inverse<T: Float>(a: &[T], n: usize) -> Option<Vec<T>> {
+    assert_eq!(a.len(), n * n);
+    let mut lu = a.to_vec();
+    let mut perm: Vec<usize> = (0..n).collect();
+
+    for col in 0..n {
+        // pivot
+        let mut p = col;
+        let mut best = lu[idx(n, col, col)].abs();
+        for r in col + 1..n {
+            let v = lu[idx(n, r, col)].abs();
+            if v > best {
+                best = v;
+                p = r;
+            }
+        }
+        if best == T::zero() || !best.is_finite() {
+            return None;
+        }
+        if p != col {
+            for j in 0..n {
+                lu.swap(idx(n, col, j), idx(n, p, j));
+            }
+            perm.swap(col, p);
+        }
+        let piv = lu[idx(n, col, col)];
+        for r in col + 1..n {
+            let f = lu[idx(n, r, col)] / piv;
+            lu[idx(n, r, col)] = f;
+            if f != T::zero() {
+                for j in col + 1..n {
+                    let v = lu[idx(n, col, j)];
+                    lu[idx(n, r, j)] = lu[idx(n, r, j)] - f * v;
+                }
+            }
+        }
+    }
+
+    // solve A X = I column-block-wise via the factorization
+    let mut inv = vec![T::zero(); n * n];
+    let mut col_buf = vec![T::zero(); n];
+    for e in 0..n {
+        // rhs = permuted unit vector e
+        for (i, &pi) in perm.iter().enumerate() {
+            col_buf[i] = if pi == e { T::one() } else { T::zero() };
+        }
+        // forward substitution (L, unit diagonal)
+        for i in 0..n {
+            let mut s = col_buf[i];
+            for j in 0..i {
+                s = s - lu[idx(n, i, j)] * col_buf[j];
+            }
+            col_buf[i] = s;
+        }
+        // back substitution (U)
+        for i in (0..n).rev() {
+            let mut s = col_buf[i];
+            for j in i + 1..n {
+                s = s - lu[idx(n, i, j)] * col_buf[j];
+            }
+            col_buf[i] = s / lu[idx(n, i, i)];
+        }
+        for i in 0..n {
+            inv[idx(n, i, e)] = col_buf[i];
+        }
+    }
+    Some(inv)
+}
+
+/// Gauss-Jordan inverse without pivoting — the exact algorithm the L2 graph
+/// runs (linalg.py). Only stable for (near-)SDD matrices.
+pub fn gj_inverse_nopivot<T: Float>(a: &[T], n: usize) -> Option<Vec<T>> {
+    assert_eq!(a.len(), n * n);
+    let mut aug = vec![T::zero(); n * 2 * n];
+    for i in 0..n {
+        for j in 0..n {
+            aug[i * 2 * n + j] = a[idx(n, i, j)];
+        }
+        aug[i * 2 * n + n + i] = T::one();
+    }
+    for i in 0..n {
+        let piv = aug[i * 2 * n + i];
+        if piv == T::zero() || !piv.is_finite() {
+            return None;
+        }
+        for j in 0..2 * n {
+            aug[i * 2 * n + j] = aug[i * 2 * n + j] / piv;
+        }
+        for r in 0..n {
+            if r == i {
+                continue;
+            }
+            let f = aug[r * 2 * n + i];
+            if f != T::zero() {
+                for j in 0..2 * n {
+                    let v = aug[i * 2 * n + j];
+                    aug[r * 2 * n + j] = aug[r * 2 * n + j] - f * v;
+                }
+            }
+        }
+    }
+    let mut inv = vec![T::zero(); n * n];
+    for i in 0..n {
+        for j in 0..n {
+            inv[idx(n, i, j)] = aug[i * 2 * n + n + j];
+        }
+    }
+    Some(inv)
+}
+
+/// Cholesky factorization A = L Lᵀ (lower L, row-major). None if not SPD.
+pub fn cholesky<T: Float>(a: &[T], n: usize) -> Option<Vec<T>> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![T::zero(); n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[idx(n, i, j)];
+            for k in 0..j {
+                s = s - l[idx(n, i, k)] * l[idx(n, j, k)];
+            }
+            if i == j {
+                if s <= T::zero() || !s.is_finite() {
+                    return None;
+                }
+                l[idx(n, i, j)] = s.sqrt();
+            } else {
+                l[idx(n, i, j)] = s / l[idx(n, j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Inverse of an SPD matrix via its Cholesky factor.
+pub fn spd_inverse<T: Float>(a: &[T], n: usize) -> Option<Vec<T>> {
+    let l = cholesky(a, n)?;
+    // invert L (lower triangular) then A^{-1} = L^{-T} L^{-1}
+    let mut linv = vec![T::zero(); n * n];
+    for i in 0..n {
+        linv[idx(n, i, i)] = T::one() / l[idx(n, i, i)];
+        for j in 0..i {
+            let mut s = T::zero();
+            for k in j..i {
+                s = s - l[idx(n, i, k)] * linv[idx(n, k, j)];
+            }
+            linv[idx(n, i, j)] = s / l[idx(n, i, i)];
+        }
+    }
+    let mut inv = vec![T::zero(); n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = T::zero();
+            for k in i.max(j)..n {
+                s = s + linv[idx(n, k, i)] * linv[idx(n, k, j)];
+            }
+            inv[idx(n, i, j)] = s;
+        }
+    }
+    Some(inv)
+}
+
+/// Strict-diagonal-dominance margin: min over rows of |a_ii| - Σ_{j≠i}|a_ij|.
+/// Positive ⇒ SDD ⇒ invertible (Levy-Desplanques).
+pub fn sdd_margin<T: Float>(a: &[T], n: usize) -> T {
+    let mut margin = T::infinity();
+    for i in 0..n {
+        let mut off = T::zero();
+        for j in 0..n {
+            if j != i {
+                off = off + a[idx(n, i, j)].abs();
+            }
+        }
+        let m = a[idx(n, i, i)].abs() - off;
+        if m < margin {
+            margin = m;
+        }
+    }
+    margin
+}
+
+/// 1-norm condition-number estimate ‖A‖₁·‖A⁻¹‖₁ (exact inverse, small n).
+pub fn cond_1<T: Float>(a: &[T], n: usize) -> Option<T> {
+    let inv = inverse(a, n)?;
+    Some(norm_1(a, n) * norm_1(&inv, n))
+}
+
+/// Matrix 1-norm (max absolute column sum).
+pub fn norm_1<T: Float>(a: &[T], n: usize) -> T {
+    let mut best = T::zero();
+    for j in 0..n {
+        let mut s = T::zero();
+        for i in 0..n {
+            s = s + a[idx(n, i, j)].abs();
+        }
+        if s > best {
+            best = s;
+        }
+    }
+    best
+}
+
+/// C = A @ B for row-major n x n (small helper used by tests/merge paths).
+pub fn matmul_sq<T: Float>(a: &[T], b: &[T], n: usize) -> Vec<T> {
+    let mut c = vec![T::zero(); n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let av = a[idx(n, i, k)];
+            if av != T::zero() {
+                for j in 0..n {
+                    c[idx(n, i, j)] = c[idx(n, i, j)] + av * b[idx(n, k, j)];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Max |A@B - I| residual — inverse quality metric (Table 4 merge error).
+pub fn inverse_residual<T: Float>(a: &[T], ainv: &[T], n: usize) -> T {
+    let prod = matmul_sq(a, ainv, n);
+    let mut worst = T::zero();
+    for i in 0..n {
+        for j in 0..n {
+            let want = if i == j { T::one() } else { T::zero() };
+            let d = (prod[idx(n, i, j)] - want).abs();
+            if d > worst {
+                worst = d;
+            }
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg32;
+
+    fn random_sdd(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg32::seeded(seed);
+        let mut a = vec![0.0f64; n * n];
+        for v in &mut a {
+            *v = rng.normal() / n as f64;
+        }
+        for i in 0..n {
+            let off: f64 = (0..n).filter(|&j| j != i).map(|j| a[i * n + j].abs()).sum();
+            a[i * n + i] = 1.5 * (off + 0.1);
+        }
+        a
+    }
+
+    #[test]
+    fn lu_inverse_residual_small() {
+        for n in [1, 2, 5, 16, 64] {
+            let a = random_sdd(n, n as u64);
+            let inv = inverse(&a, n).unwrap();
+            assert!(inverse_residual(&a, &inv, n) < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn lu_handles_pivoting() {
+        // zero on the diagonal requires a row swap
+        let a = vec![0.0f64, 1.0, 1.0, 0.0];
+        let inv = inverse(&a, 2).unwrap();
+        assert!(inverse_residual(&a, &inv, 2) < 1e-14);
+    }
+
+    #[test]
+    fn singular_returns_none() {
+        let a = vec![1.0f64, 2.0, 2.0, 4.0];
+        assert!(inverse(&a, 2).is_none());
+        assert!(gj_inverse_nopivot(&[0.0f64, 1.0, 1.0, 0.0], 2).is_none());
+    }
+
+    #[test]
+    fn gj_matches_lu_on_sdd() {
+        let n = 48;
+        let a = random_sdd(n, 7);
+        let lu = inverse(&a, n).unwrap();
+        let gj = gj_inverse_nopivot(&a, n).unwrap();
+        let max_diff = lu
+            .iter()
+            .zip(&gj)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_diff < 1e-10, "{max_diff}");
+    }
+
+    #[test]
+    fn f32_vs_f64_inverse_error_gap() {
+        // The Table 4 phenomenon: f64 inverse is orders of magnitude tighter.
+        let n = 96;
+        let a64 = random_sdd(n, 9);
+        let a32: Vec<f32> = a64.iter().map(|&v| v as f32).collect();
+        let r64 = inverse_residual(&a64, &inverse(&a64, n).unwrap(), n);
+        let r32 = inverse_residual(&a32, &inverse(&a32, n).unwrap(), n) as f64;
+        assert!(r64 < 1e-12);
+        assert!(r32 > r64 * 10.0, "r32={r32} r64={r64}");
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let n = 24;
+        // SPD: H = M Mᵀ + I
+        let mut rng = Pcg32::seeded(11);
+        let m: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut h = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in 0..n {
+                    s += m[i * n + k] * m[j * n + k];
+                }
+                h[i * n + j] = s;
+            }
+        }
+        let l = cholesky(&h, n).unwrap();
+        // L Lᵀ == H
+        let mut recon = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += l[i * n + k] * l[j * n + k];
+                }
+                recon[i * n + j] = s;
+            }
+        }
+        let diff = h
+            .iter()
+            .zip(&recon)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(diff < 1e-9, "{diff}");
+        // SPD inverse
+        let inv = spd_inverse(&h, n).unwrap();
+        assert!(inverse_residual(&h, &inv, n) < 1e-9);
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let a = vec![1.0f64, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_none());
+    }
+
+    #[test]
+    fn sdd_margin_signs() {
+        let a = vec![2.0f64, 1.0, -0.5, 3.0];
+        assert!((sdd_margin(&a, 2) - 1.0).abs() < 1e-12);
+        let b = vec![1.0f64, 2.0, 0.0, 1.0];
+        assert!(sdd_margin(&b, 2) < 0.0);
+    }
+
+    #[test]
+    fn cond_identity_is_one() {
+        let eye: Vec<f64> = Tensor_eye(16);
+        assert!((cond_1(&eye, 16).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    fn Tensor_eye(n: usize) -> Vec<f64> {
+        let mut v = vec![0.0; n * n];
+        for i in 0..n {
+            v[i * n + i] = 1.0;
+        }
+        v
+    }
+}

@@ -1,0 +1,110 @@
+//! `affinequant` — the leader binary.
+//!
+//! Subcommands:
+//!   train     --model NAME | --all  [--steps N] [--out DIR]
+//!   quantize  --model NAME --method M --config w3a16g128 [--alpha A]
+//!   eval      --model NAME [--method M --config C] [--zeroshot]
+//!   info      print the artifact manifest summary
+//!
+//! Everything here drives the library; the table/figure reproductions live
+//! under `rust/benches/` and `examples/`.
+
+use anyhow::{bail, Result};
+
+use affinequant::cli::{parse_config, Cli};
+use affinequant::coordinator::CalibOptions;
+use affinequant::data::CorpusKind;
+use affinequant::model::ParamStore;
+use affinequant::runtime::Runtime;
+use affinequant::train::{ensure_checkpoint, TrainConfig};
+use affinequant::{baselines, eval};
+
+fn main() -> Result<()> {
+    let cli = match Cli::from_env() {
+        Ok(c) => c,
+        Err(_) => {
+            eprintln!("usage: affinequant <train|quantize|eval|info> [--options]");
+            std::process::exit(2);
+        }
+    };
+    let artifacts = cli.str_or("artifacts", "artifacts");
+    let rt_root = Runtime::load(&artifacts)?;
+
+    match cli.cmd.as_str() {
+        "info" => {
+            for name in rt_root.model_names() {
+                let rt = rt_root.model(&name)?;
+                println!(
+                    "{name:8} family={:3} d={} h={} L={} ff={} params={}",
+                    rt.cfg.family,
+                    rt.cfg.d_model,
+                    rt.cfg.n_heads,
+                    rt.cfg.n_layers,
+                    rt.cfg.d_ff,
+                    affinequant::util::human_count(rt.cfg.params as f64)
+                );
+            }
+        }
+        "train" => {
+            let out = cli.str_or("out", "checkpoints");
+            let models: Vec<String> = if cli.flag("all") {
+                rt_root.model_names()
+            } else {
+                vec![cli.str_or("model", "opt-s1")]
+            };
+            for name in models {
+                let rt = rt_root.model(&name)?;
+                let mut ps = ParamStore::new(
+                    rt.cfg.clone(),
+                    rt.globals_layout.clone(),
+                    rt.block_layout.clone(),
+                );
+                let tc = TrainConfig {
+                    steps: cli.usize_or("steps", TrainConfig::default().steps),
+                    ..TrainConfig::default()
+                };
+                ensure_checkpoint(&rt, &mut ps, &out, &tc)?;
+            }
+        }
+        "quantize" | "eval" => {
+            let name = cli.str_or("model", "opt-s1");
+            let rt = rt_root.model(&name)?;
+            let mut ps = ParamStore::new(
+                rt.cfg.clone(),
+                rt.globals_layout.clone(),
+                rt.block_layout.clone(),
+            );
+            ensure_checkpoint(
+                &rt,
+                &mut ps,
+                &cli.str_or("ckpt", "checkpoints"),
+                &TrainConfig::default(),
+            )?;
+
+            let method = cli.str_or("method", "fp16");
+            let (qps, act_bits) = if method == "fp16" {
+                (ps.clone(), 16)
+            } else {
+                let (spec, act_bits) = parse_config(&cli.str_or("config", "w4a16"))?;
+                let alpha = cli.f32_or("alpha", CalibOptions::affinequant(spec, act_bits).alpha);
+                (baselines::quantize_with(&rt, &ps, &method, spec, act_bits, alpha)?, act_bits)
+            };
+            let qmax = eval::act_qmax(act_bits);
+            for kind in CorpusKind::all() {
+                let ppl = eval::perplexity(&rt, &qps, kind, 8, qmax)?;
+                println!(
+                    "{name} {method} {} ppl[{}] = {ppl:.3}",
+                    cli.str_or("config", "-"),
+                    kind.name()
+                );
+            }
+            if cli.flag("zeroshot") {
+                for (task, acc) in eval::zeroshot::suite(&rt, &qps, 64, qmax)? {
+                    println!("{name} {method} zeroshot {task}: {acc:.2}%");
+                }
+            }
+        }
+        other => bail!("unknown subcommand {other:?}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,380 @@
+//! Model configuration, flat parameter store, initialization, checkpoints.
+//!
+//! Parameters live in one flat f32 vector (`theta`), laid out exactly as the
+//! L2 graphs expect: `[globals, block0, block1, ...]`. The manifest carries
+//! the per-tensor (name, shape, offset) layouts; `Layout` gives named views
+//! into the flat storage so the coordinator can patch individual weights
+//! (quantize, merge, fold) in place.
+
+pub mod merge;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonx::Value;
+use crate::rngx::Pcg32;
+use crate::tensor::{numel, Tensor};
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub family: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub train_batch: usize,
+    pub head_dim: usize,
+    pub params: usize,
+}
+
+impl ModelConfig {
+    pub fn from_manifest(v: &Value) -> Self {
+        let g = |k: &str| v.req(k).as_usize();
+        ModelConfig {
+            name: v.req("name").as_str().to_string(),
+            family: v.req("family").as_str().to_string(),
+            d_model: g("d_model"),
+            n_heads: g("n_heads"),
+            n_layers: g("n_layers"),
+            d_ff: g("d_ff"),
+            vocab: g("vocab"),
+            seq: g("seq"),
+            batch: g("batch"),
+            train_batch: g("train_batch"),
+            head_dim: g("head_dim"),
+            params: g("params"),
+        }
+    }
+
+    /// Weight matrices that get quantized, with (din, dout) shapes
+    /// (mirrors configs.py quantized_weight_names).
+    pub fn quantized_weights(&self) -> Vec<(&'static str, usize, usize)> {
+        let d = self.d_model;
+        let ff = self.d_ff;
+        if self.family == "opt" {
+            vec![
+                ("wq", d, d), ("wk", d, d), ("wv", d, d), ("wo", d, d),
+                ("w1", d, ff), ("w2", ff, d),
+            ]
+        } else {
+            vec![
+                ("wq", d, d), ("wk", d, d), ("wv", d, d), ("wo", d, d),
+                ("wg", d, ff), ("wu", d, ff), ("wd", ff, d),
+            ]
+        }
+    }
+
+    /// Affine transform sites -> weights sharing that input (configs.py).
+    pub fn affine_sites(&self) -> Vec<(&'static str, Vec<&'static str>)> {
+        if self.family == "opt" {
+            vec![
+                ("qkv", vec!["wq", "wk", "wv"]),
+                ("out", vec!["wo"]),
+                ("fc1", vec!["w1"]),
+            ]
+        } else {
+            vec![
+                ("qkv", vec!["wq", "wk", "wv"]),
+                ("out", vec!["wo"]),
+                ("fc1", vec!["wg", "wu"]),
+            ]
+        }
+    }
+}
+
+/// Named (shape, offset) views over a flat f32 vector.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub entries: Vec<(String, Vec<usize>, usize)>,
+    pub size: usize,
+    index: HashMap<String, usize>,
+}
+
+impl Layout {
+    pub fn from_manifest(arr: &Value) -> Self {
+        let mut entries = Vec::new();
+        let mut size = 0;
+        for e in arr.as_arr() {
+            let name = e.req("name").as_str().to_string();
+            let shape = e.req("shape").usize_arr();
+            let offset = e.req("offset").as_usize();
+            size = size.max(offset + numel(&shape));
+            entries.push((name, shape, offset));
+        }
+        let index = entries
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _, _))| (n.clone(), i))
+            .collect();
+        Layout { entries, size, index }
+    }
+
+    pub fn shape(&self, name: &str) -> &[usize] {
+        let i = self.index[name];
+        &self.entries[i].1
+    }
+
+    pub fn range(&self, name: &str) -> std::ops::Range<usize> {
+        let i = *self
+            .index
+            .get(name)
+            .unwrap_or_else(|| panic!("layout: no tensor {name:?}"));
+        let (_, shape, off) = &self.entries[i];
+        *off..*off + numel(shape)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    pub fn view<'a>(&self, flat: &'a [f32], name: &str) -> &'a [f32] {
+        &flat[self.range(name)]
+    }
+
+    pub fn view_mut<'a>(&self, flat: &'a mut [f32], name: &str) -> &'a mut [f32] {
+        let r = self.range(name);
+        &mut flat[r]
+    }
+
+    pub fn tensor(&self, flat: &[f32], name: &str) -> Tensor {
+        Tensor::new(self.shape(name).to_vec(), self.view(flat, name).to_vec())
+    }
+
+    pub fn set(&self, flat: &mut [f32], name: &str, t: &Tensor) {
+        assert_eq!(self.shape(name), &t.shape[..], "set {name}");
+        self.view_mut(flat, name).copy_from_slice(&t.data);
+    }
+}
+
+/// The full parameter state of one model.
+#[derive(Clone)]
+pub struct ParamStore {
+    pub cfg: ModelConfig,
+    pub globals_layout: Layout,
+    pub block_layout: Layout,
+    pub theta: Vec<f32>,
+}
+
+impl ParamStore {
+    pub fn new(cfg: ModelConfig, globals_layout: Layout, block_layout: Layout) -> Self {
+        let theta = vec![0.0; globals_layout.size + cfg.n_layers * block_layout.size];
+        ParamStore { cfg, globals_layout, block_layout, theta }
+    }
+
+    pub fn globals(&self) -> &[f32] {
+        &self.theta[..self.globals_layout.size]
+    }
+
+    pub fn block_range(&self, i: usize) -> std::ops::Range<usize> {
+        assert!(i < self.cfg.n_layers);
+        let start = self.globals_layout.size + i * self.block_layout.size;
+        start..start + self.block_layout.size
+    }
+
+    pub fn block(&self, i: usize) -> &[f32] {
+        &self.theta[self.block_range(i)]
+    }
+
+    pub fn block_mut(&mut self, i: usize) -> &mut [f32] {
+        let r = self.block_range(i);
+        &mut self.theta[r]
+    }
+
+    /// Tensor copy of one named weight in block `i`.
+    pub fn block_tensor(&self, i: usize, name: &str) -> Tensor {
+        self.block_layout.tensor(self.block(i), name)
+    }
+
+    /// GPT-2-style initialization: N(0, 0.02) for matrices/embeddings,
+    /// ones for norm gains, zeros for biases, residual-scaled output projs.
+    pub fn init(&mut self, seed: u64) {
+        let resid_scale = 0.02 / (2.0 * self.cfg.n_layers as f32).sqrt();
+        let mut rng = Pcg32::seeded(seed);
+        let gl = self.globals_layout.clone();
+        let bl = self.block_layout.clone();
+        for (name, shape, _) in &gl.entries {
+            let n = numel(shape);
+            let vals = match name.as_str() {
+                "lnf_g" | "rmsf_g" => vec![1.0; n],
+                "lnf_b" => vec![0.0; n],
+                _ => rng.normal_vec(n, 0.02),
+            };
+            self.theta[gl.range(name)].copy_from_slice(&vals);
+        }
+        for i in 0..self.cfg.n_layers {
+            for (name, shape, _) in bl.entries.clone() {
+                let n = numel(&shape);
+                let vals = if name.ends_with("_g") {
+                    vec![1.0; n]
+                } else if name.starts_with('b') || name.ends_with("_b") {
+                    vec![0.0; n]
+                } else if name == "wo" || name == "w2" || name == "wd" {
+                    rng.normal_vec(n, resid_scale)
+                } else {
+                    rng.normal_vec(n, 0.02)
+                };
+                let r = bl.range(&name);
+                self.block_mut(i)[r].copy_from_slice(&vals);
+            }
+        }
+    }
+
+    // -------------------------------------------------------- checkpoints
+
+    /// Save: magic + json header + little-endian f32 payload.
+    pub fn save(&self, path: &str) -> Result<()> {
+        crate::util::ensure_parent(path)?;
+        let header = crate::jsonx::obj(vec![
+            ("model", crate::jsonx::s(&self.cfg.name)),
+            ("len", crate::jsonx::num(self.theta.len() as f64)),
+        ]);
+        let htext = crate::jsonx::emit(&header);
+        let mut bytes = Vec::with_capacity(16 + htext.len() + self.theta.len() * 4);
+        bytes.extend_from_slice(b"AQCK1\n");
+        bytes.extend_from_slice(&(htext.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(htext.as_bytes());
+        for v in &self.theta {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes).context("writing checkpoint")?;
+        Ok(())
+    }
+
+    pub fn load_into(&mut self, path: &str) -> Result<()> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        if !bytes.starts_with(b"AQCK1\n") {
+            bail!("{path}: bad checkpoint magic");
+        }
+        let hlen = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+        let header = crate::jsonx::parse(
+            std::str::from_utf8(&bytes[10..10 + hlen]).context("header utf8")?,
+        )
+        .map_err(|e| anyhow::anyhow!(e))?;
+        let model = header.req("model").as_str();
+        if model != self.cfg.name {
+            bail!("checkpoint is for {model:?}, expected {:?}", self.cfg.name);
+        }
+        let n = header.req("len").as_usize();
+        if n != self.theta.len() {
+            bail!("checkpoint len {n} != theta len {}", self.theta.len());
+        }
+        let payload = &bytes[10 + hlen..];
+        if payload.len() != n * 4 {
+            bail!("checkpoint payload truncated");
+        }
+        for (i, chunk) in payload.chunks_exact(4).enumerate() {
+            self.theta[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_layout(items: Vec<(&str, Vec<usize>)>) -> Layout {
+    let mut arr = Vec::new();
+    let mut off = 0usize;
+    for (n, s) in items {
+        arr.push(crate::jsonx::obj(vec![
+            ("name", crate::jsonx::s(n)),
+            (
+                "shape",
+                Value::Arr(s.iter().map(|&d| crate::jsonx::num(d as f64)).collect()),
+            ),
+            ("offset", crate::jsonx::num(off as f64)),
+        ]));
+        off += numel(&s);
+    }
+    Layout::from_manifest(&Value::Arr(arr))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (ModelConfig, Layout, Layout) {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            family: "opt".into(),
+            d_model: 4,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 8,
+            vocab: 16,
+            seq: 8,
+            batch: 2,
+            train_batch: 2,
+            head_dim: 2,
+            params: 0,
+        };
+        let gl = test_layout(vec![
+            ("tok_emb", vec![16, 4]),
+            ("lnf_g", vec![4]),
+            ("lnf_b", vec![4]),
+        ]);
+        let bl = test_layout(vec![
+            ("ln1_g", vec![4]),
+            ("wq", vec![4, 4]),
+            ("bq", vec![4]),
+        ]);
+        (cfg, gl, bl)
+    }
+
+    #[test]
+    fn layout_views_and_init() {
+        let (cfg, gl, bl) = tiny();
+        let mut ps = ParamStore::new(cfg, gl, bl);
+        assert_eq!(ps.theta.len(), 72 + 2 * 24);
+        ps.init(1);
+        assert!(ps.block_tensor(0, "ln1_g").data.iter().all(|&v| v == 1.0));
+        assert!(ps.block_tensor(1, "bq").data.iter().all(|&v| v == 0.0));
+        assert_ne!(ps.block_tensor(0, "wq"), ps.block_tensor(1, "wq"));
+        let t = Tensor::full(&[4, 4], 7.0);
+        let bl2 = ps.block_layout.clone();
+        bl2.set(ps.block_mut(1), "wq", &t);
+        assert_eq!(ps.block_tensor(1, "wq"), t);
+        assert_ne!(ps.block_tensor(0, "wq"), t);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let (cfg, gl, bl) = tiny();
+        let mut ps = ParamStore::new(cfg, gl, bl);
+        ps.init(3);
+        let path = "/tmp/aq_test_ck.bin";
+        ps.save(path).unwrap();
+        let mut ps2 = ps.clone();
+        ps2.theta.iter_mut().for_each(|v| *v = 0.0);
+        ps2.load_into(path).unwrap();
+        assert_eq!(ps.theta, ps2.theta);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn checkpoint_rejects_wrong_model() {
+        let (cfg, gl, bl) = tiny();
+        let mut ps = ParamStore::new(cfg, gl.clone(), bl.clone());
+        ps.init(3);
+        let path = "/tmp/aq_test_ck2.bin";
+        ps.save(path).unwrap();
+        let mut cfg2 = ps.cfg.clone();
+        cfg2.name = "other".into();
+        let mut ps2 = ParamStore::new(cfg2, gl, bl);
+        assert!(ps2.load_into(path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let (cfg, gl, bl) = tiny();
+        let mut a = ParamStore::new(cfg.clone(), gl.clone(), bl.clone());
+        let mut b = ParamStore::new(cfg, gl, bl);
+        a.init(9);
+        b.init(9);
+        assert_eq!(a.theta, b.theta);
+    }
+}

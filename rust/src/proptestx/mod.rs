@@ -1,0 +1,161 @@
+//! Mini property-testing harness (proptest is not vendored offline).
+//!
+//! Deterministic seed sweep + simple input shrinking for numeric cases:
+//! when a case fails, the harness retries with scaled-down variants and
+//! reports the smallest failing case found.
+
+use crate::rngx::Pcg32;
+
+/// A generated case that knows how to shrink itself.
+pub trait Shrink: Clone + std::fmt::Debug {
+    /// Candidate smaller versions of self (tried in order).
+    fn shrinks(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for Vec<f32> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.len() > 1 {
+            out.push(self[..self.len() / 2].to_vec());
+        }
+        // halve magnitudes
+        if self.iter().any(|v| v.abs() > 1e-3) {
+            out.push(self.iter().map(|v| v / 2.0).collect());
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        if *self > 1 {
+            vec![self / 2, self - 1]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+impl Shrink for (usize, usize) {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.0 > 1 {
+            out.push((self.0 / 2, self.1));
+        }
+        if self.1 > 1 {
+            out.push((self.0, self.1 / 2));
+        }
+        out
+    }
+}
+
+pub struct Runner {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrinks: usize,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Runner { cases: 64, seed: 0x5eed, max_shrinks: 200 }
+    }
+}
+
+impl Runner {
+    /// Run `prop` on `cases` generated inputs; panic with the smallest
+    /// failing input if any case fails.
+    pub fn run<T, G, P>(&self, name: &str, mut gen: G, mut prop: P)
+    where
+        T: Shrink,
+        G: FnMut(&mut Pcg32) -> T,
+        P: FnMut(&T) -> Result<(), String>,
+    {
+        let mut rng = Pcg32::seeded(self.seed);
+        for case in 0..self.cases {
+            let input = gen(&mut rng);
+            if let Err(first_err) = prop(&input) {
+                // shrink
+                let mut best = input.clone();
+                let mut best_err = first_err;
+                let mut budget = self.max_shrinks;
+                let mut progress = true;
+                while progress && budget > 0 {
+                    progress = false;
+                    for cand in best.shrinks() {
+                        budget -= 1;
+                        if let Err(e) = prop(&cand) {
+                            best = cand;
+                            best_err = e;
+                            progress = true;
+                            break;
+                        }
+                        if budget == 0 {
+                            break;
+                        }
+                    }
+                }
+                panic!(
+                    "property {name:?} failed (case {case}/{}):\n  input: {best:?}\n  error: {best_err}",
+                    self.cases
+                );
+            }
+        }
+    }
+}
+
+/// Assert helper producing Result for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        Runner::default().run(
+            "abs is nonneg",
+            |rng| rng.normal_vec(8, 1.0),
+            |xs| {
+                for x in xs {
+                    prop_assert!(x.abs() >= 0.0, "abs < 0");
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            Runner { cases: 32, seed: 1, max_shrinks: 100 }.run(
+                "all values below 0.5",
+                |rng| rng.normal_vec(64, 2.0),
+                |xs: &Vec<f32>| {
+                    for x in xs {
+                        prop_assert!(*x < 0.5, "found {x}");
+                    }
+                    Ok(())
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // shrinking should reduce to a short vector
+        let input_len = msg.split("input: ").nth(1).unwrap().matches(',').count();
+        assert!(input_len < 64, "{msg}");
+    }
+
+    #[test]
+    fn usize_shrinking() {
+        assert_eq!(8usize.shrinks(), vec![4, 7]);
+        assert!(1usize.shrinks().is_empty());
+    }
+}

@@ -1,0 +1,330 @@
+//! Host-side quantizer substrate.
+//!
+//! Bit-for-bit twin of the L1/L2 fake-quantization (python
+//! ``compile/quantize.py`` / the ``group_fq`` pallas kernel): per-group
+//! asymmetric weight quantization over the input dim of a row-major
+//! ``(in, out)`` weight, optional learnable-clipping (LWC) logits, per-token
+//! activation quantization, integer code extraction + bit-packing (for the
+//! weighted-memory model behind the paper's Pareto figure).
+
+use crate::tensor::Tensor;
+
+pub const EPS: f32 = 1e-8;
+
+/// Weight-quantization spec: bits + group size (0 = per-output-channel).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantSpec {
+    pub bits: u32,
+    pub group: usize,
+}
+
+impl QuantSpec {
+    pub fn new(bits: u32, group: usize) -> Self {
+        QuantSpec { bits, group }
+    }
+
+    pub fn qmax(&self) -> f32 {
+        (1u64 << self.bits) as f32 - 1.0
+    }
+
+    /// Effective group length for an input dim.
+    pub fn group_len(&self, din: usize) -> usize {
+        if self.group == 0 {
+            din
+        } else {
+            assert_eq!(din % self.group, 0, "group {} !| din {}", self.group, din);
+            self.group
+        }
+    }
+
+    /// "w3a16g128"-style label (paper notation).
+    pub fn label(&self, act_bits: u32) -> String {
+        let g = if self.group == 0 {
+            String::new()
+        } else {
+            format!("g{}", self.group)
+        };
+        format!("w{}a{}{}", self.bits, act_bits, g)
+    }
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Per-group scale/zero-point for one (group, column) cell.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupQ {
+    pub scale: f32,
+    pub zp: f32,
+}
+
+fn cell_params(wmin: f32, wmax: f32, gamma: f32, beta: f32, qmax: f32) -> GroupQ {
+    let cmax = sigmoid(gamma) * wmax;
+    let cmin = sigmoid(beta) * wmin;
+    let scale = ((cmax - cmin) / qmax).max(EPS);
+    let zp = (-cmin / scale).round();
+    GroupQ { scale, zp }
+}
+
+/// Fake quant-dequant of w (in, out). `lwc` = optional (gamma, beta) with
+/// shape (din/g, out) each; None means no clipping (logit +20 ⇒ sigmoid≈1).
+pub fn quant_dequant(w: &Tensor, spec: QuantSpec, lwc: Option<(&[f32], &[f32])>) -> Tensor {
+    let (codes, params, shape) = quantize_codes(w, spec, lwc);
+    dequantize_codes(&codes, &params, &shape, spec)
+}
+
+/// Integer codes + per-(group,col) params. Codes stored one-u8-per-element
+/// (packing is separate so tests can inspect codes directly).
+pub fn quantize_codes(
+    w: &Tensor,
+    spec: QuantSpec,
+    lwc: Option<(&[f32], &[f32])>,
+) -> (Vec<u8>, Vec<GroupQ>, Vec<usize>) {
+    let (din, dout) = w.dims2();
+    let g = spec.group_len(din);
+    let ngroups = din / g;
+    let qmax = spec.qmax();
+    assert!(qmax <= 255.0, "codes are u8; bits must be <= 8");
+
+    let mut params = Vec::with_capacity(ngroups * dout);
+    let mut codes = vec![0u8; din * dout];
+    for gi in 0..ngroups {
+        for col in 0..dout {
+            let mut wmin = f32::INFINITY;
+            let mut wmax = f32::NEG_INFINITY;
+            for r in 0..g {
+                let v = w.data[(gi * g + r) * dout + col];
+                wmin = wmin.min(v);
+                wmax = wmax.max(v);
+            }
+            let (ga, be) = match lwc {
+                Some((ga, be)) => (ga[gi * dout + col], be[gi * dout + col]),
+                None => (20.0, 20.0),
+            };
+            let p = cell_params(wmin, wmax, ga, be, qmax);
+            for r in 0..g {
+                let v = w.data[(gi * g + r) * dout + col];
+                let q = ((v / p.scale).round() + p.zp).clamp(0.0, qmax);
+                codes[(gi * g + r) * dout + col] = q as u8;
+            }
+            params.push(p);
+        }
+    }
+    (codes, params, vec![din, dout])
+}
+
+pub fn dequantize_codes(
+    codes: &[u8],
+    params: &[GroupQ],
+    shape: &[usize],
+    spec: QuantSpec,
+) -> Tensor {
+    let (din, dout) = (shape[0], shape[1]);
+    let g = spec.group_len(din);
+    let mut out = Tensor::zeros(shape);
+    for (i, &c) in codes.iter().enumerate() {
+        let row = i / dout;
+        let col = i % dout;
+        let p = params[(row / g) * dout + col];
+        out.data[i] = (c as f32 - p.zp) * p.scale;
+    }
+    out
+}
+
+/// Per-token (row) asymmetric fake quantization, matching
+/// ``quantize.fake_quant_act`` (range always includes zero).
+pub fn act_quant_dequant(x: &Tensor, bits: u32) -> Tensor {
+    let (rows, d) = x.dims2();
+    let qmax = (1u64 << bits) as f32 - 1.0;
+    let mut out = Tensor::zeros(&[rows, d]);
+    for i in 0..rows {
+        let row = x.row(i);
+        let xmin = row.iter().cloned().fold(f32::INFINITY, f32::min).min(0.0);
+        let xmax = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max).max(0.0);
+        let scale = ((xmax - xmin) / qmax).max(EPS);
+        let zp = (-xmin / scale).round();
+        for (o, &v) in out.row_mut(i).iter_mut().zip(row) {
+            let q = ((v / scale).round() + zp).clamp(0.0, qmax);
+            *o = (q - zp) * scale;
+        }
+    }
+    out
+}
+
+// ----------------------------------------------------------- bit packing
+
+/// Pack b-bit codes little-endian into bytes (deployment storage format).
+pub fn pack_bits(codes: &[u8], bits: u32) -> Vec<u8> {
+    assert!(bits >= 1 && bits <= 8);
+    let mut out = vec![0u8; (codes.len() * bits as usize).div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(u32::from(c) < (1 << bits));
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= c << off;
+        if off + bits as usize > 8 {
+            out[byte + 1] |= c >> (8 - off);
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+pub fn unpack_bits(packed: &[u8], bits: u32, n: usize) -> Vec<u8> {
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = packed[byte] >> off;
+        if off + bits as usize > 8 {
+            v |= packed[byte + 1] << (8 - off);
+        }
+        out.push(v & mask);
+        bitpos += bits as usize;
+    }
+    out
+}
+
+// ------------------------------------------------------- memory model
+
+/// Deployment bytes for one quantized (in, out) weight under `spec`:
+/// packed int codes + fp16 scale & zero-point per (group, col).
+pub fn weight_bytes(din: usize, dout: usize, spec: QuantSpec) -> usize {
+    let g = spec.group_len(din);
+    let ngroups = din / g;
+    let codes = (din * dout * spec.bits as usize).div_ceil(8);
+    let params = ngroups * dout * 2 * 2; // scale + zp, fp16 each
+    codes + params
+}
+
+/// fp16 bytes for an unquantized tensor.
+pub fn fp16_bytes(numel: usize) -> usize {
+    numel * 2
+}
+
+/// Weighted-memory statistics for the Pareto figure (Fig. 4): quantized
+/// weight matrices + fp16 everything-else (+ optional per-layer kept
+/// matrices such as A⁻¹ for weight-only deployment).
+pub fn quant_error(w: &Tensor, spec: QuantSpec) -> f64 {
+    quant_dequant(w, spec, None).mse(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg32;
+
+    fn rand_w(din: usize, dout: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::seeded(seed);
+        Tensor::randn(&[din, dout], 1.0, &mut rng)
+    }
+
+    #[test]
+    fn error_bound_half_scale() {
+        let w = rand_w(128, 64, 1);
+        for (bits, group) in [(2, 0), (3, 64), (4, 128), (8, 0)] {
+            let spec = QuantSpec::new(bits, group);
+            let (codes, params, shape) = quantize_codes(&w, spec, None);
+            let dq = dequantize_codes(&codes, &params, &shape, spec);
+            let g = spec.group_len(128);
+            for i in 0..128 {
+                for j in 0..64 {
+                    let p = params[(i / g) * 64 + j];
+                    let err = (dq.at2(i, j) - w.at2(i, j)).abs();
+                    assert!(err <= p.scale / 2.0 + 1e-6, "{bits} {group} {err}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let w = rand_w(256, 128, 2);
+        let errs: Vec<f64> = [2u32, 3, 4, 8]
+            .iter()
+            .map(|&b| quant_error(&w, QuantSpec::new(b, 0)))
+            .collect();
+        for pair in errs.windows(2) {
+            assert!(pair[0] > pair[1], "{errs:?}");
+        }
+    }
+
+    #[test]
+    fn smaller_groups_less_error() {
+        let w = rand_w(256, 128, 3);
+        let e_pc = quant_error(&w, QuantSpec::new(3, 0));
+        let e_g128 = quant_error(&w, QuantSpec::new(3, 128));
+        let e_g64 = quant_error(&w, QuantSpec::new(3, 64));
+        assert!(e_pc >= e_g128 && e_g128 >= e_g64, "{e_pc} {e_g128} {e_g64}");
+    }
+
+    #[test]
+    fn codes_in_range_and_roundtrip() {
+        let w = rand_w(64, 128, 4);
+        let spec = QuantSpec::new(3, 0);
+        let (codes, params, shape) = quantize_codes(&w, spec, None);
+        assert!(codes.iter().all(|&c| c <= 7));
+        // quantizing the dequantized tensor is idempotent
+        let dq = dequantize_codes(&codes, &params, &shape, spec);
+        let (codes2, params2, _) = quantize_codes(&dq, spec, None);
+        let dq2 = dequantize_codes(&codes2, &params2, &shape, spec);
+        assert!(dq.mse(&dq2) < 1e-12);
+    }
+
+    #[test]
+    fn lwc_strong_clip_shrinks_range() {
+        let w = rand_w(128, 64, 5);
+        let n = 64;
+        let wide = vec![20.0f32; n];
+        let tight = vec![-1.0f32; n];
+        let dq_wide = quant_dequant(&w, QuantSpec::new(4, 0), Some((&wide, &wide)));
+        let dq_tight = quant_dequant(&w, QuantSpec::new(4, 0), Some((&tight, &tight)));
+        assert!(dq_tight.max_abs() < dq_wide.max_abs());
+    }
+
+    #[test]
+    fn pack_roundtrip_all_bits() {
+        let mut rng = Pcg32::seeded(6);
+        for bits in [2u32, 3, 4, 8] {
+            let n = 1000;
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            let packed = pack_bits(&codes, bits);
+            assert_eq!(packed.len(), (n * bits as usize).div_ceil(8));
+            assert_eq!(unpack_bits(&packed, bits, n), codes);
+        }
+    }
+
+    #[test]
+    fn act_quant_matches_semantics() {
+        let mut rng = Pcg32::seeded(7);
+        let x = Tensor::randn(&[16, 32], 2.0, &mut rng);
+        let dq = act_quant_dequant(&x, 8);
+        assert!(x.mse(&dq) < 1e-3);
+        // zero rows stay zero
+        let mut z = x.clone();
+        z.row_mut(0).fill(0.0);
+        let dqz = act_quant_dequant(&z, 4);
+        assert!(dqz.row(0).iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn memory_model_orders_configs() {
+        // w2g128 < w3g128 < w4g128 < fp16, and grouping adds param overhead
+        let b2 = weight_bytes(4096, 4096, QuantSpec::new(2, 128));
+        let b3 = weight_bytes(4096, 4096, QuantSpec::new(3, 128));
+        let b4 = weight_bytes(4096, 4096, QuantSpec::new(4, 128));
+        assert!(b2 < b3 && b3 < b4 && b4 < fp16_bytes(4096 * 4096));
+        let pc = weight_bytes(4096, 4096, QuantSpec::new(4, 0));
+        assert!(pc < b4);
+    }
+
+    #[test]
+    fn label_matches_paper_notation() {
+        assert_eq!(QuantSpec::new(3, 128).label(16), "w3a16g128");
+        assert_eq!(QuantSpec::new(4, 0).label(4), "w4a4");
+    }
+}

@@ -1,0 +1,54 @@
+//! Result recording: CSV/markdown writers under `results/`.
+
+use crate::benchx::Table;
+use crate::util::ensure_parent;
+
+/// Write a table to `results/<stem>.md` and `results/<stem>.csv`.
+pub fn save_table(table: &Table, stem: &str) -> std::io::Result<()> {
+    let md = format!("results/{stem}.md");
+    let csv = format!("results/{stem}.csv");
+    ensure_parent(&md)?;
+    std::fs::write(&md, table.to_markdown())?;
+    std::fs::write(&csv, table.to_csv())?;
+    println!("saved results/{stem}.{{md,csv}}");
+    Ok(())
+}
+
+/// Append a line to results/log.txt with a timestamp counter.
+pub fn log_line(line: &str) -> std::io::Result<()> {
+    use std::io::Write;
+    ensure_parent("results/log.txt")?;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("results/log.txt")?;
+    writeln!(f, "{line}")
+}
+
+/// Save (x, y) series as CSV for the figure benches.
+pub fn save_series(stem: &str, header: &str, rows: &[(f64, f64)]) -> std::io::Result<()> {
+    let path = format!("results/{stem}.csv");
+    ensure_parent(&path)?;
+    let mut s = String::from(header);
+    s.push('\n');
+    for (x, y) in rows {
+        s.push_str(&format!("{x},{y}\n"));
+    }
+    std::fs::write(&path, s)?;
+    println!("saved {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn series_format() {
+        // formatting only; file IO covered by integration tests
+        let rows = [(1.0, 2.0), (3.0, 4.5)];
+        let mut s = String::from("x,y\n");
+        for (x, y) in rows {
+            s.push_str(&format!("{x},{y}\n"));
+        }
+        assert_eq!(s, "x,y\n1,2\n3,4.5\n");
+    }
+}

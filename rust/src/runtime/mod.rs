@@ -1,0 +1,323 @@
+//! PJRT runtime: loads the AOT artifacts (`make artifacts`) and executes
+//! them on the CPU PJRT client. This is the only place Layer 3 touches XLA;
+//! everything above works with host [`Tensor`]s.
+//!
+//! The artifact manifest (`artifacts/manifest.json`) drives everything:
+//! per-model entry points with input/output names, dtypes and shapes, plus
+//! the flat-vector layouts (`theta`/`wb`/`phi`) shared with the L2 graphs.
+//! Executables compile lazily on first use and are cached for the process
+//! lifetime (compilation is the expensive part; execution is the hot path).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonx::{self, Value};
+use crate::model::{Layout, ModelConfig};
+use crate::tensor::{numel, Tensor};
+use crate::util::Timer;
+
+/// One typed argument for an entry point.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// Manifest metadata for one AOT entry point.
+#[derive(Clone, Debug)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    /// (name, dtype, shape) per input, in call order.
+    pub inputs: Vec<(String, String, Vec<usize>)>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// The compiled-executable registry for one model.
+pub struct ModelRuntime {
+    pub cfg: ModelConfig,
+    pub globals_layout: Layout,
+    pub block_layout: Layout,
+    pub theta_size: usize,
+    /// phi layouts per calibration mode key ("w_g0", "w_g64", "w_g128", "a4").
+    pub phi_layouts: HashMap<String, Layout>,
+    /// LWC layouts per group key ("g0", "g64", "g128").
+    pub lwc_layouts: HashMap<String, Layout>,
+    entries: HashMap<String, EntryMeta>,
+    client: Rc<xla::PjRtClient>,
+    root: String,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// (executions, total seconds) per entry — perf accounting.
+    stats: RefCell<HashMap<String, (u64, f64)>>,
+}
+
+/// The top-level runtime: one PJRT client + per-model registries.
+pub struct Runtime {
+    client: Rc<xla::PjRtClient>,
+    manifest: Value,
+    root: String,
+}
+
+impl Runtime {
+    /// Connect the CPU PJRT client and parse `<root>/manifest.json`.
+    pub fn load(root: &str) -> Result<Self> {
+        let client = Rc::new(xla::PjRtClient::cpu()?);
+        let text = std::fs::read_to_string(format!("{root}/manifest.json"))
+            .with_context(|| format!("reading {root}/manifest.json — run `make artifacts`"))?;
+        let manifest = jsonx::parse(&text).map_err(|e| anyhow::anyhow!(e))?;
+        Ok(Runtime { client, manifest, root: root.to_string() })
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.manifest
+            .req("models")
+            .as_obj()
+            .iter()
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Build the executable registry for one model (lazy compilation).
+    pub fn model(&self, name: &str) -> Result<ModelRuntime> {
+        let m = self
+            .manifest
+            .req("models")
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest"))?;
+        let cfg = ModelConfig::from_manifest(m.req("config"));
+        let globals_layout = Layout::from_manifest(m.req("globals_layout"));
+        let block_layout = Layout::from_manifest(m.req("block_layout"));
+        let theta_size = m.req("theta_size").as_usize();
+
+        let mut phi_layouts = HashMap::new();
+        for (k, v) in m.req("phi_layouts").as_obj() {
+            phi_layouts.insert(k.clone(), Layout::from_manifest(v.req("entries")));
+        }
+        let mut lwc_layouts = HashMap::new();
+        for (k, v) in m.req("lwc_layouts").as_obj() {
+            lwc_layouts.insert(k.clone(), Layout::from_manifest(v.req("entries")));
+        }
+
+        let mut entries = HashMap::new();
+        for (ename, e) in m.req("entries").as_obj() {
+            let inputs = e
+                .req("inputs")
+                .as_arr()
+                .iter()
+                .map(|i| {
+                    (
+                        i.req("name").as_str().to_string(),
+                        i.req("dtype").as_str().to_string(),
+                        i.req("shape").usize_arr(),
+                    )
+                })
+                .collect();
+            let output_shapes = e
+                .req("outputs")
+                .as_arr()
+                .iter()
+                .map(|o| o.req("shape").usize_arr())
+                .collect();
+            entries.insert(
+                ename.clone(),
+                EntryMeta {
+                    name: ename.clone(),
+                    file: e.req("file").as_str().to_string(),
+                    inputs,
+                    output_shapes,
+                },
+            );
+        }
+
+        Ok(ModelRuntime {
+            cfg,
+            globals_layout,
+            block_layout,
+            theta_size,
+            phi_layouts,
+            lwc_layouts,
+            entries,
+            client: Rc::clone(&self.client),
+            root: self.root.clone(),
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+}
+
+impl ModelRuntime {
+    pub fn entry(&self, name: &str) -> &EntryMeta {
+        self.entries
+            .get(name)
+            .unwrap_or_else(|| panic!("no entry {name:?} for model {}", self.cfg.name))
+    }
+
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
+    /// Compile (or fetch the cached) executable for `entry`.
+    fn executable(&self, entry: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(entry) {
+            return Ok(Rc::clone(exe));
+        }
+        let meta = self.entry(entry);
+        let path = format!("{}/{}", self.root, meta.file);
+        let t = Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {path}"))?;
+        let exe = self
+            .client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .with_context(|| format!("compiling {path}"))?;
+        let exe = Rc::new(exe);
+        if std::env::var("AQ_VERBOSE").is_ok() {
+            eprintln!("[runtime] compiled {entry} in {:.2}s", t.secs());
+        }
+        self.exes.borrow_mut().insert(entry.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an entry point. Inputs are validated against the manifest;
+    /// outputs come back as host tensors in manifest order.
+    pub fn call(&self, entry: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let meta = self.entry(entry).clone();
+        if args.len() != meta.inputs.len() {
+            bail!(
+                "{entry}: {} args given, expects {} ({:?})",
+                args.len(),
+                meta.inputs.len(),
+                meta.inputs.iter().map(|(n, _, _)| n).collect::<Vec<_>>()
+            );
+        }
+        let mut lits = Vec::with_capacity(args.len());
+        for (arg, (iname, dtype, shape)) in args.iter().zip(&meta.inputs) {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = match (arg, dtype.as_str()) {
+                (Arg::F32(v), "float32") => {
+                    check_len(entry, iname, v.len(), shape)?;
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                (Arg::I32(v), "int32") => {
+                    check_len(entry, iname, v.len(), shape)?;
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                (_, want) => bail!("{entry}: input {iname} expects dtype {want}"),
+            };
+            lits.push(lit);
+        }
+        let exe = self.executable(entry)?;
+        let t = Timer::start();
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        {
+            let mut stats = self.stats.borrow_mut();
+            let e = stats.entry(entry.to_string()).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += t.secs();
+        }
+        // All entries are lowered with return_tuple=True.
+        let parts = result.to_tuple()?;
+        if parts.len() != meta.output_shapes.len() {
+            bail!(
+                "{entry}: got {} outputs, manifest says {}",
+                parts.len(),
+                meta.output_shapes.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, shape) in parts.into_iter().zip(&meta.output_shapes) {
+            let data = lit.to_vec::<f32>()?;
+            if data.len() != numel(shape) {
+                bail!("{entry}: output numel {} != manifest shape {shape:?}", data.len());
+            }
+            outs.push(Tensor::new(shape.clone(), data));
+        }
+        Ok(outs)
+    }
+
+    /// Per-entry (calls, total_secs) accounting since process start.
+    pub fn stats(&self) -> Vec<(String, u64, f64)> {
+        let mut v: Vec<(String, u64, f64)> = self
+            .stats
+            .borrow()
+            .iter()
+            .map(|(k, (n, s))| (k.clone(), *n, *s))
+            .collect();
+        v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        v
+    }
+
+    // ------------------------------------------------- common entry sugar
+
+    /// `embed(tokens, globals) -> hidden (B, S, d)`.
+    pub fn embed(&self, tokens: &[i32], globals: &[f32]) -> Result<Tensor> {
+        Ok(self.call("embed", &[Arg::I32(tokens), Arg::F32(globals)])?.remove(0))
+    }
+
+    /// `head_nll(hidden, targets, mask, globals) -> per-sequence NLL (B,)`.
+    pub fn head_nll(
+        &self,
+        hidden: &Tensor,
+        targets: &[i32],
+        mask: &[f32],
+        globals: &[f32],
+    ) -> Result<Tensor> {
+        Ok(self
+            .call(
+                "head_nll",
+                &[Arg::F32(&hidden.data), Arg::I32(targets), Arg::F32(mask), Arg::F32(globals)],
+            )?
+            .remove(0))
+    }
+
+    /// FP block forward: `block_fp(x, wb) -> y`.
+    pub fn block_fp(&self, x: &Tensor, wb: &[f32]) -> Result<Tensor> {
+        Ok(self.call("block_fp", &[Arg::F32(&x.data), Arg::F32(wb)])?.remove(0))
+    }
+
+    /// w?a4 block forward with per-token activation fake-quant.
+    pub fn block_a4(&self, x: &Tensor, wb: &[f32], qmax_a: f32) -> Result<Tensor> {
+        Ok(self
+            .call("block_a4", &[Arg::F32(&x.data), Arg::F32(wb), Arg::F32(&[qmax_a])])?
+            .remove(0))
+    }
+
+    /// FP block forward + captured linear inputs:
+    /// `(y, x_qkv, x_ctx, x_fc1, x_fc2)`.
+    pub fn block_capture(&self, x: &Tensor, wb: &[f32]) -> Result<Vec<Tensor>> {
+        self.call("block_capture", &[Arg::F32(&x.data), Arg::F32(wb)])
+    }
+
+    /// Weight fake-quant of a whole flat block through the pallas kernel.
+    pub fn wfq(&self, group: usize, wb: &[f32], lwc: &[f32], qmax_w: f32) -> Result<Tensor> {
+        Ok(self
+            .call(
+                &format!("wfq_g{group}"),
+                &[Arg::F32(wb), Arg::F32(lwc), Arg::F32(&[qmax_w])],
+            )?
+            .remove(0))
+    }
+
+    /// One LM training step: `(loss, grad)`.
+    pub fn train_step(
+        &self,
+        tokens: &[i32],
+        targets: &[i32],
+        theta: &[f32],
+    ) -> Result<(f64, Tensor)> {
+        let mut outs =
+            self.call("train_step", &[Arg::I32(tokens), Arg::I32(targets), Arg::F32(theta)])?;
+        let grad = outs.remove(1);
+        let loss = outs.remove(0).data[0] as f64;
+        Ok((loss, grad))
+    }
+}
+
+fn check_len(entry: &str, iname: &str, got: usize, shape: &[usize]) -> Result<()> {
+    if got != numel(shape) {
+        bail!("{entry}: input {iname} has {got} elements, manifest shape {shape:?}");
+    }
+    Ok(())
+}

@@ -1,0 +1,324 @@
+//! Host-side dense f32 tensor substrate.
+//!
+//! Row-major, owned storage. 2-D matmuls are cache-blocked over `k` and
+//! parallelized over row chunks with scoped threads — these carry the
+//! host-side hot paths (GPTQ, merging, statistics); the model forward runs
+//! inside XLA, not here.
+
+use crate::rngx::Pcg32;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(numel(&shape), data.len(), "shape {shape:?} vs {}", data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; numel(shape)] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn randn(shape: &[usize], scale: f32, rng: &mut Pcg32) -> Self {
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(numel(shape), scale) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// (rows, cols) of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "dims2 on shape {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        let (_, c) = self.dims2();
+        self.data[i * c + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let (_, c) = self.dims2();
+        self.data[i * c + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (_, c) = self.dims2();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let (_, c) = self.dims2();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(numel(shape), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn transpose2(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f32) -> &mut Self {
+        for v in &mut self.data {
+            *v *= s;
+        }
+        self
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn frob_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        self.sub(other).frob_sq() / self.numel() as f64
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Mean of |x| per column of a 2-D tensor.
+    pub fn col_abs_mean(&self) -> Vec<f32> {
+        let (r, c) = self.dims2();
+        let mut out = vec![0.0f32; c];
+        for i in 0..r {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o += self.data[i * c + j].abs();
+            }
+        }
+        for o in &mut out {
+            *o /= r as f32;
+        }
+        out
+    }
+
+    /// Max of |x| per column of a 2-D tensor.
+    pub fn col_abs_max(&self) -> Vec<f32> {
+        let (r, c) = self.dims2();
+        let mut out = vec![0.0f32; c];
+        for i in 0..r {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = o.max(self.data[i * c + j].abs());
+            }
+        }
+        out
+    }
+
+    /// Per-column (min, max) of a 2-D tensor.
+    pub fn col_min_max(&self) -> (Vec<f32>, Vec<f32>) {
+        let (r, c) = self.dims2();
+        let mut mn = vec![f32::INFINITY; c];
+        let mut mx = vec![f32::NEG_INFINITY; c];
+        for i in 0..r {
+            for j in 0..c {
+                let v = self.data[i * c + j];
+                mn[j] = mn[j].min(v);
+                mx[j] = mx[j].max(v);
+            }
+        }
+        (mn, mx)
+    }
+
+    /// self (m,k) @ other (k,n) -> (m,n), parallel over row chunks.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = self.dims2();
+        let (k2, n) = other.dims2();
+        assert_eq!(k, k2, "matmul {:?} x {:?}", self.shape, other.shape);
+        let mut out = Tensor::zeros(&[m, n]);
+        matmul_into(&self.data, &other.data, &mut out.data, m, k, n);
+        out
+    }
+
+    /// selfᵀ (k,m)ᵀ @ other (k,n) -> (m,n) without materializing selfᵀ.
+    pub fn matmul_at(&self, other: &Tensor) -> Tensor {
+        let (k, m) = self.dims2();
+        let (k2, n) = other.dims2();
+        assert_eq!(k, k2);
+        let mut out = Tensor::zeros(&[m, n]);
+        // out[i,j] = sum_t self[t,i] * other[t,j]
+        for t in 0..k {
+            let a_row = &self.data[t * m..(t + 1) * m];
+            let b_row = &other.data[t * n..(t + 1) * n];
+            for (i, &a) in a_row.iter().enumerate() {
+                if a != 0.0 {
+                    let o = &mut out.data[i * n..(i + 1) * n];
+                    for (j, &b) in b_row.iter().enumerate() {
+                        o[j] += a * b;
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Blocked, thread-parallel C = A (m,k) @ B (k,n), all row-major slices.
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let threads = num_threads().min(m.max(1));
+    if threads <= 1 || m * k * n < 64 * 64 * 64 {
+        matmul_rows(a, b, c, k, n, 0);
+        return;
+    }
+    let chunk = m.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for (ti, c_chunk) in c.chunks_mut(chunk * n).enumerate() {
+            let row0 = ti * chunk;
+            let rows = c_chunk.len() / n;
+            let a_chunk = &a[row0 * k..row0 * k + rows * k];
+            scope.spawn(move || matmul_rows(a_chunk, b, c_chunk, k, n, 0));
+        }
+    });
+}
+
+/// Serial ikj kernel over a row slab (vectorizes along n).
+fn matmul_rows(a: &[f32], b: &[f32], c: &mut [f32], k: usize, n: usize, _row0: usize) {
+    let m = c.len() / n;
+    for i in 0..m {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in a_row.iter().enumerate() {
+            if av != 0.0 {
+                let b_row = &b[kk * n..(kk + 1) * n];
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += av * bv;
+                }
+            }
+        }
+    }
+}
+
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_parallel_matches_serial() {
+        let mut rng = Pcg32::seeded(1);
+        let a = Tensor::randn(&[200, 96], 1.0, &mut rng);
+        let b = Tensor::randn(&[96, 130], 1.0, &mut rng);
+        let big = a.matmul(&b);
+        // reference: naive triple loop
+        let mut want = Tensor::zeros(&[200, 130]);
+        for i in 0..200 {
+            for j in 0..130 {
+                let mut s = 0.0f32;
+                for t in 0..96 {
+                    s += a.data[i * 96 + t] * b.data[t * 130 + j];
+                }
+                want.data[i * 130 + j] = s;
+            }
+        }
+        assert!(big.sub(&want).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn matmul_at_matches_transpose() {
+        let mut rng = Pcg32::seeded(2);
+        let a = Tensor::randn(&[64, 32], 1.0, &mut rng);
+        let b = Tensor::randn(&[64, 48], 1.0, &mut rng);
+        let got = a.matmul_at(&b);
+        let want = a.transpose2().matmul(&b);
+        assert!(got.sub(&want).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg32::seeded(3);
+        let a = Tensor::randn(&[17, 29], 1.0, &mut rng);
+        assert_eq!(a.transpose2().transpose2(), a);
+    }
+
+    #[test]
+    fn eye_is_identity_for_matmul() {
+        let mut rng = Pcg32::seeded(4);
+        let a = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let c = a.matmul(&Tensor::eye(16));
+        assert!(c.sub(&a).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn col_stats() {
+        let a = Tensor::new(vec![2, 2], vec![1., -4., -3., 2.]);
+        assert_eq!(a.col_abs_mean(), vec![2.0, 3.0]);
+        assert_eq!(a.col_abs_max(), vec![3.0, 4.0]);
+        let (mn, mx) = a.col_min_max();
+        assert_eq!(mn, vec![-3.0, -4.0]);
+        assert_eq!(mx, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn mse_and_frob() {
+        let a = Tensor::full(&[2, 2], 1.0);
+        let b = Tensor::full(&[2, 2], 3.0);
+        assert_eq!(a.mse(&b), 4.0);
+        assert_eq!(b.frob_sq(), 36.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        let _ = a.matmul(&b);
+    }
+}

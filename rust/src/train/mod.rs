@@ -1,0 +1,199 @@
+//! LM pre-training driver: Adam over the flat `theta`, stepping through the
+//! AOT `train_step` artifact (loss + grad come back from XLA; the optimizer
+//! and data pipeline live here in rust).
+//!
+//! The paper quantizes *trained* models — PTQ error dynamics are only
+//! meaningful on weight/activation distributions shaped by training — so
+//! every experiment starts from a checkpoint produced here (`affinequant
+//! train`).
+
+use anyhow::Result;
+
+use crate::data::{self, CorpusKind};
+use crate::model::ParamStore;
+use crate::rngx::Pcg32;
+use crate::runtime::ModelRuntime;
+use crate::util::Timer;
+
+/// Adam with bias correction over one flat parameter vector.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: i32,
+}
+
+impl Adam {
+    pub fn new(n: usize, lr: f32) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.95, eps: 1e-8, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    /// One update with a per-element LR scale (the calibration loop runs
+    /// affine and LWC/shift entries at different rates in one instance).
+    pub fn step_elem(&mut self, theta: &mut [f32], grad: &[f32], scales: &[f32]) {
+        assert_eq!(theta.len(), self.m.len());
+        self.t += 1;
+        let b1c = 1.0 - self.beta1.powi(self.t);
+        let b2c = 1.0 - self.beta2.powi(self.t);
+        for i in 0..theta.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1c;
+            let vhat = self.v[i] / b2c;
+            theta[i] -= self.lr * scales[i] * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    /// One update; `lr_scale` multiplies the base LR (schedules, GM damping
+    /// is carried by the gradient itself).
+    pub fn step(&mut self, theta: &mut [f32], grad: &[f32], lr_scale: f32) {
+        assert_eq!(theta.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1c = 1.0 - self.beta1.powi(self.t);
+        let b2c = 1.0 - self.beta2.powi(self.t);
+        let lr = self.lr * lr_scale;
+        for i in 0..theta.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1c;
+            let vhat = self.v[i] / b2c;
+            theta[i] -= lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+/// Linear warmup then cosine decay to 10% of peak.
+pub fn lr_schedule(step: usize, total: usize, warmup: usize) -> f32 {
+    if step < warmup {
+        return (step + 1) as f32 / warmup as f32;
+    }
+    let p = (step - warmup) as f32 / (total - warmup).max(1) as f32;
+    0.1 + 0.45 * (1.0 + (std::f32::consts::PI * p).cos())
+}
+
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub corpus_bytes: usize,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 600,
+            lr: 3e-3,
+            warmup: 50,
+            corpus_bytes: 2_000_000,
+            seed: 7,
+            log_every: 50,
+        }
+    }
+}
+
+/// Train `ps` on the wt2s corpus; returns the loss curve (one entry per
+/// logged step: (step, loss)).
+pub fn train_lm(
+    rt: &ModelRuntime,
+    ps: &mut ParamStore,
+    tc: &TrainConfig,
+) -> Result<Vec<(usize, f64)>> {
+    let cfg = &rt.cfg;
+    let corpus = data::gen_corpus(CorpusKind::Wt2s, tc.corpus_bytes, 1);
+    let mut rng = Pcg32::seeded(tc.seed);
+    let mut adam = Adam::new(ps.theta.len(), tc.lr);
+    let mut curve = Vec::new();
+    let t = Timer::start();
+    let mut window: Vec<f64> = Vec::new();
+    for step in 0..tc.steps {
+        let segs = data::sample_segments(&corpus, cfg.seq, cfg.train_batch, &mut rng);
+        let (toks, tgts) = data::to_batch(&segs);
+        let (loss, grad) = rt.train_step(&toks, &tgts, &ps.theta)?;
+        adam.step(&mut ps.theta, &grad.data, lr_schedule(step, tc.steps, tc.warmup));
+        window.push(loss);
+        if (step + 1) % tc.log_every == 0 || step + 1 == tc.steps {
+            let avg = crate::util::mean(&window);
+            window.clear();
+            curve.push((step + 1, avg));
+            println!(
+                "[train {}] step {:>5}/{} loss {:.4} ({:.1}s)",
+                cfg.name,
+                step + 1,
+                tc.steps,
+                avg,
+                t.secs()
+            );
+        }
+    }
+    Ok(curve)
+}
+
+/// Checkpoint path convention shared by the CLI, examples and benches.
+pub fn checkpoint_path(dir: &str, model: &str) -> String {
+    format!("{dir}/{model}.aqck")
+}
+
+/// Load the checkpoint for `model`, or train + save it if missing.
+pub fn ensure_checkpoint(
+    rt: &ModelRuntime,
+    ps: &mut ParamStore,
+    dir: &str,
+    tc: &TrainConfig,
+) -> Result<()> {
+    let path = checkpoint_path(dir, &rt.cfg.name);
+    if std::path::Path::new(&path).exists() {
+        ps.load_into(&path)?;
+        println!("[train] loaded checkpoint {path}");
+        return Ok(());
+    }
+    println!("[train] no checkpoint at {path}; training {} for {} steps", rt.cfg.name, tc.steps);
+    ps.init(tc.seed);
+    train_lm(rt, ps, tc)?;
+    ps.save(&path)?;
+    println!("[train] saved {path}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_reduces_quadratic() {
+        // minimize f(x) = x² elementwise
+        let mut x = vec![5.0f32, -3.0, 2.0];
+        let mut adam = Adam::new(3, 0.1);
+        for _ in 0..500 {
+            let g: Vec<f32> = x.iter().map(|&v| 2.0 * v).collect();
+            adam.step(&mut x, &g, 1.0);
+        }
+        assert!(x.iter().all(|v| v.abs() < 1e-2), "{x:?}");
+    }
+
+    #[test]
+    fn adam_bias_correction_first_step() {
+        // first step must move by ~lr regardless of gradient scale
+        for scale in [1e-3f32, 1.0, 1e3] {
+            let mut x = vec![0.0f32];
+            let mut adam = Adam::new(1, 0.01);
+            adam.step(&mut x, &[scale], 1.0);
+            assert!((x[0] + 0.01).abs() < 1e-4, "scale {scale} -> {}", x[0]);
+        }
+    }
+
+    #[test]
+    fn schedule_shape() {
+        assert!(lr_schedule(0, 100, 10) < lr_schedule(9, 100, 10));
+        assert!((lr_schedule(9, 100, 10) - 1.0).abs() < 1e-6);
+        assert!(lr_schedule(99, 100, 10) < 0.2);
+        assert!(lr_schedule(99, 100, 10) >= 0.1);
+    }
+}

@@ -1,0 +1,94 @@
+//! Small shared utilities: wall-clock timing, human formatting, fs helpers.
+
+use std::time::Instant;
+
+/// Scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// `1234567` -> `"1.23M"`.
+pub fn human_count(n: f64) -> String {
+    if n >= 1e9 {
+        format!("{:.2}G", n / 1e9)
+    } else if n >= 1e6 {
+        format!("{:.2}M", n / 1e6)
+    } else if n >= 1e3 {
+        format!("{:.2}k", n / 1e3)
+    } else {
+        format!("{:.0}", n)
+    }
+}
+
+/// `3723.4` seconds -> `"1.03h"`, `"12.3s"`, ...
+pub fn human_secs(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{:.2}h", s / 3600.0)
+    } else if s >= 60.0 {
+        format!("{:.1}m", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{:.1}s", s)
+    } else {
+        format!("{:.1}ms", s * 1e3)
+    }
+}
+
+/// Create the parent directory of `path` if needed.
+pub fn ensure_parent(path: &str) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    Ok(())
+}
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human() {
+        assert_eq!(human_count(1_234_567.0), "1.23M");
+        assert_eq!(human_count(999.0), "999");
+        assert_eq!(human_secs(3723.4), "1.03h");
+        assert_eq!(human_secs(0.5), "500.0ms");
+    }
+
+    #[test]
+    fn stats() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((stddev(&[1.0, 1.0, 1.0])).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Property tests over the coordinator invariants (DESIGN.md §7) using the
+//! in-repo mini property harness (proptest is not vendored offline).
+
+use affinequant::coordinator::mask::MaskSchedule;
+use affinequant::coordinator::stability;
+use affinequant::linalg::{gj_inverse_nopivot, inverse, inverse_residual, sdd_margin};
+use affinequant::prop_assert;
+use affinequant::proptestx::Runner;
+use affinequant::quant::{pack_bits, quant_dequant, quantize_codes, unpack_bits, QuantSpec};
+use affinequant::rngx::Pcg32;
+use affinequant::tensor::Tensor;
+
+fn random_sdd(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    let mut a: Vec<f32> = (0..n * n).map(|_| (rng.normal() as f32) / n as f32).collect();
+    for i in 0..n {
+        let off: f32 = (0..n).filter(|&j| j != i).map(|j| a[i * n + j].abs()).sum();
+        a[i * n + i] = (1.0 + rng.uniform() as f32) * (off + 0.05);
+    }
+    a
+}
+
+/// SDD matrices are invertible — both LU and the in-graph Gauss-Jordan.
+#[test]
+fn prop_sdd_matrices_invert() {
+    Runner { cases: 40, ..Default::default() }.run(
+        "A @ inv(A) ≈ I for SDD",
+        |rng| {
+            let n = 2 + rng.below(24);
+            random_sdd(rng, n)
+        },
+        |a| {
+            let n = (a.len() as f64).sqrt() as usize;
+            if n * n != a.len() {
+                return Ok(()); // shrunk to non-square, skip
+            }
+            let a64: Vec<f64> = a.iter().map(|&v| v as f64).collect();
+            let lu = inverse(&a64, n).ok_or("LU failed on SDD")?;
+            prop_assert!(inverse_residual(&a64, &lu, n) < 1e-8, "LU residual too big");
+            let gj = gj_inverse_nopivot(&a64, n).ok_or("GJ failed on SDD")?;
+            prop_assert!(inverse_residual(&a64, &gj, n) < 1e-8, "GJ residual too big");
+            Ok(())
+        },
+    );
+}
+
+/// Gradual-mask damping never breaks strict diagonal dominance of a
+/// diagonally-initialized matrix when off-diagonals are small (Theorem 1
+/// regime) — and the mask never enables entries outside the band.
+#[test]
+fn prop_masked_matrix_stays_sdd() {
+    Runner { cases: 40, ..Default::default() }.run(
+        "masked A stays SDD for small alpha",
+        |rng| {
+            let n = 4 + rng.below(16);
+            // raw A: big diagonal + arbitrary off-diagonal noise
+            let mut a: Vec<f32> = (0..n * n).map(|_| rng.normal() as f32 * 0.5).collect();
+            for i in 0..n {
+                a[i * n + i] = 1.0 + rng.uniform() as f32;
+            }
+            a
+        },
+        |a| {
+            let n = (a.len() as f64).sqrt() as usize;
+            if n * n != a.len() || n < 2 {
+                return Ok(());
+            }
+            // alpha below 1/(n·max_off/min_diag) guarantees SDD of A∘GM
+            let max_off = a
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i / n != i % n)
+                .map(|(_, v)| v.abs())
+                .fold(0.0f32, f32::max);
+            let min_diag =
+                (0..n).map(|i| a[i * n + i].abs()).fold(f32::INFINITY, f32::min);
+            let alpha = 0.9 * min_diag / ((n as f32) * max_off.max(1e-6));
+            let sched = MaskSchedule { alpha, epochs: 10, full_affine: true, gradual: true };
+            for e in 1..=10 {
+                let mut m = vec![0.0f32; n * n];
+                sched.fill_square(e, n, &mut m);
+                let masked: Vec<f32> = a.iter().zip(&m).map(|(x, y)| x * y).collect();
+                prop_assert!(
+                    sdd_margin(&masked, n) > 0.0,
+                    "masked matrix lost SDD at epoch {e} (alpha {alpha})"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+/// SDD projection restores a positive margin without touching the diagonal.
+#[test]
+fn prop_projection_restores_sdd() {
+    Runner { cases: 40, ..Default::default() }.run(
+        "project_sdd restores margin",
+        |rng| {
+            let n = 3 + rng.below(12);
+            (0..n * n).map(|_| rng.normal() as f32).collect::<Vec<f32>>()
+        },
+        |a| {
+            let n = (a.len() as f64).sqrt() as usize;
+            if n * n != a.len() || n < 2 {
+                return Ok(());
+            }
+            let mut b = a.clone();
+            // force nonzero diagonal so a positive margin is achievable
+            for i in 0..n {
+                if b[i * n + i].abs() < 0.1 {
+                    b[i * n + i] = 0.5;
+                }
+            }
+            let before_diag: Vec<f32> = (0..n).map(|i| b[i * n + i]).collect();
+            stability::project_sdd(&mut b, n, 0.01);
+            prop_assert!(sdd_margin(&b, n) >= 0.009, "margin {}", sdd_margin(&b, n));
+            for i in 0..n {
+                prop_assert!(b[i * n + i] == before_diag[i], "diagonal changed");
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Quantize-dequantize error is bounded by scale/2 and idempotent;
+/// bit-packing round-trips for every bit width.
+#[test]
+fn prop_quant_roundtrips() {
+    Runner { cases: 30, ..Default::default() }.run(
+        "quant-dequant invariants",
+        |rng| {
+            let din = [32usize, 64, 128][rng.below(3)];
+            let dout = 8 + rng.below(24);
+            let mut v = rng.normal_vec(din * dout, 1.0);
+            v.push(din as f32); // smuggle dims through the Vec<f32> case
+            v.push(dout as f32);
+            v
+        },
+        |v| {
+            if v.len() < 3 {
+                return Ok(());
+            }
+            let dout = v[v.len() - 1] as usize;
+            let din = v[v.len() - 2] as usize;
+            if din * dout + 2 != v.len() || din % 32 != 0 {
+                return Ok(());
+            }
+            let w = Tensor::new(vec![din, dout], v[..din * dout].to_vec());
+            for (bits, group) in [(2u32, 0usize), (3, 32), (4, 0), (8, 32)] {
+                let spec = QuantSpec::new(bits, group);
+                let (codes, params, shape) = quantize_codes(&w, spec, None);
+                prop_assert!(
+                    codes.iter().all(|&c| (c as u64) < (1 << bits)),
+                    "code out of range at {bits} bits"
+                );
+                let dq = affinequant::quant::dequantize_codes(&codes, &params, &shape, spec);
+                let g = spec.group_len(din);
+                for i in 0..din {
+                    for j in 0..dout {
+                        let p = params[(i / g) * dout + j];
+                        let err = (dq.at2(i, j) - w.at2(i, j)).abs();
+                        prop_assert!(
+                            err <= p.scale / 2.0 + 1e-5,
+                            "error {err} > scale/2 {}",
+                            p.scale / 2.0
+                        );
+                    }
+                }
+                // idempotence
+                let dq2 = quant_dequant(&dq, spec, None);
+                prop_assert!(dq.mse(&dq2) < 1e-10, "not idempotent");
+                // packing round-trip
+                let packed = pack_bits(&codes, bits);
+                prop_assert!(
+                    unpack_bits(&packed, bits, codes.len()) == codes,
+                    "pack/unpack mismatch at {bits} bits"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Merge equivalence: with near-infinite bits (8-bit is enough at these
+/// magnitudes), W_eval = A⁻¹·QDQ(A·W) returns to W; the out-site per-head
+/// fold composes back to the identity through (wv·A⁻¹)·(A·wo).
+#[test]
+fn prop_merge_identity_high_bits() {
+    use affinequant::model::merge::{inverse_prec, mm_prec, MergePrecision};
+    Runner { cases: 20, ..Default::default() }.run(
+        "A⁻¹ QDQ(A W) ≈ W at high bits",
+        |rng| {
+            let n = 8 + 4 * rng.below(8);
+            let mut v = random_sdd(rng, n);
+            v.extend(rng.normal_vec(n * n, 0.05));
+            v
+        },
+        |v| {
+            let n = ((v.len() / 2) as f64).sqrt() as usize;
+            if 2 * n * n != v.len() || n < 2 {
+                return Ok(());
+            }
+            let a = Tensor::new(vec![n, n], v[..n * n].to_vec());
+            let w = Tensor::new(vec![n, n], v[n * n..].to_vec());
+            let prec = MergePrecision::F32InvF64;
+            let aw = mm_prec(&a, &w, prec);
+            let q = quant_dequant(&aw, QuantSpec::new(8, 0), None);
+            let back = mm_prec(&inverse_prec(&a, prec), &q, prec);
+            let err = back.sub(&w).max_abs();
+            prop_assert!(err < 0.05, "round-trip error {err}");
+            Ok(())
+        },
+    );
+}

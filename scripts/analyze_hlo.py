@@ -1,0 +1,57 @@
+#!/usr/bin/env python
+"""L2 perf analysis: op census over the lowered HLO artifacts.
+
+Checks the §Perf L2 targets: zero custom-calls (the rust runtime cannot
+execute them), no transpose/reshape explosions, dot count consistent with
+the model structure (redundant-recomputation smell test). Run after
+`make artifacts`:
+
+    python scripts/analyze_hlo.py [artifacts]
+"""
+
+import os
+import re
+import sys
+from collections import Counter
+
+
+def census(path):
+    ops = Counter()
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            m = re.match(r"(?:ROOT )?%?[\w.\-]+ = \S+ ([a-z\-]+)\(", line)
+            if m:
+                ops[m.group(1)] += 1
+    return ops
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else "artifacts"
+    total = Counter()
+    print(f"{'entry':<28} {'ops':>6} {'dot':>5} {'transp':>6} {'reshape':>7} "
+          f"{'custom':>6} {'KB':>8}")
+    for model in sorted(os.listdir(root)):
+        mdir = os.path.join(root, model)
+        if not os.path.isdir(mdir):
+            continue
+        for fn in sorted(os.listdir(mdir)):
+            if not fn.endswith(".hlo.txt"):
+                continue
+            path = os.path.join(mdir, fn)
+            ops = census(path)
+            total += ops
+            n = sum(ops.values())
+            kb = os.path.getsize(path) / 1e3
+            print(f"{model}/{fn.removesuffix('.hlo.txt'):<{28-len(model)-1}} "
+                  f"{n:>6} {ops['dot']:>5} {ops['transpose']:>6} "
+                  f"{ops['reshape']:>7} {ops['custom-call']:>6} {kb:>8.1f}")
+    print("\ntop ops overall:")
+    for op, n in total.most_common(12):
+        print(f"  {op:<18} {n}")
+    assert total["custom-call"] == 0, "custom-calls present — rust cannot run these!"
+    print("\nOK: zero custom-calls across all artifacts")
+
+
+if __name__ == "__main__":
+    main()
