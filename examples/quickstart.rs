@@ -88,6 +88,27 @@ fn main() -> Result<()> {
     zs_t.print();
     save_table(&zs_t, "quickstart_zeroshot")?;
 
+    // Deployment path: pack the trained weights to w4g128 and decode a few
+    // continuations through the host engine (KV cache + continuous
+    // batching; `affinequant generate` is the CLI twin of this snippet).
+    let (spec, _) = parse_config("w4a16g128")?;
+    let mut engine = affinequant::engine::Engine::from_store(&fp, spec, 4);
+    println!("\n== packed engine — {}", engine.memory_report());
+    let prompts = ["the bani ", "a fel of the ", "the masi sotos "];
+    let gen_t = Timer::start();
+    let (texts, stats) =
+        engine.generate_text(&prompts, 32, affinequant::engine::Sampler::Greedy, 0);
+    for (p, o) in prompts.iter().zip(&texts) {
+        println!("  {p}⟨{o}⟩");
+    }
+    println!(
+        "  {} generated (+{} prefill) at {:.0} tok/s throughput (peak batch {})",
+        stats.tokens_generated,
+        stats.tokens_processed - stats.tokens_generated,
+        stats.tokens_processed as f64 / gen_t.secs().max(1e-9),
+        stats.peak_batch
+    );
+
     println!("quickstart done in {}", affinequant::util::human_secs(t.secs()));
     Ok(())
 }

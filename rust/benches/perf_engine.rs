@@ -1,0 +1,160 @@
+//! Packed-engine perf: fused unpack→dequant GEMM vs the f32 fake-quant
+//! matmul baseline (what the AOT graphs do on every forward), across
+//! batch {1, 4, 16} and w4g128 / w3g128 / w2g64 — plus end-to-end decode
+//! tokens/sec through the continuous-batching engine.
+//!
+//! Pure host: runs with `--no-default-features` and no artifacts. With the
+//! `pjrt` feature *and* `artifacts/` present it also prints the harness
+//! engine exhibit (parity + PJRT-baseline throughput).
+//!
+//!     cargo bench --bench perf_engine [--no-default-features]
+//!
+//! Acceptance target: ≥4× tokens/sec for w4g128 packed GEMM over the
+//! fake-quant baseline at batch 16 on the same thread count.
+
+use affinequant::benchx::{bench, Table};
+use affinequant::engine::gemm::{packed_gemm, packed_matvec_grouped, PackedWeight};
+use affinequant::engine::packed::PackedLinear;
+use affinequant::engine::{Engine, Request, Sampler};
+use affinequant::model::zoo;
+use affinequant::quant::{quant_dequant, QuantSpec};
+use affinequant::report::save_table;
+use affinequant::rngx::Pcg32;
+use affinequant::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Pcg32::seeded(1);
+    let (din, dout) = (1024usize, 1024usize);
+    let w = Tensor::randn(&[din, dout], 0.02, &mut rng);
+
+    let mut t = Table::new(
+        "packed GEMM vs f32 fake-quant matmul (1024x1024)",
+        &["config", "batch", "fakequant_ms", "dense_ms", "packed_ms", "speedup_vs_fq"],
+    );
+    let mut w4b16_speedup = 0.0f64;
+
+    for (label, spec) in [
+        ("w4g128", QuantSpec::new(4, 128)),
+        ("w3g128", QuantSpec::new(3, 128)),
+        ("w2g64", QuantSpec::new(2, 64)),
+    ] {
+        let pl = PackedLinear::pack("w", &w, spec);
+        let dense = pl.dequantize();
+        for m in [1usize, 4, 16] {
+            let x = Tensor::randn(&[m, din], 1.0, &mut rng);
+            // baseline: fake-quantize in f32 on every call, then matmul —
+            // the AOT serving graphs' per-forward cost shape
+            let r_fq = bench(&format!("{label} b{m} fakequant+matmul"), 2, 8, || {
+                let dq = quant_dequant(&w, spec, None);
+                std::hint::black_box(x.matmul(&dq));
+            });
+            // floor: pre-dequantized dense f32 matmul only
+            let r_dense = bench(&format!("{label} b{m} dense matmul"), 2, 8, || {
+                std::hint::black_box(x.matmul(&dense));
+            });
+            // fused packed path
+            let r_packed = bench(&format!("{label} b{m} packed fused"), 2, 8, || {
+                std::hint::black_box(pl.matmul(&x.data, m));
+            });
+            let speedup = r_fq.median_s / r_packed.median_s;
+            if label == "w4g128" && m == 16 {
+                w4b16_speedup = speedup;
+            }
+            t.row(vec![
+                label.to_string(),
+                m.to_string(),
+                format!("{:.3}", r_fq.median_s * 1e3),
+                format!("{:.3}", r_dense.median_s * 1e3),
+                format!("{:.3}", r_packed.median_s * 1e3),
+                format!("{speedup:.2}x"),
+            ]);
+            t.print_last();
+        }
+    }
+    println!(
+        "\nw4g128 batch-16 packed-vs-fakequant speedup: {w4b16_speedup:.2}x (target: >=4x)"
+    );
+
+    // group-factored matvec kernel (batch-1 decode special case)
+    {
+        let spec = QuantSpec::new(4, 128);
+        let pl = PackedLinear::pack("w", &w, spec);
+        let x: Vec<f32> = (0..din).map(|_| rng.normal() as f32).collect();
+        let (scales, zps) = pl.params();
+        let pw = PackedWeight {
+            packed: &pl.packed,
+            bits: spec.bits,
+            din,
+            dout,
+            group_len: spec.group_len(din),
+            scales,
+            zps,
+        };
+        bench("w4g128 b1 matvec_grouped", 2, 8, || {
+            let mut y = vec![0.0f32; dout];
+            packed_matvec_grouped(&pw, &x, &mut y);
+            std::hint::black_box(y);
+        });
+        bench("w4g128 b1 gemm stripe", 2, 8, || {
+            let mut y = vec![0.0f32; dout];
+            packed_gemm(&pw, &x, &mut y, 1);
+            std::hint::black_box(y);
+        });
+    }
+
+    // ---------------------------------------- end-to-end engine decode
+    let mut dt = Table::new(
+        "engine decode throughput (opt-s2, w4g128, greedy)",
+        &["batch", "tok_s", "scheduler_steps", "kv_mb"],
+    );
+    let ps = zoo::seeded_store("opt-s2", 42).expect("zoo model");
+    for batch in [1usize, 4, 16] {
+        let mut engine = Engine::from_store(&ps, QuantSpec::new(4, 128), batch);
+        let reqs: Vec<Request> = (0..batch)
+            .map(|i| Request {
+                id: i as u64,
+                prompt: vec![(i * 17 % 256) as i32, 5, 9],
+                max_new: 64,
+                eos: None,
+            })
+            .collect();
+        let timer = affinequant::util::Timer::start();
+        let (_, stats) = engine.generate(reqs, Sampler::Greedy, 0);
+        let secs = timer.secs();
+        dt.row(vec![
+            batch.to_string(),
+            format!("{:.0}", stats.tokens_processed as f64 / secs),
+            stats.scheduler_steps.to_string(),
+            format!("{:.1}", engine.kv_bytes() as f64 / 1e6),
+        ]);
+        dt.print_last();
+    }
+    println!("{}", engine_memory_line(&ps));
+
+    t.print();
+    dt.print();
+    save_table(&t, "perf_engine_gemm")?;
+    save_table(&dt, "perf_engine_decode")?;
+
+    // PJRT comparison when the artifacts exist (skipped silently otherwise)
+    #[cfg(feature = "pjrt")]
+    {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            let mut ctx = affinequant::harness::Ctx::load()?;
+            affinequant::harness::engine_table(
+                &mut ctx,
+                "opt-s1",
+                &["w4a16g128".into(), "w3a16g128".into(), "w2a16g64".into()],
+                "perf_engine_pjrt",
+            )?;
+        } else {
+            println!("(artifacts/ missing — skipping the PJRT comparison table)");
+        }
+    }
+    Ok(())
+}
+
+fn engine_memory_line(ps: &affinequant::model::ParamStore) -> String {
+    let engine = Engine::from_store(ps, QuantSpec::new(4, 128), 16);
+    engine.memory_report()
+}

@@ -125,6 +125,13 @@ impl Table {
         println!("{}", self.to_markdown());
     }
 
+    /// Print the most recent row (progress feedback during long sweeps).
+    pub fn print_last(&self) {
+        if let Some(r) = self.rows.last() {
+            println!("  {}", r.join(" | "));
+        }
+    }
+
     pub fn to_csv(&self) -> String {
         let mut out = self.header.join(",");
         out.push('\n');

@@ -24,15 +24,29 @@ impl Cli {
         while i < args.len() {
             let a = &args[i];
             if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                if key.is_empty() {
+                    bail!("empty option name");
+                }
+                // `--key=value` form: the only way to pass values starting
+                // with `-` (e.g. `--temp=-1`); `=` binds tighter than the
+                // space-separated form.
+                if let Some((k, v)) = key.split_once('=') {
+                    if k.is_empty() {
+                        bail!("empty option name in {a:?}");
+                    }
+                    opts.insert(k.to_string(), v.to_string());
+                    i += 1;
+                } else if i + 1 < args.len() && !args[i + 1].starts_with('-') {
                     opts.insert(key.to_string(), args[i + 1].clone());
                     i += 2;
                 } else {
+                    // boolean flag; a following `-…` token is never
+                    // swallowed as its value (use `--key=-1` for that)
                     opts.insert(key.to_string(), "true".to_string());
                     i += 1;
                 }
             } else {
-                bail!("unexpected positional argument {a:?}");
+                bail!("unexpected positional argument {a:?} (negative values need --key=value)");
             }
         }
         Ok(Cli { cmd, opts })
@@ -95,6 +109,20 @@ mod tests {
         assert!(c.flag("all"));
         assert_eq!(c.usize_or("steps", 0), 10);
         assert_eq!(c.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn equals_form_accepts_negative_values() {
+        let c = Cli::parse(&s(&["gen", "--temp=-1", "--topk=40", "--greedy"])).unwrap();
+        assert_eq!(c.f32_or("temp", 0.0), -1.0);
+        assert_eq!(c.usize_or("topk", 0), 40);
+        assert!(c.flag("greedy"));
+        // a bare `-1` after a flag is rejected, not silently swallowed
+        assert!(Cli::parse(&s(&["gen", "--temp", "-1"])).is_err());
+        // `=` in the value is preserved
+        let c = Cli::parse(&s(&["gen", "--expr=a=b"])).unwrap();
+        assert_eq!(c.get("expr"), Some("a=b"));
+        assert!(Cli::parse(&s(&["gen", "--=x"])).is_err());
     }
 
     #[test]

@@ -8,11 +8,18 @@
 //! * [`pipeline`] — whole-model calibration producing a merged quantized
 //!   [`crate::model::ParamStore`].
 
+// mask/stability are pure host math (usable without `pjrt`); the optimizer
+// loop, activation streams, and pipeline step through the PJRT artifacts.
+#[cfg(feature = "pjrt")]
 pub mod block_opt;
 pub mod mask;
+#[cfg(feature = "pjrt")]
 pub mod pipeline;
 pub mod stability;
+#[cfg(feature = "pjrt")]
 pub mod stream;
 
+#[cfg(feature = "pjrt")]
 pub use block_opt::CalibOptions;
+#[cfg(feature = "pjrt")]
 pub use pipeline::{calibrate, CalibReport};

@@ -1,0 +1,477 @@
+//! Host-side transformer forward + batched autoregressive decoding.
+//!
+//! Reimplements the L2 block math (`python/compile/blocks.py`) against the
+//! packed-weight GEMM: pre-LN attention (causal, RoPE for the `ll` family)
+//! and the family MLP, with per-sequence KV-cached incremental steps.
+//!
+//! **Parity contract:** [`step`] (incremental, any batch composition) and
+//! [`forward_full`] (whole-context reference) run the *same* per-row code —
+//! same norm, same fused GEMM (whose row results are independent of the
+//! batch size), same attention accumulation order — so greedy decode is
+//! bit-identical to re-running the full forward after every token. Tests in
+//! `rust/tests/engine.rs` assert exact equality.
+
+use crate::rngx::Pcg32;
+use crate::tensor::Tensor;
+
+use super::kv::KvCache;
+use super::packed::{PackedBlock, PackedModel};
+
+pub const LN_EPS: f32 = 1e-5;
+
+// ------------------------------------------------------------ primitives
+
+pub fn layer_norm_row(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+    let n = x.len() as f32;
+    let mu = x.iter().sum::<f32>() / n;
+    let var = x.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n;
+    let inv = 1.0 / (var + LN_EPS).sqrt();
+    for ((o, &v), (&gg, &bb)) in out.iter_mut().zip(x).zip(g.iter().zip(b)) {
+        *o = (v - mu) * inv * gg + bb;
+    }
+}
+
+pub fn rms_norm_row(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let n = x.len() as f32;
+    let ms = x.iter().map(|&v| v * v).sum::<f32>() / n;
+    let inv = 1.0 / (ms + LN_EPS).sqrt();
+    for ((o, &v), &gg) in out.iter_mut().zip(x).zip(g) {
+        *o = v * inv * gg;
+    }
+}
+
+/// tanh-approximated GELU (matches `jax.nn.gelu`'s default).
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_56; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// In-place stable softmax.
+pub fn softmax(xs: &mut [f32]) {
+    let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in xs.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    for v in xs.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Rotary embedding at absolute position `pos`, applied per head over a
+/// `(d_model,)` row (mirrors `blocks.rope`: first/second half pairing).
+pub fn rope_row(row: &mut [f32], n_heads: usize, head_dim: usize, pos: usize) {
+    let half = head_dim / 2;
+    let p = pos as f32;
+    for h in 0..n_heads {
+        let base = h * head_dim;
+        for i in 0..half {
+            let freq = 10000.0f32.powf(-(i as f32) / half as f32);
+            let ang = p * freq;
+            let (sin, cos) = ang.sin_cos();
+            let x1 = row[base + i];
+            let x2 = row[base + half + i];
+            row[base + i] = x1 * cos - x2 * sin;
+            row[base + half + i] = x1 * sin + x2 * cos;
+        }
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// Causal multi-head attention for one query row against a slot's cached
+/// K/V prefix (`limit` oldest entries, which include the row itself).
+pub fn attend(
+    n_heads: usize,
+    head_dim: usize,
+    q: &[f32],
+    cache: &KvCache,
+    slot: usize,
+    layer: usize,
+    limit: usize,
+    out: &mut [f32],
+) {
+    debug_assert!(limit >= 1 && limit <= cache.len(slot));
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let mut scores = vec![0.0f32; limit];
+    for h in 0..n_heads {
+        let hr = h * head_dim..(h + 1) * head_dim;
+        let qh = &q[hr.clone()];
+        for (t, s) in scores.iter_mut().enumerate() {
+            *s = dot(qh, &cache.k_row(slot, layer, t)[hr.clone()]) * scale;
+        }
+        softmax(&mut scores);
+        let oh = &mut out[hr.clone()];
+        oh.fill(0.0);
+        for (t, &p) in scores.iter().enumerate() {
+            let vh = &cache.v_row(slot, layer, t)[hr.clone()];
+            for (o, &vv) in oh.iter_mut().zip(vh) {
+                *o += p * vv;
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- block layer
+
+/// Per-row decode context: which cache slot the row belongs to, its
+/// absolute position, the ring index claimed for this token, and how many
+/// cache entries (oldest-first) its attention may see.
+#[derive(Clone, Copy, Debug)]
+pub struct RowCtx {
+    pub slot: usize,
+    pub pos: usize,
+    pub ring: usize,
+    pub limit: usize,
+}
+
+fn add_bias(x: &mut [f32], bias: &[f32], m: usize) {
+    let d = bias.len();
+    for i in 0..m {
+        for (v, &b) in x[i * d..(i + 1) * d].iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// One transformer block over `m` rows (shared by incremental + full paths).
+fn layer_forward(
+    model: &PackedModel,
+    block: &PackedBlock,
+    layer: usize,
+    x: &mut [f32],
+    rows: &[RowCtx],
+    cache: &mut KvCache,
+) {
+    let cfg = &model.cfg;
+    let m = rows.len();
+    let d = cfg.d_model;
+    let opt = cfg.family == "opt";
+
+    // pre-attention norm
+    let mut xn = vec![0.0f32; m * d];
+    for i in 0..m {
+        let xi = &x[i * d..(i + 1) * d];
+        let o = &mut xn[i * d..(i + 1) * d];
+        if opt {
+            layer_norm_row(xi, block.f32("ln1_g"), block.f32("ln1_b"), o);
+        } else {
+            rms_norm_row(xi, block.f32("rms1_g"), o);
+        }
+    }
+
+    // qkv projections (fused packed GEMM)
+    let mut q = block.linear("wq").matmul(&xn, m);
+    let mut k = block.linear("wk").matmul(&xn, m);
+    let mut v = block.linear("wv").matmul(&xn, m);
+    if opt {
+        add_bias(&mut q, block.f32("bq"), m);
+        add_bias(&mut k, block.f32("bk"), m);
+        add_bias(&mut v, block.f32("bv"), m);
+    }
+
+    // rope + cache write + attention, row by row
+    let mut ctx = vec![0.0f32; m * d];
+    for (i, rc) in rows.iter().enumerate() {
+        let qrow = &mut q[i * d..(i + 1) * d];
+        let krow = &mut k[i * d..(i + 1) * d];
+        if !opt {
+            rope_row(qrow, cfg.n_heads, cfg.head_dim, rc.pos);
+            rope_row(krow, cfg.n_heads, cfg.head_dim, rc.pos);
+        }
+        cache.write_k(rc.slot, layer, rc.ring, krow);
+        cache.write_v(rc.slot, layer, rc.ring, &v[i * d..(i + 1) * d]);
+    }
+    for (i, rc) in rows.iter().enumerate() {
+        attend(
+            cfg.n_heads,
+            cfg.head_dim,
+            &q[i * d..(i + 1) * d],
+            cache,
+            rc.slot,
+            layer,
+            rc.limit,
+            &mut ctx[i * d..(i + 1) * d],
+        );
+    }
+
+    // residual: x += ctx @ wo (+ bo)
+    let mut proj = block.linear("wo").matmul(&ctx, m);
+    if opt {
+        add_bias(&mut proj, block.f32("bo"), m);
+    }
+    for (xv, &pv) in x.iter_mut().zip(&proj) {
+        *xv += pv;
+    }
+
+    // MLP
+    for i in 0..m {
+        let xi = &x[i * d..(i + 1) * d];
+        let o = &mut xn[i * d..(i + 1) * d];
+        if opt {
+            layer_norm_row(xi, block.f32("ln2_g"), block.f32("ln2_b"), o);
+        } else {
+            rms_norm_row(xi, block.f32("rms2_g"), o);
+        }
+    }
+    let mlp = if opt {
+        let mut h = block.linear("w1").matmul(&xn, m);
+        add_bias(&mut h, block.f32("b1"), m);
+        for v in h.iter_mut() {
+            *v = gelu(*v);
+        }
+        let mut y = block.linear("w2").matmul(&h, m);
+        add_bias(&mut y, block.f32("b2"), m);
+        y
+    } else {
+        let hg = block.linear("wg").matmul(&xn, m);
+        let hu = block.linear("wu").matmul(&xn, m);
+        let h: Vec<f32> = hg.iter().zip(&hu).map(|(&g, &u)| silu(g) * u).collect();
+        block.linear("wd").matmul(&h, m)
+    };
+    for (xv, &mv) in x.iter_mut().zip(&mlp) {
+        *xv += mv;
+    }
+}
+
+fn embed_row(model: &PackedModel, token: i32, pos: usize, out: &mut [f32]) {
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    let tok = token as usize;
+    assert!(tok < cfg.vocab, "token {token} out of vocab {}", cfg.vocab);
+    let emb = model.global("tok_emb");
+    out.copy_from_slice(&emb.data[tok * d..(tok + 1) * d]);
+    if cfg.family == "opt" {
+        assert!(
+            pos < cfg.seq,
+            "position {pos} exceeds the learned positional table ({}) — \
+             the scheduler must cap sequence length for the opt family",
+            cfg.seq
+        );
+        let pe = model.global("pos_emb");
+        for (o, &p) in out.iter_mut().zip(&pe.data[pos * d..(pos + 1) * d]) {
+            *o += p;
+        }
+    }
+}
+
+/// Final norm + tied-embedding head over `m` rows: `(m, vocab)` logits.
+/// `select` (same length as rows) skips rows whose logits nobody reads —
+/// prefill rows — leaving them zero; a row's logits never depend on the
+/// other rows, so skipping cannot change sampled outputs.
+fn head_logits(model: &PackedModel, x: &[f32], m: usize, select: Option<&[bool]>) -> Tensor {
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    let emb = model.global("tok_emb");
+    let mut hf = vec![0.0f32; d];
+    let mut out = Tensor::zeros(&[m, cfg.vocab]);
+    for i in 0..m {
+        if select.is_some_and(|s| !s[i]) {
+            continue;
+        }
+        let xi = &x[i * d..(i + 1) * d];
+        if cfg.family == "opt" {
+            layer_norm_row(xi, &model.global("lnf_g").data, &model.global("lnf_b").data, &mut hf);
+        } else {
+            rms_norm_row(xi, &model.global("rmsf_g").data, &mut hf);
+        }
+        let orow = out.row_mut(i);
+        for (vcb, o) in orow.iter_mut().enumerate() {
+            *o = dot(&hf, &emb.data[vcb * d..(vcb + 1) * d]);
+        }
+    }
+    out
+}
+
+// -------------------------------------------------------------- stepping
+
+/// One decode-step input: feed `token` at absolute `pos` for the sequence
+/// living in cache `slot`.
+#[derive(Clone, Copy, Debug)]
+pub struct StepInput {
+    pub slot: usize,
+    pub token: i32,
+    pub pos: usize,
+}
+
+/// Advance every listed sequence by one token; returns `(m, vocab)` logits
+/// (row i predicts the token after `inputs[i].token`). Slots must be
+/// distinct within one call.
+pub fn step(model: &PackedModel, inputs: &[StepInput], cache: &mut KvCache) -> Tensor {
+    step_select(model, inputs, cache, None)
+}
+
+/// [`step`] with a per-row logits mask: rows with `need_logits[i] == false`
+/// (mid-prefill) still advance the KV cache but skip the vocab head — the
+/// most expensive per-token stage for small models.
+pub fn step_select(
+    model: &PackedModel,
+    inputs: &[StepInput],
+    cache: &mut KvCache,
+    need_logits: Option<&[bool]>,
+) -> Tensor {
+    let m = inputs.len();
+    assert!(m > 0, "empty step");
+    debug_assert!(
+        (0..m).all(|i| (i + 1..m).all(|j| inputs[i].slot != inputs[j].slot)),
+        "duplicate slots in one step"
+    );
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    let mut x = vec![0.0f32; m * d];
+    for (i, inp) in inputs.iter().enumerate() {
+        embed_row(model, inp.token, inp.pos, &mut x[i * d..(i + 1) * d]);
+    }
+    let rows: Vec<RowCtx> = inputs
+        .iter()
+        .map(|inp| {
+            let ring = cache.advance(inp.slot);
+            RowCtx { slot: inp.slot, pos: inp.pos, ring, limit: cache.len(inp.slot) }
+        })
+        .collect();
+    for (layer, block) in model.blocks.iter().enumerate() {
+        layer_forward(model, block, layer, &mut x, &rows, cache);
+    }
+    head_logits(model, &x, m, need_logits)
+}
+
+/// Hidden states (pre-final-norm) of a whole-context forward — the
+/// quantity `runtime::block_fp` chains produce; used by the PJRT parity
+/// exhibit. Allocates its own KV arena sized to the sequence.
+pub fn hidden_full(model: &PackedModel, tokens: &[i32]) -> Tensor {
+    let s_len = tokens.len();
+    assert!(s_len > 0, "empty sequence");
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    let mut cache = KvCache::new(1, cfg.n_layers, s_len, d);
+    let mut x = vec![0.0f32; s_len * d];
+    let rows: Vec<RowCtx> = (0..s_len)
+        .map(|i| {
+            embed_row(model, tokens[i], i, &mut x[i * d..(i + 1) * d]);
+            let ring = cache.advance(0);
+            RowCtx { slot: 0, pos: i, ring, limit: i + 1 }
+        })
+        .collect();
+    for (layer, block) in model.blocks.iter().enumerate() {
+        layer_forward(model, block, layer, &mut x, &rows, &mut cache);
+    }
+    Tensor::new(vec![s_len, d], x)
+}
+
+/// Whole-context reference forward for one sequence: `(S, vocab)` logits
+/// with causal attention, computed through the exact per-row code `step`
+/// uses.
+pub fn forward_full(model: &PackedModel, tokens: &[i32]) -> Tensor {
+    let h = hidden_full(model, tokens);
+    head_logits(model, &h.data, tokens.len(), None)
+}
+
+// -------------------------------------------------------------- sampling
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampler {
+    /// Argmax, lowest index on ties — fully deterministic.
+    Greedy,
+    /// Sample among the `k` highest logits at `temperature`.
+    TopK { k: usize, temperature: f32 },
+}
+
+pub fn sample_row(logits: &[f32], sampler: Sampler, rng: &mut Pcg32) -> i32 {
+    match sampler {
+        Sampler::Greedy => argmax(logits),
+        Sampler::TopK { k, temperature } => {
+            if k <= 1 || temperature <= 0.0 {
+                return argmax(logits);
+            }
+            let k = k.min(logits.len());
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_by(|&a, &b| {
+                logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            idx.truncate(k);
+            let mx = logits[idx[0]];
+            let weights: Vec<f64> = idx
+                .iter()
+                .map(|&i| (((logits[i] - mx) / temperature) as f64).exp())
+                .collect();
+            idx[rng.weighted(&weights)] as i32
+        }
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut xs = vec![1.0f32, 2.0, 3.0];
+        softmax(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(xs[2] > xs[1] && xs[1] > xs[0]);
+    }
+
+    #[test]
+    fn norms_match_semantics() {
+        let x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let g = vec![1.0f32; 4];
+        let b = vec![0.0f32; 4];
+        let mut o = vec![0.0f32; 4];
+        layer_norm_row(&x, &g, &b, &mut o);
+        assert!(o.iter().sum::<f32>().abs() < 1e-5, "{o:?}");
+        let mut r = vec![0.0f32; 4];
+        rms_norm_row(&x, &g, &mut r);
+        let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!((r[0] - 1.0 / (ms + LN_EPS).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_pos0_is_identity() {
+        let mut row: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin()).collect();
+        let orig = row.clone();
+        rope_row(&mut row, 2, 16, 0);
+        assert_eq!(row, orig, "pos 0 must be identity");
+        rope_row(&mut row, 2, 16, 17);
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let n1: f32 = row.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-4, "rotation must preserve norm");
+        assert_ne!(row, orig);
+    }
+
+    #[test]
+    fn sampler_greedy_and_topk() {
+        let logits = vec![0.1f32, 3.0, 2.9, -1.0];
+        let mut rng = Pcg32::seeded(4);
+        assert_eq!(sample_row(&logits, Sampler::Greedy, &mut rng), 1);
+        // top-2 sampling only ever returns the top-2 indices
+        for _ in 0..100 {
+            let t = sample_row(&logits, Sampler::TopK { k: 2, temperature: 0.8 }, &mut rng);
+            assert!(t == 1 || t == 2, "{t}");
+        }
+        // temperature 0 falls back to greedy
+        assert_eq!(
+            sample_row(&logits, Sampler::TopK { k: 3, temperature: 0.0 }, &mut rng),
+            1
+        );
+    }
+}

@@ -1,0 +1,336 @@
+//! Fused unpack→dequant→matmul microkernels over bit-packed weight codes.
+//!
+//! The deployment format stores a row-major `(din, dout)` weight as b-bit
+//! little-endian codes (`quant::pack_bits` layout) plus per-(group, col)
+//! f16 scale/zero-point. The GEMM never materializes the f32 weight matrix:
+//! it streams one code row at a time through a small per-stripe buffer
+//! (unpack → dequant → FMA into all `m` output rows), so the working set is
+//! `O(stripe_width)` and the dequant cost is amortized over the batch.
+//!
+//! Threading: output columns are split into stripes, one scoped
+//! `std::thread` worker per stripe; each worker owns a private partial
+//! buffer that is copied into `y` after join. Every `y[i][j]` is accumulated
+//! serially over `k` in ascending order inside exactly one worker, so
+//! results are **bit-identical for any m, any thread count, and any stripe
+//! partition** — the property the engine's "incremental decode == full
+//! forward" guarantee rests on.
+
+use crate::tensor::num_threads;
+
+/// Unpack `out.len()` consecutive b-bit codes starting at element index
+/// `start` of a `pack_bits`-packed stream. Mirrors `quant::unpack_bits` but
+/// allows an arbitrary element offset so column stripes can decode only
+/// their slice of each code row.
+#[inline]
+pub fn unpack_seg(packed: &[u8], bits: u32, start: usize, out: &mut [u8]) {
+    debug_assert!(bits >= 1 && bits <= 8);
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut bitpos = start * bits as usize;
+    for o in out.iter_mut() {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = packed[byte] >> off;
+        if off + bits as usize > 8 {
+            v |= packed[byte + 1] << (8 - off);
+        }
+        *o = v & mask;
+        bitpos += bits as usize;
+    }
+}
+
+/// Arguments shared by the packed kernels: one quantized `(din, dout)`
+/// weight in deployment form. `scales`/`zps` are the f16-decoded per-(group,
+/// col) parameters, row-major `(din/group_len, dout)`.
+#[derive(Clone, Copy)]
+pub struct PackedWeight<'a> {
+    pub packed: &'a [u8],
+    pub bits: u32,
+    pub din: usize,
+    pub dout: usize,
+    pub group_len: usize,
+    pub scales: &'a [f32],
+    pub zps: &'a [f32],
+}
+
+impl<'a> PackedWeight<'a> {
+    fn check(&self) {
+        debug_assert_eq!(self.din % self.group_len, 0);
+        debug_assert_eq!(self.scales.len(), (self.din / self.group_len) * self.dout);
+        debug_assert_eq!(self.zps.len(), self.scales.len());
+        debug_assert!(self.packed.len() * 8 >= self.din * self.dout * self.bits as usize);
+    }
+}
+
+/// `y (m, dout) += x (m, din) @ dequant(W)`. `y` must be pre-zeroed by the
+/// caller if `+=` semantics are not wanted.
+pub fn packed_gemm(w: &PackedWeight, x: &[f32], y: &mut [f32], m: usize) {
+    w.check();
+    assert_eq!(x.len(), m * w.din, "x len vs (m={m}, din={})", w.din);
+    assert_eq!(y.len(), m * w.dout, "y len vs (m={m}, dout={})", w.dout);
+    let stripes = plan_stripes(m, w.din, w.dout);
+    if stripes.len() <= 1 {
+        let mut part = vec![0.0f32; m * w.dout];
+        gemm_stripe(w, x, m, 0, w.dout, &mut part);
+        for (yv, pv) in y.iter_mut().zip(&part) {
+            *yv += pv;
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = stripes
+            .iter()
+            .map(|&(j0, j1)| {
+                scope.spawn(move || {
+                    let mut part = vec![0.0f32; m * (j1 - j0)];
+                    gemm_stripe(w, x, m, j0, j1, &mut part);
+                    part
+                })
+            })
+            .collect();
+        for (h, &(j0, j1)) in handles.into_iter().zip(&stripes) {
+            let part = h.join().expect("gemm worker panicked");
+            let bw = j1 - j0;
+            for i in 0..m {
+                let dst = &mut y[i * w.dout + j0..i * w.dout + j1];
+                let src = &part[i * bw..(i + 1) * bw];
+                for (d, s) in dst.iter_mut().zip(src) {
+                    *d += s;
+                }
+            }
+        }
+    });
+}
+
+/// Column-stripe partition: one stripe per worker, stripes at least 32
+/// columns wide, single stripe for small problems (threading overhead).
+fn plan_stripes(m: usize, din: usize, dout: usize) -> Vec<(usize, usize)> {
+    let work = m * din * dout;
+    let threads = if work < 32 * 128 * 128 { 1 } else { num_threads() };
+    let n = threads.clamp(1, dout.div_ceil(32));
+    let chunk = dout.div_ceil(n);
+    let mut out = Vec::with_capacity(n);
+    let mut j = 0;
+    while j < dout {
+        let hi = (j + chunk).min(dout);
+        out.push((j, hi));
+        j = hi;
+    }
+    out
+}
+
+/// Serial kernel over columns `[j0, j1)`: stream code rows, dequant into a
+/// stripe-wide buffer, FMA into each of the `m` partial rows.
+fn gemm_stripe(w: &PackedWeight, x: &[f32], m: usize, j0: usize, j1: usize, part: &mut [f32]) {
+    let bw = j1 - j0;
+    let mut crow = vec![0u8; bw];
+    let mut wrow = vec![0.0f32; bw];
+    for k in 0..w.din {
+        let gi = k / w.group_len;
+        unpack_seg(w.packed, w.bits, k * w.dout + j0, &mut crow);
+        let sc = &w.scales[gi * w.dout + j0..gi * w.dout + j1];
+        let zp = &w.zps[gi * w.dout + j0..gi * w.dout + j1];
+        for j in 0..bw {
+            wrow[j] = (crow[j] as f32 - zp[j]) * sc[j];
+        }
+        for i in 0..m {
+            let a = x[i * w.din + k];
+            if a != 0.0 {
+                let prow = &mut part[i * bw..(i + 1) * bw];
+                for (p, &wv) in prow.iter_mut().zip(&wrow) {
+                    *p += a * wv;
+                }
+            }
+        }
+    }
+}
+
+/// Group-factored fused matvec: `y (dout) += x (din) @ dequant(W)` computed
+/// as `Σ_g s_gj ((Σ_r x_r c_rj) - z_gj Σ_r x_r)` — one FMA per code instead
+/// of dequant+FMA. Fastest single-row kernel (batch-1 decode microbench),
+/// but a *different accumulation order* than [`packed_gemm`], so the engine
+/// forward does not use it by default (bit-stability across batch sizes
+/// wins); it is exercised by `perf_engine` and available for opt-in.
+pub fn packed_matvec_grouped(w: &PackedWeight, x: &[f32], y: &mut [f32]) {
+    w.check();
+    assert_eq!(x.len(), w.din);
+    assert_eq!(y.len(), w.dout);
+    let stripes = plan_stripes(1, w.din, w.dout);
+    let run = |j0: usize, j1: usize, part: &mut [f32]| {
+        debug_assert_eq!(part.len(), j1 - j0);
+        let bw = j1 - j0;
+        let mut crow = vec![0u8; bw];
+        let mut acc = vec![0.0f32; bw];
+        let ngroups = w.din / w.group_len;
+        for gi in 0..ngroups {
+            acc.iter_mut().for_each(|a| *a = 0.0);
+            let mut sx = 0.0f32;
+            for r in 0..w.group_len {
+                let k = gi * w.group_len + r;
+                let a = x[k];
+                sx += a;
+                if a != 0.0 {
+                    unpack_seg(w.packed, w.bits, k * w.dout + j0, &mut crow);
+                    for (av, &c) in acc.iter_mut().zip(crow.iter()) {
+                        *av += a * c as f32;
+                    }
+                }
+            }
+            let sc = &w.scales[gi * w.dout + j0..gi * w.dout + j1];
+            let zp = &w.zps[gi * w.dout + j0..gi * w.dout + j1];
+            for j in 0..bw {
+                part[j] += sc[j] * (acc[j] - zp[j] * sx);
+            }
+        }
+    };
+    if stripes.len() <= 1 {
+        let mut part = vec![0.0f32; w.dout];
+        run(0, w.dout, &mut part);
+        for (yv, pv) in y.iter_mut().zip(&part) {
+            *yv += pv;
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let run_ref = &run;
+        let handles: Vec<_> = stripes
+            .iter()
+            .map(|&(j0, j1)| {
+                scope.spawn(move || {
+                    let mut part = vec![0.0f32; j1 - j0];
+                    run_ref(j0, j1, &mut part);
+                    part
+                })
+            })
+            .collect();
+        for (h, &(j0, j1)) in handles.into_iter().zip(&stripes) {
+            let part = h.join().expect("matvec worker panicked");
+            for (yv, pv) in y[j0..j1].iter_mut().zip(&part) {
+                *yv += pv;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{pack_bits, unpack_bits};
+    use crate::rngx::Pcg32;
+
+    #[test]
+    fn unpack_seg_matches_full_unpack() {
+        let mut rng = Pcg32::seeded(1);
+        for bits in [2u32, 3, 4, 8] {
+            let n = 257;
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            let packed = pack_bits(&codes, bits);
+            let full = unpack_bits(&packed, bits, n);
+            assert_eq!(full, codes);
+            for &(s, l) in &[(0usize, 7usize), (1, 16), (13, 64), (255, 2), (256, 1), (100, 0)] {
+                let mut out = vec![0u8; l];
+                unpack_seg(&packed, bits, s, &mut out);
+                assert_eq!(&out[..], &codes[s..s + l], "bits={bits} start={s}");
+            }
+        }
+    }
+
+    fn toy_weight(
+        din: usize,
+        dout: usize,
+        bits: u32,
+        group_len: usize,
+        rng: &mut Pcg32,
+    ) -> (Vec<u8>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let codes: Vec<u8> = (0..din * dout).map(|_| rng.below(1 << bits) as u8).collect();
+        let ngroups = din / group_len;
+        let scales: Vec<f32> =
+            (0..ngroups * dout).map(|_| 0.01 + rng.uniform() as f32).collect();
+        let zps: Vec<f32> =
+            (0..ngroups * dout).map(|_| rng.below(1 << bits) as f32).collect();
+        // dense reference weight
+        let mut dense = vec![0.0f32; din * dout];
+        for k in 0..din {
+            for j in 0..dout {
+                let gi = k / group_len;
+                dense[k * dout + j] =
+                    (codes[k * dout + j] as f32 - zps[gi * dout + j]) * scales[gi * dout + j];
+            }
+        }
+        (pack_bits(&codes, bits), scales, zps, dense)
+    }
+
+    #[test]
+    fn gemm_matches_dense_reference() {
+        let mut rng = Pcg32::seeded(2);
+        for (din, dout, bits, g, m) in
+            [(64, 48, 4u32, 16usize, 3usize), (96, 33, 3, 32, 1), (128, 64, 2, 64, 5)]
+        {
+            let (packed, scales, zps, dense) = toy_weight(din, dout, bits, g, &mut rng);
+            let x: Vec<f32> = (0..m * din).map(|_| rng.normal() as f32).collect();
+            let w = PackedWeight {
+                packed: &packed,
+                bits,
+                din,
+                dout,
+                group_len: g,
+                scales: &scales,
+                zps: &zps,
+            };
+            let mut y = vec![0.0f32; m * dout];
+            packed_gemm(&w, &x, &mut y, m);
+            for i in 0..m {
+                for j in 0..dout {
+                    let mut want = 0.0f32;
+                    for k in 0..din {
+                        want += x[i * din + k] * dense[k * dout + j];
+                    }
+                    let got = y[i * dout + j];
+                    assert!(
+                        (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                        "({din},{dout},b{bits},g{g}) y[{i}][{j}] {got} vs {want}"
+                    );
+                }
+            }
+            // matvec kernel agrees row-by-row (to fp tolerance)
+            for i in 0..m {
+                let mut yv = vec![0.0f32; dout];
+                packed_matvec_grouped(&w, &x[i * din..(i + 1) * din], &mut yv);
+                for j in 0..dout {
+                    let want = y[i * dout + j];
+                    assert!(
+                        (yv[j] - want).abs() < 1e-2 * (1.0 + want.abs()),
+                        "matvec row {i} col {j}: {} vs {want}",
+                        yv[j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_rows_independent_of_batch() {
+        // the bit-stability contract: a row's output is identical whether it
+        // is computed alone (m=1) or inside a batch (m=16)
+        let mut rng = Pcg32::seeded(3);
+        let (din, dout, bits, g) = (256, 96, 4u32, 64usize);
+        let (packed, scales, zps, _) = toy_weight(din, dout, bits, g, &mut rng);
+        let w = PackedWeight {
+            packed: &packed,
+            bits,
+            din,
+            dout,
+            group_len: g,
+            scales: &scales,
+            zps: &zps,
+        };
+        let m = 16;
+        let x: Vec<f32> = (0..m * din).map(|_| rng.normal() as f32).collect();
+        let mut y = vec![0.0f32; m * dout];
+        packed_gemm(&w, &x, &mut y, m);
+        for i in 0..m {
+            let mut yi = vec![0.0f32; dout];
+            packed_gemm(&w, &x[i * din..(i + 1) * din], &mut yi, 1);
+            assert_eq!(&y[i * dout..(i + 1) * dout], &yi[..], "row {i} differs from batch");
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Ring-buffer KV cache with per-sequence slots.
+//!
+//! One contiguous f32 arena holds `(slot, layer, ring_pos, d_model)` for K
+//! and V. A *slot* is a serving sequence; the scheduler assigns each
+//! admitted request a slot and resets it on eviction, so cache memory is
+//! bounded by `max_batch × n_layers × capacity × d` regardless of how many
+//! requests flow through. When a sequence outgrows `capacity` the ring
+//! overwrites the oldest entries (sliding-window attention) — valid for
+//! RoPE models; the decoder caps absolute positions for learned-positional
+//! models before that can happen.
+//!
+//! Write protocol per generated token: `advance(slot)` once (returns the
+//! ring index), then `write_k`/`write_v` at that index for every layer, so
+//! all layers stay aligned on the same ring position.
+
+#[derive(Clone)]
+pub struct KvCache {
+    pub n_slots: usize,
+    pub n_layers: usize,
+    pub capacity: usize,
+    pub d: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Valid entries per slot (≤ capacity).
+    len: Vec<usize>,
+    /// Next ring write index per slot.
+    head: Vec<usize>,
+}
+
+impl KvCache {
+    pub fn new(n_slots: usize, n_layers: usize, capacity: usize, d: usize) -> KvCache {
+        assert!(n_slots > 0 && n_layers > 0 && capacity > 0 && d > 0);
+        let total = n_slots * n_layers * capacity * d;
+        KvCache {
+            n_slots,
+            n_layers,
+            capacity,
+            d,
+            k: vec![0.0; total],
+            v: vec![0.0; total],
+            len: vec![0; n_slots],
+            head: vec![0; n_slots],
+        }
+    }
+
+    pub fn mem_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    /// Number of retained entries for a slot.
+    pub fn len(&self, slot: usize) -> usize {
+        self.len[slot]
+    }
+
+    pub fn is_empty(&self, slot: usize) -> bool {
+        self.len[slot] == 0
+    }
+
+    /// Drop a slot's history (sequence eviction / admission).
+    pub fn reset(&mut self, slot: usize) {
+        self.len[slot] = 0;
+        self.head[slot] = 0;
+    }
+
+    /// Claim the ring index for the next token of `slot`. Evicts the oldest
+    /// entry when full. Call exactly once per token, before the layer loop.
+    pub fn advance(&mut self, slot: usize) -> usize {
+        let idx = self.head[slot];
+        self.head[slot] = (idx + 1) % self.capacity;
+        if self.len[slot] < self.capacity {
+            self.len[slot] += 1;
+        }
+        idx
+    }
+
+    fn base(&self, slot: usize, layer: usize, ring: usize) -> usize {
+        debug_assert!(slot < self.n_slots && layer < self.n_layers && ring < self.capacity);
+        ((slot * self.n_layers + layer) * self.capacity + ring) * self.d
+    }
+
+    pub fn write_k(&mut self, slot: usize, layer: usize, ring: usize, row: &[f32]) {
+        let b = self.base(slot, layer, ring);
+        self.k[b..b + self.d].copy_from_slice(row);
+    }
+
+    pub fn write_v(&mut self, slot: usize, layer: usize, ring: usize, row: &[f32]) {
+        let b = self.base(slot, layer, ring);
+        self.v[b..b + self.d].copy_from_slice(row);
+    }
+
+    /// Ring index of the `j`-th retained entry (temporal order, 0 = oldest).
+    #[inline]
+    pub fn ring_at(&self, slot: usize, j: usize) -> usize {
+        debug_assert!(j < self.len[slot]);
+        (self.head[slot] + self.capacity - self.len[slot] + j) % self.capacity
+    }
+
+    #[inline]
+    pub fn k_row(&self, slot: usize, layer: usize, j: usize) -> &[f32] {
+        let b = self.base(slot, layer, self.ring_at(slot, j));
+        &self.k[b..b + self.d]
+    }
+
+    #[inline]
+    pub fn v_row(&self, slot: usize, layer: usize, j: usize) -> &[f32] {
+        let b = self.base(slot, layer, self.ring_at(slot, j));
+        &self.v[b..b + self.d]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_temporal_order() {
+        let mut c = KvCache::new(2, 1, 4, 2);
+        for t in 0..3 {
+            let idx = c.advance(0);
+            c.write_k(0, 0, idx, &[t as f32, 0.0]);
+            c.write_v(0, 0, idx, &[0.0, t as f32]);
+        }
+        assert_eq!(c.len(0), 3);
+        assert_eq!(c.len(1), 0);
+        for j in 0..3 {
+            assert_eq!(c.k_row(0, 0, j)[0], j as f32);
+            assert_eq!(c.v_row(0, 0, j)[1], j as f32);
+        }
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let mut c = KvCache::new(1, 1, 3, 1);
+        for t in 0..5 {
+            let idx = c.advance(0);
+            c.write_k(0, 0, idx, &[t as f32]);
+            c.write_v(0, 0, idx, &[t as f32]);
+        }
+        assert_eq!(c.len(0), 3);
+        // retained window is the last 3 tokens, oldest first
+        let got: Vec<f32> = (0..3).map(|j| c.k_row(0, 0, j)[0]).collect();
+        assert_eq!(got, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn reset_clears_only_that_slot() {
+        let mut c = KvCache::new(2, 2, 4, 1);
+        for slot in 0..2 {
+            let idx = c.advance(slot);
+            for layer in 0..2 {
+                c.write_k(slot, layer, idx, &[7.0]);
+                c.write_v(slot, layer, idx, &[8.0]);
+            }
+        }
+        c.reset(0);
+        assert_eq!(c.len(0), 0);
+        assert_eq!(c.len(1), 1);
+        assert_eq!(c.k_row(1, 1, 0)[0], 7.0);
+    }
+}

@@ -1,0 +1,618 @@
+//! Deployment weight format: bit-packed integer codes + per-group f16
+//! scale/zero-point, assembled from a `ParamStore` + a merged `QuantSpec`.
+//!
+//! This is the storage layout the paper's "no inference overhead" claim
+//! cashes out to: after the affine matrix is merged into the weights, a
+//! linear is just `pack_bits(codes)` + 2×f16 per (group, col) — the same
+//! byte counts `quant::weight_bytes` models for the Pareto figure. A
+//! `PackedModel` holds every quantized linear in that form plus the f32
+//! leftovers (norm gains, biases, embeddings) and serializes to a single
+//! file: jsonx header + raw little-endian blobs.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonx::{self, Value};
+use crate::model::{ModelConfig, ParamStore};
+use crate::quant::{pack_bits, quantize_codes, QuantSpec};
+use crate::tensor::{numel, Tensor};
+
+use super::gemm::{packed_gemm, PackedWeight};
+
+// ------------------------------------------------------------------- f16
+// IEEE 754 binary16 conversion (the `half` crate is not vendored offline).
+// Round-to-nearest-even, subnormals handled; validated bit-exact against
+// numpy float16 over normal/subnormal/overflow ranges.
+
+pub fn f16_encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 255 {
+        // inf / nan (nan keeps a payload bit)
+        return sign | 0x7c00 | if man != 0 { 0x200 } else { 0 };
+    }
+    let unb = exp - 127;
+    if unb >= 16 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if unb >= -14 {
+        // normal half
+        let mut hexp = (unb + 15) as u32;
+        let mut hman = man >> 13;
+        let rnd = man & 0x1fff;
+        if rnd > 0x1000 || (rnd == 0x1000 && (hman & 1) == 1) {
+            hman += 1;
+            if hman == 0x400 {
+                hman = 0;
+                hexp += 1;
+                if hexp >= 31 {
+                    return sign | 0x7c00;
+                }
+            }
+        }
+        return sign | ((hexp as u16) << 10) | hman as u16;
+    }
+    if unb >= -25 {
+        // subnormal half: value = (man|hidden) * 2^(unb-23); unit is 2^-24
+        let man_full = man | 0x0080_0000;
+        let s = (-unb - 1) as u32; // in [14, 24]
+        let mut hman = man_full >> s;
+        let rem = man_full & ((1u32 << s) - 1);
+        let half = 1u32 << (s - 1);
+        if rem > half || (rem == half && (hman & 1) == 1) {
+            hman += 1; // may carry into the smallest normal — encoding is continuous
+        }
+        return sign | hman as u16;
+    }
+    sign // underflow to signed zero
+}
+
+pub fn f16_decode(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: renormalize
+            let mut e: i32 = 113; // 127 - 15 + 1
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x3ff) << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ---------------------------------------------------------- PackedLinear
+
+/// One quantized `(din, dout)` linear in deployment form.
+#[derive(Clone, Debug)]
+pub struct PackedLinear {
+    pub name: String,
+    pub din: usize,
+    pub dout: usize,
+    pub spec: QuantSpec,
+    /// b-bit codes, `pack_bits` layout over the row-major (din, dout) grid.
+    pub packed: Vec<u8>,
+    /// f16 bits per (group, col) — the serialized truth.
+    pub scales16: Vec<u16>,
+    pub zps16: Vec<u16>,
+    /// f32 decode of the params, kept hot for the GEMM.
+    scales: Vec<f32>,
+    zps: Vec<f32>,
+}
+
+impl PackedLinear {
+    /// Quantize + pack a weight tensor. The integer codes are exactly
+    /// `quant::quantize_codes`; only the scale/zero storage narrows to f16.
+    pub fn pack(name: &str, w: &Tensor, spec: QuantSpec) -> PackedLinear {
+        let (din, dout) = w.dims2();
+        let (codes, params, _) = quantize_codes(w, spec, None);
+        let scales16: Vec<u16> = params.iter().map(|p| f16_encode(p.scale)).collect();
+        let zps16: Vec<u16> = params.iter().map(|p| f16_encode(p.zp)).collect();
+        let scales = scales16.iter().map(|&h| f16_decode(h)).collect();
+        let zps = zps16.iter().map(|&h| f16_decode(h)).collect();
+        PackedLinear {
+            name: name.to_string(),
+            din,
+            dout,
+            spec,
+            packed: pack_bits(&codes, spec.bits),
+            scales16,
+            zps16,
+            scales,
+            zps,
+        }
+    }
+
+    /// Rebuild from serialized parts (decodes the hot f32 params).
+    pub fn from_parts(
+        name: String,
+        din: usize,
+        dout: usize,
+        spec: QuantSpec,
+        packed: Vec<u8>,
+        scales16: Vec<u16>,
+        zps16: Vec<u16>,
+    ) -> Result<PackedLinear> {
+        let nparams = (din / spec.group_len(din)) * dout;
+        if scales16.len() != nparams || zps16.len() != nparams {
+            bail!("{name}: {} params, expected {nparams}", scales16.len());
+        }
+        let want_bytes = (din * dout * spec.bits as usize).div_ceil(8);
+        if packed.len() != want_bytes {
+            bail!("{name}: {} packed bytes, expected {want_bytes}", packed.len());
+        }
+        let scales = scales16.iter().map(|&h| f16_decode(h)).collect();
+        let zps = zps16.iter().map(|&h| f16_decode(h)).collect();
+        Ok(PackedLinear { name, din, dout, spec, packed, scales16, zps16, scales, zps })
+    }
+
+    /// The f16-decoded (scales, zero-points), row-major (ngroups, dout).
+    pub fn params(&self) -> (&[f32], &[f32]) {
+        (&self.scales, &self.zps)
+    }
+
+    fn weight(&self) -> PackedWeight<'_> {
+        PackedWeight {
+            packed: &self.packed,
+            bits: self.spec.bits,
+            din: self.din,
+            dout: self.dout,
+            group_len: self.spec.group_len(self.din),
+            scales: &self.scales,
+            zps: &self.zps,
+        }
+    }
+
+    /// `y (m, dout) = x (m, din) @ dequant(W)` through the fused kernel.
+    pub fn matmul(&self, x: &[f32], m: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; m * self.dout];
+        packed_gemm(&self.weight(), x, &mut y, m);
+        y
+    }
+
+    /// Accumulating variant: `y += x @ dequant(W)`.
+    pub fn matmul_into(&self, x: &[f32], y: &mut [f32], m: usize) {
+        packed_gemm(&self.weight(), x, y, m);
+    }
+
+    /// Dense f32 dequantization (reference/tests; never on the serve path).
+    pub fn dequantize(&self) -> Tensor {
+        let g = self.spec.group_len(self.din);
+        let mut out = Tensor::zeros(&[self.din, self.dout]);
+        let mut crow = vec![0u8; self.dout];
+        for k in 0..self.din {
+            super::gemm::unpack_seg(&self.packed, self.spec.bits, k * self.dout, &mut crow);
+            let gi = k / g;
+            for j in 0..self.dout {
+                out.data[k * self.dout + j] =
+                    (crow[j] as f32 - self.zps[gi * self.dout + j]) * self.scales[gi * self.dout + j];
+            }
+        }
+        out
+    }
+
+    /// Deployment bytes (codes + f16 params) — matches `quant::weight_bytes`.
+    pub fn bytes(&self) -> usize {
+        self.packed.len() + 2 * (self.scales16.len() + self.zps16.len())
+    }
+}
+
+// ----------------------------------------------------------- PackedModel
+
+/// One transformer block: quantized linears + f32 leftovers (norm params,
+/// biases) in block-layout order.
+#[derive(Clone)]
+pub struct PackedBlock {
+    pub linears: Vec<PackedLinear>,
+    pub f32s: Vec<(String, Vec<f32>)>,
+    index: HashMap<String, usize>,
+}
+
+impl PackedBlock {
+    fn new(linears: Vec<PackedLinear>, f32s: Vec<(String, Vec<f32>)>) -> PackedBlock {
+        let index = linears.iter().enumerate().map(|(i, l)| (l.name.clone(), i)).collect();
+        PackedBlock { linears, f32s, index }
+    }
+
+    pub fn linear(&self, name: &str) -> &PackedLinear {
+        &self.linears[*self.index.get(name).unwrap_or_else(|| panic!("no linear {name:?}"))]
+    }
+
+    pub fn f32(&self, name: &str) -> &[f32] {
+        self.f32s
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_slice())
+            .unwrap_or_else(|| panic!("no f32 tensor {name:?}"))
+    }
+}
+
+/// A whole model in deployment form: f32 globals (embeddings + final norm)
+/// plus per-block packed linears. Built from a (merged) `ParamStore`.
+#[derive(Clone)]
+pub struct PackedModel {
+    pub cfg: ModelConfig,
+    pub spec: QuantSpec,
+    pub globals: Vec<(String, Tensor)>,
+    pub blocks: Vec<PackedBlock>,
+}
+
+impl PackedModel {
+    /// Quantize + pack every linear of `ps` under `spec`. `ps` is expected
+    /// to be the *merged* store (affine transforms already folded into the
+    /// weights) — packing is plain per-group RTN on whatever it holds,
+    /// exactly mirroring the fake-quant the AOT graphs apply.
+    pub fn from_store(ps: &ParamStore, spec: QuantSpec) -> PackedModel {
+        let cfg = ps.cfg.clone();
+        let qnames: Vec<&str> = cfg.quantized_weights().iter().map(|&(n, _, _)| n).collect();
+        let globals = ps
+            .globals_layout
+            .entries
+            .iter()
+            .map(|(name, _, _)| (name.clone(), ps.globals_layout.tensor(ps.globals(), name)))
+            .collect();
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for bi in 0..cfg.n_layers {
+            let mut linears = Vec::new();
+            let mut f32s = Vec::new();
+            for (name, _, _) in &ps.block_layout.entries {
+                let t = ps.block_tensor(bi, name);
+                if qnames.contains(&name.as_str()) {
+                    linears.push(PackedLinear::pack(name, &t, spec));
+                } else {
+                    f32s.push((name.clone(), t.data));
+                }
+            }
+            blocks.push(PackedBlock::new(linears, f32s));
+        }
+        PackedModel { cfg, spec, globals, blocks }
+    }
+
+    pub fn global(&self, name: &str) -> &Tensor {
+        self.globals
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, t)| t)
+            .unwrap_or_else(|| panic!("no global {name:?}"))
+    }
+
+    pub fn has_global(&self, name: &str) -> bool {
+        self.globals.iter().any(|(n, _)| n == name)
+    }
+
+    /// Deployment bytes of the quantized linears.
+    pub fn packed_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.linears.iter().map(|l| l.bytes()).sum::<usize>()).sum()
+    }
+
+    /// fp16 bytes the same linears would occupy unquantized.
+    pub fn fp16_linear_bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| b.linears.iter().map(|l| 2 * l.din * l.dout).sum::<usize>())
+            .sum()
+    }
+
+    // ------------------------------------------------------ serialization
+    // `AQPM1\n` + u32 header length + jsonx header + concatenated blobs.
+    // The header lists every tensor with its blob offset/length; packed
+    // linears carry (bits, group). All blobs little-endian.
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        crate::util::ensure_parent(path)?;
+        let mut blobs: Vec<u8> = Vec::new();
+        let mut entries: Vec<Value> = Vec::new();
+        let push_blob = |blobs: &mut Vec<u8>, bytes: &[u8]| -> (usize, usize) {
+            let off = blobs.len();
+            blobs.extend_from_slice(bytes);
+            (off, bytes.len())
+        };
+        let tensor_entry =
+            |name: &str, block: i64, kind: &str, shape: &[usize], off: usize, len: usize| {
+                jsonx::obj(vec![
+                    ("name", jsonx::s(name)),
+                    ("block", jsonx::num(block as f64)),
+                    ("kind", jsonx::s(kind)),
+                    (
+                        "shape",
+                        Value::Arr(shape.iter().map(|&d| jsonx::num(d as f64)).collect()),
+                    ),
+                    ("offset", jsonx::num(off as f64)),
+                    ("len", jsonx::num(len as f64)),
+                ])
+            };
+        for (name, t) in &self.globals {
+            let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+            let (off, len) = push_blob(&mut blobs, &bytes);
+            entries.push(tensor_entry(name, -1, "f32", &t.shape, off, len));
+        }
+        for (bi, block) in self.blocks.iter().enumerate() {
+            for (name, data) in &block.f32s {
+                let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+                let (off, len) = push_blob(&mut blobs, &bytes);
+                entries.push(tensor_entry(name, bi as i64, "f32", &[data.len()], off, len));
+            }
+            for l in &block.linears {
+                let (coff, clen) = push_blob(&mut blobs, &l.packed);
+                let sbytes: Vec<u8> = l.scales16.iter().flat_map(|v| v.to_le_bytes()).collect();
+                let (soff, slen) = push_blob(&mut blobs, &sbytes);
+                let zbytes: Vec<u8> = l.zps16.iter().flat_map(|v| v.to_le_bytes()).collect();
+                let (zoff, zlen) = push_blob(&mut blobs, &zbytes);
+                entries.push(jsonx::obj(vec![
+                    ("name", jsonx::s(&l.name)),
+                    ("block", jsonx::num(bi as f64)),
+                    ("kind", jsonx::s("packed")),
+                    (
+                        "shape",
+                        Value::Arr(vec![
+                            jsonx::num(l.din as f64),
+                            jsonx::num(l.dout as f64),
+                        ]),
+                    ),
+                    ("bits", jsonx::num(l.spec.bits as f64)),
+                    ("group", jsonx::num(l.spec.group as f64)),
+                    ("offset", jsonx::num(coff as f64)),
+                    ("len", jsonx::num(clen as f64)),
+                    ("scales_offset", jsonx::num(soff as f64)),
+                    ("scales_len", jsonx::num(slen as f64)),
+                    ("zps_offset", jsonx::num(zoff as f64)),
+                    ("zps_len", jsonx::num(zlen as f64)),
+                ]));
+            }
+        }
+        let cfg = &self.cfg;
+        let header = jsonx::obj(vec![
+            ("format", jsonx::s("affinequant-packed-v1")),
+            ("name", jsonx::s(&cfg.name)),
+            ("family", jsonx::s(&cfg.family)),
+            ("d_model", jsonx::num(cfg.d_model as f64)),
+            ("n_heads", jsonx::num(cfg.n_heads as f64)),
+            ("n_layers", jsonx::num(cfg.n_layers as f64)),
+            ("d_ff", jsonx::num(cfg.d_ff as f64)),
+            ("vocab", jsonx::num(cfg.vocab as f64)),
+            ("seq", jsonx::num(cfg.seq as f64)),
+            ("batch", jsonx::num(cfg.batch as f64)),
+            ("train_batch", jsonx::num(cfg.train_batch as f64)),
+            ("head_dim", jsonx::num(cfg.head_dim as f64)),
+            ("params", jsonx::num(cfg.params as f64)),
+            ("bits", jsonx::num(self.spec.bits as f64)),
+            ("group", jsonx::num(self.spec.group as f64)),
+            ("tensors", Value::Arr(entries)),
+        ]);
+        let htext = jsonx::emit(&header);
+        let mut out = Vec::with_capacity(10 + htext.len() + blobs.len());
+        out.extend_from_slice(b"AQPM1\n");
+        out.extend_from_slice(&(htext.len() as u32).to_le_bytes());
+        out.extend_from_slice(htext.as_bytes());
+        out.extend_from_slice(&blobs);
+        std::fs::write(path, out).with_context(|| format!("writing {path}"))?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<PackedModel> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+        if !bytes.starts_with(b"AQPM1\n") {
+            bail!("{path}: bad packed-model magic");
+        }
+        if bytes.len() < 10 {
+            bail!("{path}: truncated packed-model header");
+        }
+        let hlen = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+        if bytes.len() < 10 + hlen {
+            bail!("{path}: header length {hlen} exceeds file size {}", bytes.len());
+        }
+        let header = jsonx::parse(
+            std::str::from_utf8(&bytes[10..10 + hlen]).context("header utf8")?,
+        )
+        .map_err(|e| anyhow::anyhow!(e))?;
+        let blobs = &bytes[10 + hlen..];
+        let g = |k: &str| header.req(k).as_usize();
+        let cfg = ModelConfig {
+            name: header.req("name").as_str().to_string(),
+            family: header.req("family").as_str().to_string(),
+            d_model: g("d_model"),
+            n_heads: g("n_heads"),
+            n_layers: g("n_layers"),
+            d_ff: g("d_ff"),
+            vocab: g("vocab"),
+            seq: g("seq"),
+            batch: g("batch"),
+            train_batch: g("train_batch"),
+            head_dim: g("head_dim"),
+            params: g("params"),
+        };
+        let spec = QuantSpec::new(g("bits") as u32, g("group"));
+        fn blob<'a>(blobs: &'a [u8], path: &str, off: usize, len: usize) -> Result<&'a [u8]> {
+            let end = off.checked_add(len).filter(|&e| e <= blobs.len());
+            match end {
+                Some(e) => Ok(&blobs[off..e]),
+                None => bail!("{path}: blob [{off}, {off}+{len}) out of range"),
+            }
+        }
+        fn f32_blob(blobs: &[u8], path: &str, off: usize, len: usize) -> Result<Vec<f32>> {
+            let b = blob(blobs, path, off, len)?;
+            if len % 4 != 0 {
+                bail!("{path}: f32 blob len {len} not a multiple of 4");
+            }
+            Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+        }
+        fn u16_blob(blobs: &[u8], path: &str, off: usize, len: usize) -> Result<Vec<u16>> {
+            let b = blob(blobs, path, off, len)?;
+            if len % 2 != 0 {
+                bail!("{path}: u16 blob len {len} not a multiple of 2");
+            }
+            Ok(b.chunks_exact(2).map(|c| u16::from_le_bytes(c.try_into().unwrap())).collect())
+        }
+
+        let mut globals = Vec::new();
+        let mut block_linears: Vec<Vec<PackedLinear>> = vec![Vec::new(); cfg.n_layers];
+        let mut block_f32s: Vec<Vec<(String, Vec<f32>)>> = vec![Vec::new(); cfg.n_layers];
+        for e in header.req("tensors").as_arr() {
+            let name = e.req("name").as_str().to_string();
+            let bi = e.req("block").as_f64() as i64;
+            let kind = e.req("kind").as_str();
+            let shape = e.req("shape").usize_arr();
+            let off = e.req("offset").as_usize();
+            let len = e.req("len").as_usize();
+            match kind {
+                "f32" => {
+                    let data = f32_blob(blobs, path, off, len)?;
+                    if data.len() != numel(&shape) {
+                        bail!("{path}: {name} numel mismatch");
+                    }
+                    if bi < 0 {
+                        globals.push((name, Tensor::new(shape, data)));
+                    } else if (bi as usize) < cfg.n_layers {
+                        block_f32s[bi as usize].push((name, data));
+                    } else {
+                        bail!("{path}: {name} bad block index {bi}");
+                    }
+                }
+                "packed" => {
+                    if bi < 0 || bi as usize >= cfg.n_layers {
+                        bail!("{path}: {name} bad block index {bi}");
+                    }
+                    if shape.len() != 2 {
+                        bail!("{path}: {name} packed shape must be 2-D, got {shape:?}");
+                    }
+                    let lspec = QuantSpec::new(
+                        e.req("bits").as_usize() as u32,
+                        e.req("group").as_usize(),
+                    );
+                    let packed = blob(blobs, path, off, len)?.to_vec();
+                    let scales16 = u16_blob(
+                        blobs,
+                        path,
+                        e.req("scales_offset").as_usize(),
+                        e.req("scales_len").as_usize(),
+                    )?;
+                    let zps16 = u16_blob(
+                        blobs,
+                        path,
+                        e.req("zps_offset").as_usize(),
+                        e.req("zps_len").as_usize(),
+                    )?;
+                    block_linears[bi as usize].push(PackedLinear::from_parts(
+                        name, shape[0], shape[1], lspec, packed, scales16, zps16,
+                    )?);
+                }
+                other => bail!("{path}: unknown tensor kind {other:?}"),
+            }
+        }
+        let blocks = block_linears
+            .into_iter()
+            .zip(block_f32s)
+            .map(|(l, f)| PackedBlock::new(l, f))
+            .collect();
+        Ok(PackedModel { cfg, spec, globals, blocks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::quant::quant_dequant;
+    use crate::rngx::Pcg32;
+
+    #[test]
+    fn f16_roundtrip_and_edges() {
+        for &v in &[0.0f32, 1.0, -2.5, 0.000061, 65504.0, 1e-7, -1e-7, 3.14159] {
+            let dec = f16_decode(f16_encode(v));
+            let tol = (v.abs() * 1e-3).max(6.2e-8);
+            assert!((dec - v).abs() <= tol, "{v} -> {dec}");
+        }
+        assert_eq!(f16_decode(f16_encode(0.0)), 0.0);
+        assert_eq!(f16_encode(70000.0), 0x7c00); // overflow -> +inf
+        assert_eq!(f16_encode(-70000.0), 0xfc00);
+        assert_eq!(f16_encode(1e-12), 0); // underflow -> +0
+        assert!(f16_decode(0x7c00).is_infinite());
+        assert!(f16_decode(0x7e00).is_nan());
+        // exact integers survive (zero-points are integer-valued <= 255)
+        for i in 0..=255u16 {
+            assert_eq!(f16_decode(f16_encode(i as f32)), i as f32);
+        }
+    }
+
+    #[test]
+    fn packed_linear_tracks_fake_quant() {
+        let mut rng = Pcg32::seeded(11);
+        for (bits, group) in [(2u32, 64usize), (3, 64), (4, 128), (4, 0)] {
+            let spec = QuantSpec::new(bits, group);
+            let w = Tensor::randn(&[128, 96], 1.0, &mut rng);
+            let pl = PackedLinear::pack("w", &w, spec);
+            let dq = pl.dequantize();
+            let fq = quant_dequant(&w, spec, None);
+            // only difference is f16 narrowing of scale/zp
+            let qmax = spec.qmax();
+            let (_, params, _) = crate::quant::quantize_codes(&w, spec, None);
+            for i in 0..128 {
+                for j in 0..96 {
+                    let g = spec.group_len(128);
+                    let s = params[(i / g) * 96 + j].scale;
+                    let tol = s * qmax * 1.5e-3 + 1e-4;
+                    let d = (dq.at2(i, j) - fq.at2(i, j)).abs();
+                    assert!(d <= tol, "b{bits}g{group} ({i},{j}): {d} > {tol}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bytes_match_memory_model() {
+        let mut rng = Pcg32::seeded(12);
+        let w = Tensor::randn(&[256, 128], 1.0, &mut rng);
+        for (bits, group) in [(2u32, 64usize), (3, 128), (4, 0)] {
+            let spec = QuantSpec::new(bits, group);
+            let pl = PackedLinear::pack("w", &w, spec);
+            assert_eq!(pl.bytes(), crate::quant::weight_bytes(256, 128, spec));
+        }
+    }
+
+    #[test]
+    fn model_save_load_roundtrip() {
+        let ps = zoo::seeded_store("ll-s1", 7).unwrap();
+        let pm = PackedModel::from_store(&ps, QuantSpec::new(3, 64));
+        let path = "/tmp/aq_test_packed.bin";
+        pm.save(path).unwrap();
+        let pm2 = PackedModel::load(path).unwrap();
+        std::fs::remove_file(path).ok();
+        assert_eq!(pm2.cfg.name, "ll-s1");
+        assert_eq!(pm2.spec, pm.spec);
+        assert_eq!(pm2.globals.len(), pm.globals.len());
+        for ((n1, t1), (n2, t2)) in pm.globals.iter().zip(&pm2.globals) {
+            assert_eq!(n1, n2);
+            assert_eq!(t1, t2);
+        }
+        for (b1, b2) in pm.blocks.iter().zip(&pm2.blocks) {
+            assert_eq!(b1.f32s, b2.f32s);
+            for (l1, l2) in b1.linears.iter().zip(&b2.linears) {
+                assert_eq!(l1.name, l2.name);
+                assert_eq!(l1.packed, l2.packed);
+                assert_eq!(l1.scales16, l2.scales16);
+                assert_eq!(l1.zps16, l2.zps16);
+                // matmul output is bit-identical after a save/load cycle
+                let mut rng = Pcg32::seeded(1);
+                let x: Vec<f32> = (0..l1.din).map(|_| rng.normal() as f32).collect();
+                assert_eq!(l1.matmul(&x, 1), l2.matmul(&x, 1));
+            }
+        }
+        assert_eq!(pm.packed_bytes(), pm2.packed_bytes());
+        assert!(pm.packed_bytes() * 4 < pm.fp16_linear_bytes(),
+            "w3g64 must be >4x smaller than fp16");
+    }
+}

@@ -1,0 +1,229 @@
+//! Continuous-batching request scheduler (Orca-style token-level batching).
+//!
+//! Requests queue up, get admitted into free KV-cache slots *mid-decode*,
+//! and are evicted the step they finish — the batch composition changes
+//! every step, exactly like a multi-user serving loop. Prefill and decode
+//! are unified: an admitted sequence first streams its prompt tokens
+//! through [`decode::step`] (outputs ignored) one per scheduler tick, then
+//! switches to feeding back sampled tokens.
+//!
+//! Because the fused GEMM and attention are row-independent, a sequence's
+//! output stream does not depend on which other sequences share its steps —
+//! `rust/tests/engine.rs` asserts completions are identical for
+//! `max_batch = 1` and `max_batch = N`.
+
+use std::collections::VecDeque;
+
+use crate::rngx::Pcg32;
+
+use super::decode::{self, sample_row, Sampler, StepInput};
+use super::kv::KvCache;
+use super::packed::PackedModel;
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt tokens (byte-level; must be non-empty).
+    pub prompt: Vec<i32>,
+    /// Maximum generated tokens (beyond the prompt).
+    pub max_new: usize,
+    /// Stop early when this token is produced (it is kept in the output).
+    pub eos: Option<i32>,
+}
+
+/// A finished request: the generated continuation (prompt excluded).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Completion {
+    pub id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+    /// Scheduler ticks this sequence was live for (prefill + decode).
+    pub steps: usize,
+}
+
+struct Active {
+    req: Request,
+    slot: usize,
+    /// Prompt tokens already fed.
+    fed: usize,
+    /// Next absolute position.
+    pos: usize,
+    generated: Vec<i32>,
+    last_sampled: i32,
+    steps: usize,
+}
+
+/// Aggregate serving statistics for one `run`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RunStats {
+    pub scheduler_steps: usize,
+    /// Total tokens pushed through the model (prefill + decode).
+    pub tokens_processed: usize,
+    /// Generated tokens only.
+    pub tokens_generated: usize,
+    pub peak_batch: usize,
+}
+
+pub struct Scheduler {
+    max_batch: usize,
+    pending: VecDeque<Request>,
+    active: Vec<Option<Active>>,
+    finished: Vec<Completion>,
+    pub stats: RunStats,
+}
+
+impl Scheduler {
+    pub fn new(max_batch: usize) -> Scheduler {
+        assert!(max_batch > 0);
+        Scheduler {
+            max_batch,
+            pending: VecDeque::new(),
+            active: (0..max_batch).map(|_| None).collect(),
+            finished: Vec::new(),
+            stats: RunStats::default(),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        assert!(!req.prompt.is_empty(), "request {} has an empty prompt", req.id);
+        assert!(req.max_new > 0, "request {} asks for zero tokens", req.id);
+        self.pending.push_back(req);
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || self.active.iter().any(Option::is_some)
+    }
+
+    /// Admit pending requests into free slots (resets their cache slots).
+    fn admit(&mut self, cache: &mut KvCache) {
+        for slot in 0..self.max_batch {
+            if self.active[slot].is_some() {
+                continue;
+            }
+            let Some(req) = self.pending.pop_front() else { break };
+            cache.reset(slot);
+            self.active[slot] = Some(Active {
+                req,
+                slot,
+                fed: 0,
+                pos: 0,
+                generated: Vec::new(),
+                last_sampled: 0,
+                steps: 0,
+            });
+        }
+    }
+
+    /// Longest sequence length a slot can hold: the learned positional
+    /// table bounds the opt family; RoPE models are bounded only by the
+    /// cache ring (sliding window), i.e. effectively unbounded.
+    fn max_len(model: &PackedModel) -> usize {
+        if model.cfg.family == "opt" {
+            model.cfg.seq
+        } else {
+            usize::MAX
+        }
+    }
+
+    /// Retire a live sequence into `finished` and free its slot.
+    fn finish(&mut self, slot: usize, cache: &mut KvCache) {
+        let a = self.active[slot].take().expect("finish on empty slot");
+        self.finished.push(Completion {
+            id: a.req.id,
+            prompt_len: a.req.prompt.len(),
+            tokens: a.generated,
+            steps: a.steps,
+        });
+        cache.reset(slot);
+    }
+
+    /// One scheduler tick: admit, step every live sequence by one token,
+    /// sample/finish. Returns false when no work remains.
+    pub fn tick(
+        &mut self,
+        model: &PackedModel,
+        cache: &mut KvCache,
+        sampler: Sampler,
+        rng: &mut Pcg32,
+    ) -> bool {
+        self.admit(cache);
+        let hard_cap = Self::max_len(model);
+        // evict sequences that cannot be stepped further (positional table
+        // exhausted mid-prompt or mid-decode)
+        for slot in 0..self.max_batch {
+            if self.active[slot].as_ref().is_some_and(|a| a.pos >= hard_cap) {
+                self.finish(slot, cache);
+            }
+        }
+        let mut batch: Vec<StepInput> = Vec::new();
+        let mut slots: Vec<usize> = Vec::new();
+        let mut needs: Vec<bool> = Vec::new();
+        for a in self.active.iter().flatten() {
+            let token = if a.fed < a.req.prompt.len() {
+                a.req.prompt[a.fed]
+            } else {
+                a.last_sampled
+            };
+            batch.push(StepInput { slot: a.slot, token, pos: a.pos });
+            slots.push(a.slot);
+            // mid-prefill rows discard their logits; skip the vocab head
+            needs.push(a.fed + 1 >= a.req.prompt.len());
+        }
+        if batch.is_empty() {
+            return self.has_work();
+        }
+        self.stats.scheduler_steps += 1;
+        self.stats.tokens_processed += batch.len();
+        self.stats.peak_batch = self.stats.peak_batch.max(batch.len());
+
+        let logits = decode::step_select(model, &batch, cache, Some(&needs));
+
+        for (row, slot) in slots.into_iter().enumerate() {
+            let a = self.active[slot].as_mut().expect("active slot vanished");
+            a.steps += 1;
+            a.pos += 1;
+            let mut done = false;
+            if a.fed < a.req.prompt.len() {
+                a.fed += 1;
+                if a.fed < a.req.prompt.len() {
+                    // still prefilling; ignore the logits
+                    continue;
+                }
+            }
+            // the step consumed the last prompt token or a fed-back sample:
+            // this row's logits predict the next token
+            let tok = sample_row(logits.row(row), sampler, rng);
+            a.generated.push(tok);
+            a.last_sampled = tok;
+            self.stats.tokens_generated += 1;
+            if a.generated.len() >= a.req.max_new {
+                done = true;
+            }
+            if a.req.eos == Some(tok) {
+                done = true;
+            }
+            if a.pos >= hard_cap {
+                done = true;
+            }
+            if done {
+                self.finish(slot, cache);
+            }
+        }
+        self.has_work()
+    }
+
+    /// Drive to completion; returns completions sorted by request id.
+    pub fn run(
+        &mut self,
+        model: &PackedModel,
+        cache: &mut KvCache,
+        sampler: Sampler,
+        rng: &mut Pcg32,
+    ) -> Vec<Completion> {
+        while self.tick(model, cache, sampler, rng) {}
+        let mut out = std::mem::take(&mut self.finished);
+        out.sort_by_key(|c| c.id);
+        out
+    }
+}

@@ -254,11 +254,80 @@ pub fn gradual_ablation(ctx: &mut Ctx, model: &str, config: &str, stem: &str) ->
     Ok(t)
 }
 
-impl Table {
-    /// Print the most recent row (progress feedback during long sweeps).
-    pub fn print_last(&self) {
-        if let Some(r) = self.rows.last() {
-            println!("  {}", r.join(" | "));
-        }
+/// Packed-engine exhibit: parity of the host engine against the PJRT
+/// "merged serving" path (RTN fake-quant + `block_fp`), deployment memory
+/// vs fp16, and decode throughput — engine continuous batching vs the naive
+/// PJRT alternative (one full `(batch, seq)` forward per generated token,
+/// the only way to decode through the fixed-shape AOT graphs).
+pub fn engine_table(
+    ctx: &mut Ctx,
+    model: &str,
+    configs: &[String],
+    stem: &str,
+) -> Result<Table> {
+    use crate::engine::{Engine, PackedModel, Request, Sampler};
+    use crate::util::Timer;
+
+    let (rt, fp) = ctx.model(model)?;
+    let cfg = rt.cfg.clone();
+    let mut t = Table::new(
+        &format!("Packed engine — {model}"),
+        &["config", "hidden_maxdiff", "mem_vs_fp16", "engine_tok_s_b16", "pjrt_naive_tok_s"],
+    );
+
+    // PJRT naive-decode baseline: a full (batch, seq) forward yields one
+    // new token per sequence, i.e. `batch` tokens per forward.
+    let tokens: Vec<i32> =
+        (0..cfg.batch * cfg.seq).map(|i| ((i * 31 + 5) % 256) as i32).collect();
+    let _warm = eval::forward_hidden(&rt, &fp, &tokens, None)?;
+    let timer = Timer::start();
+    let reps = 3;
+    for _ in 0..reps {
+        let _ = eval::forward_hidden(&rt, &fp, &tokens, None)?;
     }
+    let pjrt_tok_s = (reps * cfg.batch) as f64 / timer.secs();
+
+    for config in configs {
+        let (spec, _) = parse_config(config)?;
+        // parity vs the PJRT chain over RTN fake-quant weights
+        let qps = baselines::rtn::quantize(&rt, &fp, spec)?;
+        let mut h = rt.embed(&tokens, qps.globals())?;
+        for b in 0..cfg.n_layers {
+            h = rt.block_fp(&h, qps.block(b))?;
+        }
+        let pm = PackedModel::from_store(&fp, spec);
+        let mut max_diff = 0.0f32;
+        for s in 0..cfg.batch {
+            let hh = crate::engine::hidden_full(&pm, &tokens[s * cfg.seq..(s + 1) * cfg.seq]);
+            for (a, b) in hh.data.iter().zip(&h.data[s * cfg.seq * cfg.d_model..]) {
+                max_diff = max_diff.max((a - b).abs());
+            }
+        }
+        let mem_ratio = pm.fp16_linear_bytes() as f64 / pm.packed_bytes() as f64;
+
+        // engine throughput: 16 concurrent greedy decodes
+        let mut engine = Engine::new(pm, 16);
+        let reqs: Vec<Request> = (0..16)
+            .map(|i| Request {
+                id: i as u64,
+                prompt: vec![(i * 11 % 256) as i32, 1, 2],
+                max_new: 48,
+                eos: None,
+            })
+            .collect();
+        let timer = Timer::start();
+        let (_, stats) = engine.generate(reqs, Sampler::Greedy, 0);
+        let engine_tok_s = stats.tokens_processed as f64 / timer.secs();
+
+        t.row(vec![
+            config.clone(),
+            format!("{max_diff:.2e}"),
+            format!("{mem_ratio:.2}x"),
+            format!("{engine_tok_s:.0}"),
+            format!("{pjrt_tok_s:.1}"),
+        ]);
+        t.print_last();
+    }
+    save_table(&t, stem)?;
+    Ok(t)
 }

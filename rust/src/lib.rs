@@ -15,16 +15,28 @@
 //! the baselines (RTN / GPTQ / AWQ / SmoothQuant / OmniQuant / FlexRound),
 //! and the evaluation harnesses (perplexity + zero-shot).
 //!
+//! The **deployment path** is pure host: [`engine`] serves a calibrated,
+//! merged model from bit-packed integer codes (`quant::pack_bits`) with
+//! fused dequant-GEMM kernels, a ring-buffer KV cache, and a
+//! continuous-batching scheduler — no XLA, no artifacts. It demonstrates
+//! the memory/throughput win the paper's "no inference overhead" merge
+//! promises, and is the only subsystem available when the crate is built
+//! with `--no-default-features` (no `pjrt`).
+//!
 //! Substrate modules (`jsonx`, `rngx`, `tensor`, `linalg`, `quant`, `data`,
 //! `benchx`, `proptestx`) are implemented from scratch: the offline build
 //! environment vendors only the `xla` crate closure.
 
+#[cfg(feature = "pjrt")]
 pub mod baselines;
 pub mod benchx;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod eval;
+#[cfg(feature = "pjrt")]
 pub mod harness;
 pub mod jsonx;
 pub mod linalg;
@@ -33,7 +45,9 @@ pub mod proptestx;
 pub mod quant;
 pub mod report;
 pub mod rngx;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tensor;
+#[cfg(feature = "pjrt")]
 pub mod train;
 pub mod util;

@@ -1,32 +1,126 @@
 //! `affinequant` — the leader binary.
 //!
 //! Subcommands:
-//!   train     --model NAME | --all  [--steps N] [--out DIR]
+//!   generate  --model NAME [--config w4a16g128] [--prompt "the "] [--n N]
+//!             [--max-new N] [--topk K] [--temp=T] [--batch B] [--seed S]
+//!             [--ckpt DIR] [--save-packed PATH | --load-packed PATH]
+//!             — packed-weight engine decode; pure host, no artifacts
+//!   train     --model NAME | --all  [--steps N] [--out DIR]      (pjrt)
 //!   quantize  --model NAME --method M --config w3a16g128 [--alpha A]
-//!   eval      --model NAME [--method M --config C] [--zeroshot]
-//!   info      print the artifact manifest summary
+//!   eval      --model NAME [--method M --config C] [--zeroshot]  (pjrt)
+//!   info      print the artifact manifest summary                (pjrt)
 //!
 //! Everything here drives the library; the table/figure reproductions live
 //! under `rust/benches/` and `examples/`.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use affinequant::cli::{parse_config, Cli};
-use affinequant::coordinator::CalibOptions;
-use affinequant::data::CorpusKind;
-use affinequant::model::ParamStore;
-use affinequant::runtime::Runtime;
-use affinequant::train::{ensure_checkpoint, TrainConfig};
-use affinequant::{baselines, eval};
+use affinequant::cli::Cli;
 
 fn main() -> Result<()> {
     let cli = match Cli::from_env() {
         Ok(c) => c,
         Err(_) => {
-            eprintln!("usage: affinequant <train|quantize|eval|info> [--options]");
+            eprintln!("usage: affinequant <generate|train|quantize|eval|info> [--options]");
             std::process::exit(2);
         }
     };
+    if cli.cmd == "generate" {
+        return cmd_generate(&cli);
+    }
+    pjrt_main(cli)
+}
+
+/// Packed-engine decode. Uses a trained checkpoint when one exists under
+/// `--ckpt` (same `.aqck` files the PJRT trainer writes), otherwise a
+/// deterministic seeded init — so the command runs fully offline.
+fn cmd_generate(cli: &Cli) -> Result<()> {
+    use affinequant::cli::parse_config;
+    use affinequant::engine::{Engine, Sampler};
+    use affinequant::model::zoo;
+    use affinequant::util::{human_secs, Timer};
+
+    let model = cli.str_or("model", "opt-s1");
+    let max_batch = cli.usize_or("batch", 8);
+    let mut engine = if let Some(path) = cli.get("load-packed") {
+        Engine::load(path, max_batch)?
+    } else {
+        let (spec, _act_bits) = parse_config(&cli.str_or("config", "w4a16g128"))?;
+        let mut ps = zoo::param_store(&model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {model:?} (try {:?})", zoo::NAMES))?;
+        let ckpt = format!("{}/{model}.aqck", cli.str_or("ckpt", "checkpoints"));
+        if std::path::Path::new(&ckpt).exists() {
+            ps.load_into(&ckpt)?;
+            eprintln!("[generate] loaded checkpoint {ckpt}");
+        } else {
+            ps.init(cli.usize_or("init-seed", 42) as u64);
+            eprintln!("[generate] no checkpoint at {ckpt}; using seeded init");
+        }
+        Engine::from_store(&ps, spec, max_batch)
+    };
+    if let Some(path) = cli.get("save-packed") {
+        engine.model.save(path)?;
+        eprintln!("[generate] saved packed model to {path}");
+    }
+    eprintln!("[generate] {}", engine.memory_report());
+
+    let prompt = cli.str_or("prompt", "the ");
+    let n = cli.usize_or("n", 1);
+    let max_new = cli.usize_or("max-new", 48);
+    let topk = cli.usize_or("topk", 0);
+    let sampler = if topk > 1 {
+        Sampler::TopK { k: topk, temperature: cli.f32_or("temp", 1.0) }
+    } else {
+        Sampler::Greedy
+    };
+    // distinct per-request suffixes so top-k runs diverge visibly
+    let prompts: Vec<String> = (0..n).map(|i| format!("{prompt}{}", "and ".repeat(i % 3))).collect();
+    let prefs: Vec<&str> = prompts.iter().map(|s| s.as_str()).collect();
+    let t = Timer::start();
+    let (texts, stats) = engine.generate_text(
+        &prefs,
+        max_new,
+        sampler,
+        cli.usize_or("seed", 1) as u64,
+    );
+    let secs = t.secs();
+    for (p, out) in prefs.iter().zip(&texts) {
+        println!("{p}⟨{out}⟩");
+    }
+    eprintln!(
+        "[generate] {} generated (+{} prefill) in {} — {:.1} tok/s throughput \
+         (batch peak {}, {} scheduler steps)",
+        stats.tokens_generated,
+        stats.tokens_processed - stats.tokens_generated,
+        human_secs(secs),
+        stats.tokens_processed as f64 / secs.max(1e-9),
+        stats.peak_batch,
+        stats.scheduler_steps,
+    );
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_main(cli: Cli) -> Result<()> {
+    anyhow::bail!(
+        "subcommand {:?} needs the PJRT runtime; this binary was built with \
+         --no-default-features (only `generate` is available)",
+        cli.cmd
+    )
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_main(cli: Cli) -> Result<()> {
+    use anyhow::bail;
+
+    use affinequant::cli::parse_config;
+    use affinequant::coordinator::CalibOptions;
+    use affinequant::data::CorpusKind;
+    use affinequant::model::ParamStore;
+    use affinequant::runtime::Runtime;
+    use affinequant::train::{ensure_checkpoint, TrainConfig};
+    use affinequant::{baselines, eval};
+
     let artifacts = cli.str_or("artifacts", "artifacts");
     let rt_root = Runtime::load(&artifacts)?;
 

@@ -7,6 +7,7 @@
 //! (quantize, merge, fold) in place.
 
 pub mod merge;
+pub mod zoo;
 
 use std::collections::HashMap;
 
@@ -96,6 +97,24 @@ pub struct Layout {
 }
 
 impl Layout {
+    /// Build a layout from ordered (name, shape) pairs with offsets packed
+    /// contiguously — the host-side twin of the manifest layouts, used by
+    /// [`zoo`] and tests so the engine can run without artifacts.
+    pub fn pack(items: &[(&str, Vec<usize>)]) -> Self {
+        let mut entries = Vec::with_capacity(items.len());
+        let mut size = 0usize;
+        for (name, shape) in items {
+            entries.push((name.to_string(), shape.clone(), size));
+            size += numel(shape);
+        }
+        let index = entries
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _, _))| (n.clone(), i))
+            .collect();
+        Layout { entries, size, index }
+    }
+
     pub fn from_manifest(arr: &Value) -> Self {
         let mut entries = Vec::new();
         let mut size = 0;
@@ -276,20 +295,7 @@ impl ParamStore {
 
 #[cfg(test)]
 pub(crate) fn test_layout(items: Vec<(&str, Vec<usize>)>) -> Layout {
-    let mut arr = Vec::new();
-    let mut off = 0usize;
-    for (n, s) in items {
-        arr.push(crate::jsonx::obj(vec![
-            ("name", crate::jsonx::s(n)),
-            (
-                "shape",
-                Value::Arr(s.iter().map(|&d| crate::jsonx::num(d as f64)).collect()),
-            ),
-            ("offset", crate::jsonx::num(off as f64)),
-        ]));
-        off += numel(&s);
-    }
-    Layout::from_manifest(&Value::Arr(arr))
+    Layout::pack(&items)
 }
 
 #[cfg(test)]

@@ -1,0 +1,150 @@
+//! Host-side model zoo: the size ladder from `python/compile/configs.py`
+//! replicated in rust so the packed-weight engine (and tests) can construct
+//! models, layouts, and seeded checkpoints without the AOT artifacts.
+//!
+//! Kept bit-compatible with the manifest the AOT pipeline emits: same
+//! ordered (name, shape) lists, same flat offsets — a `ParamStore` built
+//! here accepts checkpoints trained through the PJRT path unchanged.
+
+use super::{Layout, ModelConfig, ParamStore};
+
+/// Names of the built-in models, smallest first per family.
+pub const NAMES: [&str; 5] = ["opt-s1", "opt-s2", "opt-s3", "ll-s1", "ll-s2"];
+
+/// Built-in config by name (mirrors configs.py MODELS).
+pub fn config(name: &str) -> Option<ModelConfig> {
+    let (family, d_model, n_heads, n_layers, d_ff) = match name {
+        "opt-s1" => ("opt", 128, 4, 2, 512),
+        "opt-s2" => ("opt", 256, 8, 3, 1024),
+        "opt-s3" => ("opt", 384, 12, 4, 1536),
+        "ll-s1" => ("ll", 128, 4, 2, 384),
+        "ll-s2" => ("ll", 256, 8, 3, 768),
+        _ => return None,
+    };
+    let mut cfg = ModelConfig {
+        name: name.to_string(),
+        family: family.to_string(),
+        d_model,
+        n_heads,
+        n_layers,
+        d_ff,
+        vocab: 256,
+        seq: 128,
+        batch: 8,
+        train_batch: 16,
+        head_dim: d_model / n_heads,
+        params: 0,
+    };
+    let (gl, bl) = layouts(&cfg);
+    cfg.params = gl.size + cfg.n_layers * bl.size;
+    Some(cfg)
+}
+
+/// (globals_layout, block_layout) for a config — the ordered (name, shape)
+/// lists from configs.py `global_weight_names` / `block_weight_names`.
+pub fn layouts(cfg: &ModelConfig) -> (Layout, Layout) {
+    let d = cfg.d_model;
+    let ff = cfg.d_ff;
+    let (globals, blocks): (Vec<(&str, Vec<usize>)>, Vec<(&str, Vec<usize>)>) =
+        if cfg.family == "opt" {
+            (
+                vec![
+                    ("tok_emb", vec![cfg.vocab, d]),
+                    ("pos_emb", vec![cfg.seq, d]),
+                    ("lnf_g", vec![d]),
+                    ("lnf_b", vec![d]),
+                ],
+                vec![
+                    ("ln1_g", vec![d]),
+                    ("ln1_b", vec![d]),
+                    ("wq", vec![d, d]),
+                    ("bq", vec![d]),
+                    ("wk", vec![d, d]),
+                    ("bk", vec![d]),
+                    ("wv", vec![d, d]),
+                    ("bv", vec![d]),
+                    ("wo", vec![d, d]),
+                    ("bo", vec![d]),
+                    ("ln2_g", vec![d]),
+                    ("ln2_b", vec![d]),
+                    ("w1", vec![d, ff]),
+                    ("b1", vec![ff]),
+                    ("w2", vec![ff, d]),
+                    ("b2", vec![d]),
+                ],
+            )
+        } else {
+            (
+                vec![("tok_emb", vec![cfg.vocab, d]), ("rmsf_g", vec![d])],
+                vec![
+                    ("rms1_g", vec![d]),
+                    ("wq", vec![d, d]),
+                    ("wk", vec![d, d]),
+                    ("wv", vec![d, d]),
+                    ("wo", vec![d, d]),
+                    ("rms2_g", vec![d]),
+                    ("wg", vec![d, ff]),
+                    ("wu", vec![d, ff]),
+                    ("wd", vec![ff, d]),
+                ],
+            )
+        };
+    (Layout::pack(&globals), Layout::pack(&blocks))
+}
+
+/// A fresh `ParamStore` for a built-in model.
+pub fn param_store(name: &str) -> Option<ParamStore> {
+    let cfg = config(name)?;
+    let (gl, bl) = layouts(&cfg);
+    Some(ParamStore::new(cfg, gl, bl))
+}
+
+/// A seeded, initialized `ParamStore` — the deterministic "checkpoint"
+/// the engine tests and the offline `generate` path fall back to when no
+/// trained checkpoint exists.
+pub fn seeded_store(name: &str, seed: u64) -> Option<ParamStore> {
+    let mut ps = param_store(name)?;
+    ps.init(seed);
+    Some(ps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::numel;
+
+    #[test]
+    fn all_builtins_construct() {
+        for name in NAMES {
+            let cfg = config(name).unwrap();
+            assert_eq!(cfg.name, name);
+            assert_eq!(cfg.d_model % 128, 0, "{name}: dims must divide g128");
+            assert_eq!(cfg.d_ff % 128, 0, "{name}");
+            assert_eq!(cfg.head_dim * cfg.n_heads, cfg.d_model);
+            let ps = seeded_store(name, 1).unwrap();
+            assert_eq!(ps.theta.len(), cfg.params);
+            assert!(ps.theta.iter().any(|&v| v != 0.0));
+        }
+        assert!(config("opt-xl").is_none());
+    }
+
+    #[test]
+    fn layouts_cover_quantized_weights() {
+        for name in NAMES {
+            let cfg = config(name).unwrap();
+            let (_, bl) = layouts(&cfg);
+            for (w, din, dout) in cfg.quantized_weights() {
+                assert_eq!(bl.shape(w), &[din, dout], "{name}/{w}");
+            }
+        }
+    }
+
+    #[test]
+    fn param_count_matches_layout_sum() {
+        let cfg = config("opt-s1").unwrap();
+        let (gl, bl) = layouts(&cfg);
+        let by_hand: usize = gl.entries.iter().map(|(_, s, _)| numel(s)).sum::<usize>()
+            + cfg.n_layers * bl.entries.iter().map(|(_, s, _)| numel(s)).sum::<usize>();
+        assert_eq!(cfg.params, by_hand);
+    }
+}

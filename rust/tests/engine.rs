@@ -1,0 +1,223 @@
+//! Engine-level tests: fused packed GEMM vs the fake-quant reference,
+//! KV-cache equivalence (incremental decode == full-context forward,
+//! bit-identical), continuous-batching invariance, and the greedy-decode
+//! acceptance check against a reference host forward on a seeded
+//! checkpoint. Pure host — runs with `--no-default-features`.
+
+use affinequant::engine::decode::{self, argmax, Sampler, StepInput};
+use affinequant::engine::kv::KvCache;
+use affinequant::engine::packed::{PackedLinear, PackedModel};
+use affinequant::engine::{Engine, Request};
+use affinequant::model::zoo;
+use affinequant::prop_assert;
+use affinequant::proptestx::{Runner, Shrink};
+use affinequant::quant::{quant_dequant, QuantSpec};
+use affinequant::rngx::Pcg32;
+use affinequant::tensor::Tensor;
+
+// ------------------------------------------------------- GEMM properties
+
+#[derive(Clone, Debug)]
+struct GemmCase {
+    din: usize,
+    dout: usize,
+    bits: u32,
+    group: usize,
+    m: usize,
+    seed: u64,
+}
+
+impl Shrink for GemmCase {}
+
+fn gen_case(rng: &mut Pcg32) -> GemmCase {
+    let din = 64 * (1 + rng.below(4)); // 64..256, divisible by all groups
+    let dout = 16 + rng.below(100);
+    let bits = [2u32, 3, 4, 8][rng.below(4)];
+    let group = [0usize, 16, 32, 64][rng.below(4)];
+    let m = 1 + rng.below(17);
+    GemmCase { din, dout, bits, group, m, seed: rng.next_u64() }
+}
+
+/// Fused packed GEMM == dense GEMM over the dequantized weights (same
+/// deployment params, so only summation order differs).
+#[test]
+fn prop_packed_matmul_matches_dequant_gemm() {
+    Runner { cases: 48, ..Default::default() }.run(
+        "packed matmul == x @ dequant(W)",
+        gen_case,
+        |c| {
+            let mut rng = Pcg32::seeded(c.seed);
+            let w = Tensor::randn(&[c.din, c.dout], 1.0, &mut rng);
+            let spec = QuantSpec::new(c.bits, c.group);
+            let pl = PackedLinear::pack("w", &w, spec);
+            let x = Tensor::randn(&[c.m, c.din], 1.0, &mut rng);
+            let got = pl.matmul(&x.data, c.m);
+            let want = x.matmul(&pl.dequantize());
+            let scale = 1.0 + want.max_abs();
+            for (i, (&g, &wv)) in got.iter().zip(&want.data).enumerate() {
+                prop_assert!(
+                    (g - wv).abs() <= 1e-3 * scale,
+                    "{c:?} elem {i}: {g} vs {wv} (scale {scale})"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Packed GEMM tracks the f32 fake-quant reference GEMM to ≤1e-3 relative —
+/// the only divergence is f16 narrowing of the per-group scale (zero-points
+/// are integers ≤ qmax, exact in f16).
+#[test]
+fn prop_packed_matmul_matches_fake_quant_reference() {
+    Runner { cases: 48, ..Default::default() }.run(
+        "packed matmul == x @ fake_quant(W) to 1e-3",
+        gen_case,
+        |c| {
+            let mut rng = Pcg32::seeded(c.seed ^ 0xabcd);
+            let w = Tensor::randn(&[c.din, c.dout], 1.0, &mut rng);
+            let spec = QuantSpec::new(c.bits, c.group);
+            let pl = PackedLinear::pack("w", &w, spec);
+            let x = Tensor::randn(&[c.m, c.din], 1.0, &mut rng);
+            let got = pl.matmul(&x.data, c.m);
+            let want = x.matmul(&quant_dequant(&w, spec, None));
+            let scale = 1.0 + want.max_abs();
+            for (i, (&g, &wv)) in got.iter().zip(&want.data).enumerate() {
+                prop_assert!(
+                    (g - wv).abs() <= 1e-3 * scale,
+                    "{c:?} elem {i}: {g} vs {wv} (scale {scale})"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+// --------------------------------------------- KV-cache equivalence
+
+fn test_tokens(n: usize) -> Vec<i32> {
+    (0..n).map(|i| ((i * 41 + 13) % 256) as i32).collect()
+}
+
+/// Incremental decode through the ring KV cache produces *bit-identical*
+/// logits to the whole-context reference forward, for both families.
+#[test]
+fn kv_incremental_equals_full_forward() {
+    for (name, spec) in [
+        ("opt-s1", QuantSpec::new(4, 128)),
+        ("ll-s1", QuantSpec::new(3, 64)),
+    ] {
+        let ps = zoo::seeded_store(name, 42).unwrap();
+        let pm = PackedModel::from_store(&ps, spec);
+        let tokens = test_tokens(24);
+        let full = decode::forward_full(&pm, &tokens);
+        let cfg = &pm.cfg;
+        let mut cache = KvCache::new(1, cfg.n_layers, tokens.len(), cfg.d_model);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let logits = decode::step(&pm, &[StepInput { slot: 0, token: tok, pos: i }], &mut cache);
+            assert_eq!(
+                logits.row(0),
+                full.row(i),
+                "{name}: step {i} logits differ from full forward"
+            );
+        }
+    }
+}
+
+/// Acceptance: engine greedy decode (with continuous batching around it) is
+/// bit-identical argmax to re-running a reference host forward after every
+/// token, on a seeded checkpoint.
+#[test]
+fn greedy_decode_matches_reference_forward() {
+    let name = "opt-s1";
+    let spec = QuantSpec::new(4, 128);
+    let ps = zoo::seeded_store(name, 42).unwrap();
+    let pm = PackedModel::from_store(&ps, spec);
+
+    let prompt = test_tokens(8);
+    let max_new = 12;
+
+    // reference: full forward after every token, take argmax of last row
+    let mut seq = prompt.clone();
+    let mut reference = Vec::new();
+    for _ in 0..max_new {
+        let logits = decode::forward_full(&pm, &seq);
+        let tok = argmax(logits.row(seq.len() - 1));
+        reference.push(tok);
+        seq.push(tok);
+    }
+
+    // engine: same request, decoded alongside two other live sequences
+    let mut engine = Engine::new(pm, 3);
+    let reqs = vec![
+        Request { id: 0, prompt: prompt.clone(), max_new, eos: None },
+        Request { id: 1, prompt: test_tokens(5), max_new: 20, eos: None },
+        Request { id: 2, prompt: test_tokens(17), max_new: 3, eos: None },
+    ];
+    let (completions, stats) = engine.generate(reqs, Sampler::Greedy, 0);
+    assert_eq!(completions.len(), 3);
+    assert_eq!(
+        completions[0].tokens, reference,
+        "engine decode diverged from the reference host forward"
+    );
+    assert!(stats.peak_batch == 3, "requests must actually share steps");
+}
+
+/// A sequence's greedy output is independent of the batch it shares steps
+/// with — the continuous-batching correctness property.
+#[test]
+fn completions_invariant_to_max_batch() {
+    let ps = zoo::seeded_store("ll-s1", 42).unwrap();
+    let pm = PackedModel::from_store(&ps, QuantSpec::new(4, 128));
+    let reqs: Vec<Request> = (0..5)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: test_tokens(3 + 5 * i),
+            max_new: 4 + 3 * i,
+            eos: None,
+        })
+        .collect();
+    let run = |max_batch: usize| {
+        let mut e = Engine::new(pm.clone(), max_batch);
+        e.generate(reqs.clone(), Sampler::Greedy, 0).0
+    };
+    let serial = run(1);
+    let batched = run(4);
+    assert_eq!(serial.len(), 5);
+    for (a, b) in serial.iter().zip(&batched) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {} depends on batch composition", a.id);
+    }
+}
+
+/// RoPE models keep decoding past the cache capacity via the sliding ring.
+#[test]
+fn ring_slides_past_capacity_for_rope_models() {
+    let ps = zoo::seeded_store("ll-s1", 42).unwrap();
+    let mut engine = Engine::from_store(&ps, QuantSpec::new(4, 128), 1);
+    let cap = engine.model.cfg.seq;
+    let max_new = cap + 12; // forces eviction of the oldest entries
+    let (c, _) = engine.generate(
+        vec![Request { id: 0, prompt: test_tokens(4), max_new, eos: None }],
+        Sampler::Greedy,
+        0,
+    );
+    assert_eq!(c[0].tokens.len(), max_new);
+    assert!(c[0].tokens.iter().all(|&t| (0..256).contains(&t)));
+}
+
+/// Save → load → serve roundtrip: identical completions.
+#[test]
+fn packed_model_roundtrip_preserves_decode() {
+    let ps = zoo::seeded_store("opt-s1", 7).unwrap();
+    let pm = PackedModel::from_store(&ps, QuantSpec::new(2, 64));
+    let path = "/tmp/aq_engine_roundtrip.bin";
+    pm.save(path).unwrap();
+    let mut e1 = Engine::new(pm, 2);
+    let mut e2 = Engine::load(path, 2).unwrap();
+    std::fs::remove_file(path).ok();
+    let reqs = vec![Request { id: 0, prompt: test_tokens(6), max_new: 10, eos: None }];
+    let (c1, _) = e1.generate(reqs.clone(), Sampler::Greedy, 0);
+    let (c2, _) = e2.generate(reqs, Sampler::Greedy, 0);
+    assert_eq!(c1[0].tokens, c2[0].tokens);
+}

@@ -328,3 +328,47 @@ fn tensor_literal_roundtrip_through_identity_entry() {
     assert!(diff < 1e-6, "ll embed must be a pure row lookup (no pos emb): {diff}");
     let _ = Tensor::zeros(&[1]);
 }
+
+#[test]
+fn engine_hidden_matches_pjrt_block_chain() {
+    // The packed engine's host forward vs the PJRT "merged serving" path:
+    // fake-quant the weights host-side (RTN == plain quant_dequant), run
+    // embed + block_fp through XLA, and compare against the engine's
+    // hidden states over the same tokens. The only divergences are f16
+    // narrowing of the packed scales and XLA-vs-host float ordering.
+    let Some(root) = runtime() else { return };
+    for name in ["opt-s1", "ll-s1"] {
+        let rt = root.model(name).unwrap();
+        let ps = init_model(&rt);
+        let spec = QuantSpec::new(4, 128);
+        let qps = affinequant::baselines::rtn::quantize(&rt, &ps, spec).unwrap();
+        let cfg = rt.cfg.clone();
+        let tokens: Vec<i32> =
+            (0..cfg.batch * cfg.seq).map(|i| ((i * 31 + 5) % 256) as i32).collect();
+        let mut h = rt.embed(&tokens, qps.globals()).unwrap();
+        for b in 0..cfg.n_layers {
+            h = rt.block_fp(&h, qps.block(b)).unwrap();
+        }
+        let pm = affinequant::engine::PackedModel::from_store(&ps, spec);
+        let d = cfg.d_model;
+        let mut max_diff = 0.0f32;
+        let mut max_mag = 0.0f32;
+        for s in 0..cfg.batch {
+            let seq_toks = &tokens[s * cfg.seq..(s + 1) * cfg.seq];
+            let hh = affinequant::engine::hidden_full(&pm, seq_toks);
+            for t in 0..cfg.seq {
+                for j in 0..d {
+                    let a = hh.at2(t, j);
+                    let b = h.data[(s * cfg.seq + t) * d + j];
+                    max_diff = max_diff.max((a - b).abs());
+                    max_mag = max_mag.max(b.abs());
+                }
+            }
+        }
+        assert!(
+            max_diff < 0.05 * (1.0 + max_mag),
+            "{name}: engine vs PJRT hidden diverged: {max_diff} (mag {max_mag})"
+        );
+        println!("{name}: engine-vs-pjrt max|diff| = {max_diff:.2e} (mag {max_mag:.2e})");
+    }
+}

@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# CI gate: formatting + the offline-safe (no-XLA) build and test paths.
+#
+# The default feature set (`pjrt`) needs the vendored xla crate closure and
+# the AOT artifacts; this script enforces that the pure-host subset — the
+# substrate modules plus the packed-weight engine — always builds and
+# passes its tests with `--no-default-features`, so the deployment path
+# never regresses even where XLA is unavailable.
+#
+# Usage: scripts/ci.sh [--with-pjrt]
+#   --with-pjrt  additionally run the default-feature build + tests
+#                (requires the vendored xla closure; runtime tests skip
+#                themselves when artifacts/ is missing).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check"
+cargo fmt --check
+
+echo "== cargo build --release --no-default-features"
+cargo build --release --no-default-features
+
+echo "== cargo test -q --no-default-features"
+cargo test -q --no-default-features
+
+if [[ "${1:-}" == "--with-pjrt" ]]; then
+    echo "== cargo build --release (default features)"
+    cargo build --release
+    echo "== cargo test -q (default features)"
+    cargo test -q
+fi
+
+echo "ci.sh: OK"
