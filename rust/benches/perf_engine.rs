@@ -1,7 +1,9 @@
 //! Packed-engine perf: fused unpack→dequant GEMM vs the f32 fake-quant
 //! matmul baseline (what the AOT graphs do on every forward), across
 //! batch {1, 4, 16} and w4g128 / w3g128 / w2g64 — plus end-to-end decode
-//! tokens/sec through the continuous-batching engine.
+//! tokens/sec through the continuous-batching engine and time-to-first-
+//! token across prefill chunk sizes (chunked prefill acceptance: >=3x
+//! lower TTFT on a 256-token prompt at chunk 16 vs chunk 1).
 //!
 //! Pure host: runs with `--no-default-features` and no artifacts. With the
 //! `pjrt` feature *and* `artifacts/` present it also prints the harness
@@ -15,7 +17,7 @@
 use affinequant::benchx::{bench, Table};
 use affinequant::engine::gemm::{packed_gemm, packed_matvec_grouped, PackedWeight};
 use affinequant::engine::packed::PackedLinear;
-use affinequant::engine::{Engine, Request, Sampler};
+use affinequant::engine::{Engine, Request, Sampler, SchedConfig};
 use affinequant::model::zoo;
 use affinequant::quant::{quant_dequant, QuantSpec};
 use affinequant::report::save_table;
@@ -131,10 +133,55 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", engine_memory_line(&ps));
 
+    // ------------------------------- chunked prefill: time-to-first-token
+    // 256-token prompt through the RoPE model (the ring slides, so the
+    // prompt may exceed the KV capacity); TTFT ≈ the full generate() time
+    // at max_new = 1. Acceptance target: >=3x lower TTFT at chunk 16 vs
+    // the token-at-a-time chunk 1.
+    let mut tt = Table::new(
+        "prefill TTFT (ll-s1, 256-token prompt, w4g128, greedy, max_new=1)",
+        &["prefill_chunk", "ttft_ms", "speedup_vs_chunk1"],
+    );
+    let ps_ll = zoo::seeded_store("ll-s1", 42).expect("zoo model");
+    let pm_ll = affinequant::engine::PackedModel::from_store(&ps_ll, QuantSpec::new(4, 128));
+    let long_prompt: Vec<i32> = (0..256).map(|i| ((i * 13 + 7) % 256) as i32).collect();
+    let mut ttft_chunk1 = 0.0f64;
+    let mut ttft_chunk16 = 0.0f64;
+    for chunk in [1usize, 4, 16, 64, 0] {
+        let sched = SchedConfig { prefill_chunk: chunk, token_budget: 0 };
+        let mut engine = Engine::with_config(pm_ll.clone(), 1, sched);
+        let label = if chunk == 0 { "full".to_string() } else { chunk.to_string() };
+        let r = bench(&format!("ttft chunk {label}"), 1, 5, || {
+            let reqs =
+                vec![Request { id: 0, prompt: long_prompt.clone(), max_new: 1, eos: None }];
+            let (c, _) = engine.generate(reqs, Sampler::Greedy, 0);
+            std::hint::black_box(c);
+        });
+        if chunk == 1 {
+            ttft_chunk1 = r.median_s;
+        }
+        if chunk == 16 {
+            ttft_chunk16 = r.median_s;
+        }
+        let speedup = if chunk == 1 { 1.0 } else { ttft_chunk1 / r.median_s };
+        tt.row(vec![
+            label,
+            format!("{:.3}", r.median_s * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        tt.print_last();
+    }
+    println!(
+        "\nchunk-16 vs chunk-1 TTFT speedup: {:.2}x (target: >=3x)",
+        ttft_chunk1 / ttft_chunk16.max(1e-12)
+    );
+
     t.print();
     dt.print();
+    tt.print();
     save_table(&t, "perf_engine_gemm")?;
     save_table(&dt, "perf_engine_decode")?;
+    save_table(&tt, "perf_engine_ttft")?;
 
     // PJRT comparison when the artifacts exist (skipped silently otherwise)
     #[cfg(feature = "pjrt")]

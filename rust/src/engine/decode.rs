@@ -4,12 +4,17 @@
 //! packed-weight GEMM: pre-LN attention (causal, RoPE for the `ll` family)
 //! and the family MLP, with per-sequence KV-cached incremental steps.
 //!
-//! **Parity contract:** [`step`] (incremental, any batch composition) and
-//! [`forward_full`] (whole-context reference) run the *same* per-row code —
-//! same norm, same fused GEMM (whose row results are independent of the
-//! batch size), same attention accumulation order — so greedy decode is
-//! bit-identical to re-running the full forward after every token. Tests in
-//! `rust/tests/engine.rs` assert exact equality.
+//! **Parity contract:** [`step`] (incremental, any batch composition,
+//! including multi-token chunks of one sequence) and [`forward_full`]
+//! (whole-context reference) run the *same* per-row code — same norm, same
+//! fused GEMM (whose row results are independent of the batch size), same
+//! attention accumulation order — so greedy decode is bit-identical to
+//! re-running the full forward after every token, for any prefill chunk
+//! size. Within a layer, each row writes its K/V and attends *before* the
+//! next row writes (see [`layer_forward`]'s row loop): a chunk that wraps
+//! the KV ring therefore sees exactly the cache states token-at-a-time
+//! stepping would have produced. Tests in `rust/tests/engine.rs` assert
+//! exact equality.
 
 use crate::rngx::Pcg32;
 use crate::tensor::Tensor;
@@ -89,8 +94,12 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(&x, &y)| x * y).sum()
 }
 
-/// Causal multi-head attention for one query row against a slot's cached
-/// K/V prefix (`limit` oldest entries, which include the row itself).
+/// Causal multi-head attention for one query row against a window of
+/// `limit` cached K/V entries ending at the row's own ring index `ring`
+/// (the newest entry of the window is the row itself). Addressing is
+/// anchored at `ring` rather than the cache head, so the window is
+/// unaffected by later rows of the same step advancing the ring.
+#[allow(clippy::too_many_arguments)]
 pub fn attend(
     n_heads: usize,
     head_dim: usize,
@@ -98,23 +107,24 @@ pub fn attend(
     cache: &KvCache,
     slot: usize,
     layer: usize,
+    ring: usize,
     limit: usize,
     out: &mut [f32],
 ) {
-    debug_assert!(limit >= 1 && limit <= cache.len(slot));
+    debug_assert!(limit >= 1 && limit <= cache.capacity);
     let scale = 1.0 / (head_dim as f32).sqrt();
     let mut scores = vec![0.0f32; limit];
     for h in 0..n_heads {
         let hr = h * head_dim..(h + 1) * head_dim;
         let qh = &q[hr.clone()];
         for (t, s) in scores.iter_mut().enumerate() {
-            *s = dot(qh, &cache.k_row(slot, layer, t)[hr.clone()]) * scale;
+            *s = dot(qh, &cache.k_row_at(slot, layer, ring, limit, t)[hr.clone()]) * scale;
         }
         softmax(&mut scores);
         let oh = &mut out[hr.clone()];
         oh.fill(0.0);
         for (t, &p) in scores.iter().enumerate() {
-            let vh = &cache.v_row(slot, layer, t)[hr.clone()];
+            let vh = &cache.v_row_at(slot, layer, ring, limit, t)[hr.clone()];
             for (o, &vv) in oh.iter_mut().zip(vh) {
                 *o += p * vv;
             }
@@ -180,7 +190,11 @@ fn layer_forward(
         add_bias(&mut v, block.f32("bv"), m);
     }
 
-    // rope + cache write + attention, row by row
+    // rope + cache write + attention, row by row. Write→attend is
+    // interleaved *per row*: a chunk row must attend before the next chunk
+    // row's write can evict the oldest entry of its window, which is
+    // exactly the order token-at-a-time stepping produces — this is what
+    // keeps chunked prefill bit-identical even when the ring wraps.
     let mut ctx = vec![0.0f32; m * d];
     for (i, rc) in rows.iter().enumerate() {
         let qrow = &mut q[i * d..(i + 1) * d];
@@ -191,15 +205,14 @@ fn layer_forward(
         }
         cache.write_k(rc.slot, layer, rc.ring, krow);
         cache.write_v(rc.slot, layer, rc.ring, &v[i * d..(i + 1) * d]);
-    }
-    for (i, rc) in rows.iter().enumerate() {
         attend(
             cfg.n_heads,
             cfg.head_dim,
-            &q[i * d..(i + 1) * d],
+            qrow,
             cache,
             rc.slot,
             layer,
+            rc.ring,
             rc.limit,
             &mut ctx[i * d..(i + 1) * d],
         );
@@ -304,9 +317,11 @@ pub struct StepInput {
     pub pos: usize,
 }
 
-/// Advance every listed sequence by one token; returns `(m, vocab)` logits
-/// (row i predicts the token after `inputs[i].token`). Slots must be
-/// distinct within one call.
+/// Advance the listed sequences; returns `(m, vocab)` logits (row i
+/// predicts the token after `inputs[i].token`). A slot may contribute a
+/// *chunk* of several rows (chunked prefill) as long as its rows are
+/// contiguous with consecutive positions; attention is causal within the
+/// chunk.
 pub fn step(model: &PackedModel, inputs: &[StepInput], cache: &mut KvCache) -> Tensor {
     step_select(model, inputs, cache, None)
 }
@@ -322,9 +337,17 @@ pub fn step_select(
 ) -> Tensor {
     let m = inputs.len();
     assert!(m > 0, "empty step");
+    // a slot's rows must form one contiguous run with consecutive
+    // positions (a prefill chunk); distinct slots may appear in any order
     debug_assert!(
-        (0..m).all(|i| (i + 1..m).all(|j| inputs[i].slot != inputs[j].slot)),
-        "duplicate slots in one step"
+        (0..m).all(|i| {
+            (i + 1..m).all(|j| {
+                inputs[i].slot != inputs[j].slot
+                    || ((i..j).all(|t| inputs[t].slot == inputs[i].slot)
+                        && inputs[j].pos == inputs[i].pos + (j - i))
+            })
+        }),
+        "slot rows must be one contiguous, position-consecutive chunk"
     );
     let cfg = &model.cfg;
     let d = cfg.d_model;
@@ -374,6 +397,33 @@ pub fn hidden_full(model: &PackedModel, tokens: &[i32]) -> Tensor {
 pub fn forward_full(model: &PackedModel, tokens: &[i32]) -> Tensor {
     let h = hidden_full(model, tokens);
     head_logits(model, &h.data, tokens.len(), None)
+}
+
+/// Sliding-window reference forward: like [`forward_full`] but row `i`
+/// attends only to the last `min(i + 1, window)` tokens at every layer —
+/// the semantics a ring KV cache of capacity `window` converges to once it
+/// wraps. Uses a flat (non-wrapping) arena sized to the sequence, so it is
+/// an *independent* implementation of the eviction behaviour the ring
+/// produces; `rust/tests/engine.rs` pits the two against each other.
+pub fn forward_window(model: &PackedModel, tokens: &[i32], window: usize) -> Tensor {
+    let s_len = tokens.len();
+    assert!(s_len > 0, "empty sequence");
+    assert!(window >= 1, "zero attention window");
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    let mut cache = KvCache::new(1, cfg.n_layers, s_len, d);
+    let mut x = vec![0.0f32; s_len * d];
+    let rows: Vec<RowCtx> = (0..s_len)
+        .map(|i| {
+            embed_row(model, tokens[i], i, &mut x[i * d..(i + 1) * d]);
+            let ring = cache.advance(0);
+            RowCtx { slot: 0, pos: i, ring, limit: (i + 1).min(window) }
+        })
+        .collect();
+    for (layer, block) in model.blocks.iter().enumerate() {
+        layer_forward(model, block, layer, &mut x, &rows, &mut cache);
+    }
+    head_logits(model, &x, s_len, None)
 }
 
 // -------------------------------------------------------------- sampling

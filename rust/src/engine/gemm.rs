@@ -7,15 +7,34 @@
 //! (unpack → dequant → FMA into all `m` output rows), so the working set is
 //! `O(stripe_width)` and the dequant cost is amortized over the batch.
 //!
-//! Threading: output columns are split into stripes, one scoped
-//! `std::thread` worker per stripe; each worker owns a private partial
-//! buffer that is copied into `y` after join. Every `y[i][j]` is accumulated
-//! serially over `k` in ascending order inside exactly one worker, so
-//! results are **bit-identical for any m, any thread count, and any stripe
-//! partition** — the property the engine's "incremental decode == full
-//! forward" guarantee rests on.
+//! Threading: output columns are split into SIMD-width-aligned stripes
+//! (widths a multiple of [`STRIPE_ALIGN`] = 16 f32 lanes, except the
+//! ragged tail), at least one stripe per core when the column count
+//! permits. A pool of scoped `std::thread` workers drains the stripes
+//! in a static round-robin; each stripe's partial buffer is computed
+//! privately and copied into `y` after join. Every `y[i][j]` is
+//! accumulated serially over `k` in ascending order inside exactly one
+//! stripe, and the inner FMA is unrolled [`SIMD_LANES`] wide over *columns*
+//! only (each column keeps its own accumulation chain), so results are
+//! **bit-identical for any m, any thread count, and any stripe partition**
+//! — the property the engine's "incremental decode == full forward"
+//! guarantee rests on.
 
 use crate::tensor::num_threads;
+
+/// f32 lanes the inner FMA/dequant loops are unrolled for — one 256-bit
+/// vector register (AVX2/NEON-pair safe default for LLVM auto-vectorization).
+pub const SIMD_LANES: usize = 8;
+
+/// Stripe-width granularity: two f32 vectors, so a stripe's hot loop always
+/// has a pair of independent lanes in flight. Stripe widths are multiples
+/// of this (the last stripe absorbs the ragged tail).
+pub const STRIPE_ALIGN: usize = 2 * SIMD_LANES;
+
+/// Preferred stripe width in columns: big enough to amortize the per-row
+/// unpack, small enough that `stripe × m` partials stay cache-resident and
+/// there are several stripes per core to balance.
+const STRIPE_WIDTH: usize = 64;
 
 /// Unpack `out.len()` consecutive b-bit codes starting at element index
 /// `start` of a `pack_bits`-packed stream. Mirrors `quant::unpack_bits` but
@@ -52,7 +71,7 @@ pub struct PackedWeight<'a> {
     pub zps: &'a [f32],
 }
 
-impl<'a> PackedWeight<'a> {
+impl PackedWeight<'_> {
     fn check(&self) {
         debug_assert_eq!(self.din % self.group_len, 0);
         debug_assert_eq!(self.scales.len(), (self.din / self.group_len) * self.dout);
@@ -68,27 +87,11 @@ pub fn packed_gemm(w: &PackedWeight, x: &[f32], y: &mut [f32], m: usize) {
     assert_eq!(x.len(), m * w.din, "x len vs (m={m}, din={})", w.din);
     assert_eq!(y.len(), m * w.dout, "y len vs (m={m}, dout={})", w.dout);
     let stripes = plan_stripes(m, w.din, w.dout);
-    if stripes.len() <= 1 {
-        let mut part = vec![0.0f32; m * w.dout];
-        gemm_stripe(w, x, m, 0, w.dout, &mut part);
-        for (yv, pv) in y.iter_mut().zip(&part) {
-            *yv += pv;
-        }
-        return;
-    }
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = stripes
-            .iter()
-            .map(|&(j0, j1)| {
-                scope.spawn(move || {
-                    let mut part = vec![0.0f32; m * (j1 - j0)];
-                    gemm_stripe(w, x, m, j0, j1, &mut part);
-                    part
-                })
-            })
-            .collect();
-        for (h, &(j0, j1)) in handles.into_iter().zip(&stripes) {
-            let part = h.join().expect("gemm worker panicked");
+    run_stripes(
+        &stripes,
+        m,
+        |j0, j1, part| gemm_stripe(w, x, m, j0, j1, part),
+        |j0, j1, part| {
             let bw = j1 - j0;
             for i in 0..m {
                 let dst = &mut y[i * w.dout + j0..i * w.dout + j1];
@@ -97,21 +100,97 @@ pub fn packed_gemm(w: &PackedWeight, x: &[f32], y: &mut [f32], m: usize) {
                     *d += s;
                 }
             }
+        },
+    );
+}
+
+/// Workers for a stripe plan: one per stripe up to the core count; serial
+/// when the plan is a single stripe (threading overhead dominates).
+fn worker_count(stripes: &[(usize, usize)]) -> usize {
+    if stripes.len() <= 1 {
+        1
+    } else {
+        num_threads().min(stripes.len())
+    }
+}
+
+/// Shared stripe driver: run `kernel(j0, j1, part)` for every stripe —
+/// serially for single-stripe plans, otherwise on a pool of scoped workers
+/// draining stripes in a static round-robin (worker `wid` owns stripes
+/// `wid, wid + workers, …` — deterministic, but irrelevant to the result:
+/// each stripe is self-contained) — then hand each finished partial to
+/// `fold(j0, j1, part)` on the calling thread. `rows` scales the partial
+/// buffer (`rows × stripe_width`).
+fn run_stripes<K, F>(stripes: &[(usize, usize)], rows: usize, kernel: K, mut fold: F)
+where
+    K: Fn(usize, usize, &mut [f32]) + Sync,
+    F: FnMut(usize, usize, &[f32]),
+{
+    let workers = worker_count(stripes);
+    if workers <= 1 {
+        let mut part = Vec::new();
+        for &(j0, j1) in stripes {
+            part.clear();
+            part.resize(rows * (j1 - j0), 0.0);
+            kernel(j0, j1, &mut part);
+            fold(j0, j1, &part);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let kernel = &kernel;
+        let handles: Vec<_> = (0..workers)
+            .map(|wid| {
+                scope.spawn(move || {
+                    let mut parts = Vec::new();
+                    let mut si = wid;
+                    while si < stripes.len() {
+                        let (j0, j1) = stripes[si];
+                        let mut part = vec![0.0f32; rows * (j1 - j0)];
+                        kernel(j0, j1, &mut part);
+                        parts.push((si, part));
+                        si += workers;
+                    }
+                    parts
+                })
+            })
+            .collect();
+        for h in handles {
+            for (si, part) in h.join().expect("stripe worker panicked") {
+                let (j0, j1) = stripes[si];
+                fold(j0, j1, &part);
+            }
         }
     });
 }
 
-/// Column-stripe partition: one stripe per worker, stripes at least 32
-/// columns wide, single stripe for small problems (threading overhead).
+/// Column-stripe partition. Stripe widths default to [`STRIPE_WIDTH`]
+/// columns, shrinking in [`STRIPE_ALIGN`] multiples when that would leave
+/// cores idle (stripe count < core count for mid-size `dout`); every
+/// boundary sits on a [`STRIPE_ALIGN`] lane edge and the last stripe
+/// absorbs the ragged tail. Stripe count stays decoupled from the worker
+/// count — workers drain the stripe queue round-robin — and because every
+/// stripe is self-contained the partition can never change the results,
+/// only the load balance.
 fn plan_stripes(m: usize, din: usize, dout: usize) -> Vec<(usize, usize)> {
     let work = m * din * dout;
-    let threads = if work < 32 * 128 * 128 { 1 } else { num_threads() };
-    let n = threads.clamp(1, dout.div_ceil(32));
-    let chunk = dout.div_ceil(n);
-    let mut out = Vec::with_capacity(n);
+    if work < 32 * 128 * 128 || dout < 2 * STRIPE_ALIGN {
+        return vec![(0, dout)];
+    }
+    let threads = num_threads();
+    let mut width = STRIPE_WIDTH;
+    while width > STRIPE_ALIGN && dout / width < threads {
+        width -= STRIPE_ALIGN;
+    }
+    let mut out = Vec::with_capacity(dout.div_ceil(width));
     let mut j = 0;
     while j < dout {
-        let hi = (j + chunk).min(dout);
+        let mut hi = (j + width).min(dout);
+        // leave no tail narrower than one lane group: merge it into the
+        // final stripe instead
+        if dout - hi < STRIPE_ALIGN {
+            hi = dout;
+        }
         out.push((j, hi));
         j = hi;
     }
@@ -119,7 +198,10 @@ fn plan_stripes(m: usize, din: usize, dout: usize) -> Vec<(usize, usize)> {
 }
 
 /// Serial kernel over columns `[j0, j1)`: stream code rows, dequant into a
-/// stripe-wide buffer, FMA into each of the `m` partial rows.
+/// stripe-wide buffer, FMA into each of the `m` partial rows. Inner loops
+/// are unrolled [`SIMD_LANES`] wide over columns; every column's
+/// accumulator chain is untouched by the unroll, so the kernel is
+/// bit-identical to the scalar form.
 fn gemm_stripe(w: &PackedWeight, x: &[f32], m: usize, j0: usize, j1: usize, part: &mut [f32]) {
     let bw = j1 - j0;
     let mut crow = vec![0u8; bw];
@@ -129,18 +211,50 @@ fn gemm_stripe(w: &PackedWeight, x: &[f32], m: usize, j0: usize, j1: usize, part
         unpack_seg(w.packed, w.bits, k * w.dout + j0, &mut crow);
         let sc = &w.scales[gi * w.dout + j0..gi * w.dout + j1];
         let zp = &w.zps[gi * w.dout + j0..gi * w.dout + j1];
-        for j in 0..bw {
-            wrow[j] = (crow[j] as f32 - zp[j]) * sc[j];
-        }
+        dequant_row(&crow, sc, zp, &mut wrow);
         for i in 0..m {
             let a = x[i * w.din + k];
             if a != 0.0 {
-                let prow = &mut part[i * bw..(i + 1) * bw];
-                for (p, &wv) in prow.iter_mut().zip(&wrow) {
-                    *p += a * wv;
-                }
+                axpy(a, &wrow, &mut part[i * bw..(i + 1) * bw]);
             }
         }
+    }
+}
+
+/// `out[j] = (codes[j] - zp[j]) * sc[j]`, processed in [`SIMD_LANES`]-wide
+/// blocks whose exact trip count lets LLVM drop bounds checks and emit
+/// vector code.
+#[inline]
+fn dequant_row(codes: &[u8], sc: &[f32], zp: &[f32], out: &mut [f32]) {
+    let mut o = out.chunks_exact_mut(SIMD_LANES);
+    let mut c = codes.chunks_exact(SIMD_LANES);
+    let mut s = sc.chunks_exact(SIMD_LANES);
+    let mut z = zp.chunks_exact(SIMD_LANES);
+    for (((ob, cb), sb), zb) in (&mut o).zip(&mut c).zip(&mut s).zip(&mut z) {
+        for (((ov, &cv), &sv), &zv) in ob.iter_mut().zip(cb).zip(sb).zip(zb) {
+            *ov = (cv as f32 - zv) * sv;
+        }
+    }
+    let (ob, cb, sb, zb) = (o.into_remainder(), c.remainder(), s.remainder(), z.remainder());
+    for (((ov, &cv), &sv), &zv) in ob.iter_mut().zip(cb).zip(sb).zip(zb) {
+        *ov = (cv as f32 - zv) * sv;
+    }
+}
+
+/// `dst[j] += a * src[j]` in [`SIMD_LANES`]-wide blocks. Column-only
+/// blocking: each `dst[j]` keeps its private accumulation chain over `k`,
+/// so this is bit-identical to the scalar loop.
+#[inline]
+fn axpy(a: f32, src: &[f32], dst: &mut [f32]) {
+    let mut d = dst.chunks_exact_mut(SIMD_LANES);
+    let mut s = src.chunks_exact(SIMD_LANES);
+    for (db, sb) in (&mut d).zip(&mut s) {
+        for (dv, &sv) in db.iter_mut().zip(sb) {
+            *dv += a * sv;
+        }
+    }
+    for (dv, &sv) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *dv += a * sv;
     }
 }
 
@@ -182,31 +296,9 @@ pub fn packed_matvec_grouped(w: &PackedWeight, x: &[f32], y: &mut [f32]) {
             }
         }
     };
-    if stripes.len() <= 1 {
-        let mut part = vec![0.0f32; w.dout];
-        run(0, w.dout, &mut part);
-        for (yv, pv) in y.iter_mut().zip(&part) {
+    run_stripes(&stripes, 1, run, |j0, j1, part| {
+        for (yv, pv) in y[j0..j1].iter_mut().zip(part) {
             *yv += pv;
-        }
-        return;
-    }
-    std::thread::scope(|scope| {
-        let run_ref = &run;
-        let handles: Vec<_> = stripes
-            .iter()
-            .map(|&(j0, j1)| {
-                scope.spawn(move || {
-                    let mut part = vec![0.0f32; j1 - j0];
-                    run_ref(j0, j1, &mut part);
-                    part
-                })
-            })
-            .collect();
-        for (h, &(j0, j1)) in handles.into_iter().zip(&stripes) {
-            let part = h.join().expect("matvec worker panicked");
-            for (yv, pv) in y[j0..j1].iter_mut().zip(&part) {
-                *yv += pv;
-            }
         }
     });
 }
@@ -304,6 +396,60 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn stripe_plan_is_lane_aligned_and_covers_dout() {
+        for dout in [16usize, 33, 64, 96, 100, 256, 1000, 1024, 4097] {
+            // large m*din so the work threshold is passed and striping kicks in
+            let plan = plan_stripes(16, 1024, dout);
+            assert_eq!(plan.first().unwrap().0, 0);
+            assert_eq!(plan.last().unwrap().1, dout);
+            for w in plan.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "stripes must tile without gaps: {plan:?}");
+            }
+            for (i, &(j0, j1)) in plan.iter().enumerate() {
+                assert!(j1 > j0, "empty stripe in {plan:?}");
+                assert_eq!(j0 % STRIPE_ALIGN, 0, "stripe {i} start off lane grid: {plan:?}");
+                if i + 1 < plan.len() {
+                    assert_eq!(
+                        (j1 - j0) % STRIPE_ALIGN,
+                        0,
+                        "interior stripe {i} width off lane grid: {plan:?}"
+                    );
+                }
+            }
+            // the partition is machine-independent: same input, same plan
+            assert_eq!(plan, plan_stripes(16, 1024, dout));
+        }
+        // small problems stay serial (single stripe)
+        assert_eq!(plan_stripes(1, 64, 48), vec![(0, 48)]);
+    }
+
+    #[test]
+    fn gemm_bit_identical_across_stripe_partitions() {
+        // the threaded multi-stripe path must agree bit-for-bit with one
+        // serial full-width stripe — the partition-invariance contract
+        let mut rng = Pcg32::seeded(9);
+        let (din, dout, bits, g) = (256, 1000, 4u32, 64usize);
+        let (packed, scales, zps, _) = toy_weight(din, dout, bits, g, &mut rng);
+        let w = PackedWeight {
+            packed: &packed,
+            bits,
+            din,
+            dout,
+            group_len: g,
+            scales: &scales,
+            zps: &zps,
+        };
+        for m in [1usize, 5, 16] {
+            let x: Vec<f32> = (0..m * din).map(|_| rng.normal() as f32).collect();
+            let mut y = vec![0.0f32; m * dout];
+            packed_gemm(&w, &x, &mut y, m);
+            let mut whole = vec![0.0f32; m * dout];
+            gemm_stripe(&w, &x, m, 0, dout, &mut whole);
+            assert_eq!(y, whole, "m={m}: striped result differs from one whole-width stripe");
         }
     }
 

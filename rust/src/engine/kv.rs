@@ -12,6 +12,14 @@
 //! Write protocol per generated token: `advance(slot)` once (returns the
 //! ring index), then `write_k`/`write_v` at that index for every layer, so
 //! all layers stay aligned on the same ring position.
+//!
+//! Chunked prefill pushes several tokens of one slot through a single step,
+//! which means the ring head can move (and old entries can be overwritten)
+//! *between* two rows of the same batch. Attention therefore never reads
+//! through the live head: [`KvCache::k_row_at`]/[`v_row_at`] address a
+//! window of `limit` entries ending at an explicit anchor ring index — the
+//! snapshot the anchored row saw when it claimed its slot — so a row's
+//! attention window is independent of how many later rows share its step.
 
 #[derive(Clone)]
 pub struct KvCache {
@@ -95,6 +103,48 @@ impl KvCache {
         (self.head[slot] + self.capacity - self.len[slot] + j) % self.capacity
     }
 
+    /// Ring index of the `t`-th entry (0 = oldest) of a window of `limit`
+    /// entries ending at the anchor ring index `ring` — the cache snapshot
+    /// seen by the row that claimed `ring` via [`advance`](Self::advance).
+    /// Unlike [`ring_at`](Self::ring_at) this does not consult the live
+    /// head, so it stays correct when later rows of the same step have
+    /// advanced the ring past the anchor.
+    #[inline]
+    pub fn ring_in_window(&self, ring: usize, limit: usize, t: usize) -> usize {
+        debug_assert!(limit >= 1 && limit <= self.capacity && t < limit);
+        (ring + 1 + self.capacity - limit + t) % self.capacity
+    }
+
+    /// K row `t` (0 = oldest) of the window of `limit` entries ending at
+    /// anchor index `ring`.
+    #[inline]
+    pub fn k_row_at(
+        &self,
+        slot: usize,
+        layer: usize,
+        ring: usize,
+        limit: usize,
+        t: usize,
+    ) -> &[f32] {
+        let b = self.base(slot, layer, self.ring_in_window(ring, limit, t));
+        &self.k[b..b + self.d]
+    }
+
+    /// V row `t` (0 = oldest) of the window of `limit` entries ending at
+    /// anchor index `ring`.
+    #[inline]
+    pub fn v_row_at(
+        &self,
+        slot: usize,
+        layer: usize,
+        ring: usize,
+        limit: usize,
+        t: usize,
+    ) -> &[f32] {
+        let b = self.base(slot, layer, self.ring_in_window(ring, limit, t));
+        &self.v[b..b + self.d]
+    }
+
     #[inline]
     pub fn k_row(&self, slot: usize, layer: usize, j: usize) -> &[f32] {
         let b = self.base(slot, layer, self.ring_at(slot, j));
@@ -138,6 +188,33 @@ mod tests {
         }
         assert_eq!(c.len(0), 3);
         // retained window is the last 3 tokens, oldest first
+        let got: Vec<f32> = (0..3).map(|j| c.k_row(0, 0, j)[0]).collect();
+        assert_eq!(got, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn anchored_window_is_independent_of_the_live_head() {
+        // cap-3 ring, tokens 0..5 → rings [0, 1, 2, 0, 1]. The window
+        // anchored at token 3 (ring 0, limit 3) addresses rings {1, 2, 0} =
+        // tokens {1, 2, 3} *at token 3's time*; it must keep resolving those
+        // ring indices after token 4 moved the head (ring 1 now holds token
+        // 4 — readers that must not see such overwrites order write→attend
+        // per row, as decode.rs does).
+        let mut c = KvCache::new(1, 1, 3, 1);
+        let mut rings = Vec::new();
+        for t in 0..5 {
+            let idx = c.advance(0);
+            rings.push(idx);
+            c.write_k(0, 0, idx, &[t as f32]);
+            c.write_v(0, 0, idx, &[10.0 + t as f32]);
+        }
+        assert_eq!(rings, vec![0, 1, 2, 0, 1]);
+        let anchor = rings[3];
+        assert_eq!(c.k_row_at(0, 0, anchor, 3, 0)[0], 4.0, "ring 1 was overwritten by token 4");
+        assert_eq!(c.k_row_at(0, 0, anchor, 3, 1)[0], 2.0);
+        assert_eq!(c.k_row_at(0, 0, anchor, 3, 2)[0], 3.0);
+        assert_eq!(c.v_row_at(0, 0, anchor, 3, 2)[0], 13.0);
+        // live-head addressing (ring_at) sees tokens {2, 3, 4}
         let got: Vec<f32> = (0..3).map(|j| c.k_row(0, 0, j)[0]).collect();
         assert_eq!(got, vec![2.0, 3.0, 4.0]);
     }

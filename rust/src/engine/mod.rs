@@ -13,7 +13,7 @@
 //! * [`decode`] — host transformer forward (both families) + sampling;
 //!   incremental steps are bit-identical to the full-context forward.
 //! * [`sched`]  — continuous-batching request queue (admit/evict
-//!   mid-decode).
+//!   mid-decode, chunked prefill under a per-tick token budget).
 //!
 //! [`Engine`] ties them together behind a prompt-in/text-out API. See
 //! `engine/README.md` for the format layout and the parity guarantees.
@@ -30,9 +30,9 @@ use crate::model::ParamStore;
 use crate::quant::QuantSpec;
 use crate::rngx::Pcg32;
 
-pub use decode::{forward_full, hidden_full, Sampler};
+pub use decode::{forward_full, forward_window, hidden_full, Sampler};
 pub use packed::{PackedLinear, PackedModel};
-pub use sched::{Completion, Request, RunStats, Scheduler};
+pub use sched::{Completion, FinishReason, Request, RunStats, SchedConfig, Scheduler};
 
 use kv::KvCache;
 
@@ -40,6 +40,10 @@ use kv::KvCache;
 pub struct Engine {
     pub model: PackedModel,
     pub max_batch: usize,
+    /// Scheduler knobs (prefill chunking, per-tick token budget) applied to
+    /// every [`generate`](Engine::generate) call. Greedy completions are
+    /// bit-identical for any setting; only latency/throughput change.
+    pub sched: SchedConfig,
     cache: KvCache,
 }
 
@@ -48,6 +52,11 @@ impl Engine {
     /// of concurrently decoding sequences (KV memory is allocated up
     /// front: `max_batch × n_layers × seq × d_model` per K and V).
     pub fn new(model: PackedModel, max_batch: usize) -> Engine {
+        Engine::with_config(model, max_batch, SchedConfig::default())
+    }
+
+    /// [`Engine::new`] with explicit scheduler tuning.
+    pub fn with_config(model: PackedModel, max_batch: usize, sched: SchedConfig) -> Engine {
         assert!(max_batch > 0);
         let cache = KvCache::new(
             max_batch,
@@ -55,7 +64,7 @@ impl Engine {
             model.cfg.seq.max(1),
             model.cfg.d_model,
         );
-        Engine { model, max_batch, cache }
+        Engine { model, max_batch, sched, cache }
     }
 
     /// Quantize + pack a (merged) `ParamStore` and serve it.
@@ -74,21 +83,45 @@ impl Engine {
     }
 
     /// Serve a batch of requests to completion with continuous batching.
-    /// Deterministic for a fixed `(requests, sampler, seed)`; greedy
-    /// sampling is additionally independent of `max_batch`.
+    /// Deterministic for a fixed `(requests, sampler, seed, sched)`; greedy
+    /// sampling is additionally independent of `max_batch`, the prefill
+    /// chunk size, and the token budget.
     pub fn generate(
         &mut self,
         requests: Vec<Request>,
         sampler: Sampler,
         seed: u64,
     ) -> (Vec<Completion>, RunStats) {
-        let mut sched = Scheduler::new(self.max_batch);
+        let mut sched = Scheduler::with_config(self.max_batch, self.sched);
         for r in requests {
             sched.submit(r);
         }
         let mut rng = Pcg32::seeded(seed);
         let out = sched.run(&self.model, &mut self.cache, sampler, &mut rng);
         (out, sched.stats)
+    }
+
+    /// Byte-level requests, one per prompt, ids in prompt order — the
+    /// tokenizer [`generate_text`](Engine::generate_text) (and the
+    /// `generate` CLI) uses.
+    pub fn byte_requests(prompts: &[&str], max_new: usize) -> Vec<Request> {
+        prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| Request {
+                id: i as u64,
+                prompt: p.bytes().map(|b| b as i32).collect(),
+                max_new,
+                eos: None,
+            })
+            .collect()
+    }
+
+    /// Byte-level detokenization of a completion (lossy on invalid UTF-8) —
+    /// the inverse of [`byte_requests`](Engine::byte_requests).
+    pub fn completion_text(c: &Completion) -> String {
+        let bytes: Vec<u8> = c.tokens.iter().map(|&t| t as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
     }
 
     /// Byte-level text convenience: one completion string per prompt.
@@ -99,25 +132,9 @@ impl Engine {
         sampler: Sampler,
         seed: u64,
     ) -> (Vec<String>, RunStats) {
-        let reqs: Vec<Request> = prompts
-            .iter()
-            .enumerate()
-            .map(|(i, p)| Request {
-                id: i as u64,
-                prompt: p.bytes().map(|b| b as i32).collect(),
-                max_new,
-                eos: None,
-            })
-            .collect();
+        let reqs = Engine::byte_requests(prompts, max_new);
         let (completions, stats) = self.generate(reqs, sampler, seed);
-        let texts = completions
-            .into_iter()
-            .map(|c| {
-                let bytes: Vec<u8> = c.tokens.iter().map(|&t| t as u8).collect();
-                String::from_utf8_lossy(&bytes).into_owned()
-            })
-            .collect();
-        (texts, stats)
+        (completions.iter().map(Engine::completion_text).collect(), stats)
     }
 
     /// One-line memory summary: packed vs fp16 linear bytes + KV arena.
@@ -166,6 +183,7 @@ mod tests {
             0,
         );
         assert_eq!(c[0].tokens.len(), 4);
+        assert_eq!(c[0].finish, FinishReason::MaxNew);
         let first = c[0].tokens[0];
         let (c2, _) = e.generate(
             vec![Request { id: 0, prompt: vec![10, 20, 30], max_new: 4, eos: Some(first) }],
@@ -173,6 +191,7 @@ mod tests {
             0,
         );
         assert_eq!(c2[0].tokens, vec![first], "eos must stop generation early");
+        assert_eq!(c2[0].finish, FinishReason::Eos);
     }
 
     #[test]
@@ -190,5 +209,6 @@ mod tests {
         // positions 0..seq-1 are steppable; the first two steps are pure
         // prefill, every later one samples -> seq - 2 generated tokens
         assert_eq!(c[0].tokens.len(), seq - 2, "must stop at the table edge");
+        assert_eq!(c[0].finish, FinishReason::PosCapacity, "truncation must be surfaced");
     }
 }

@@ -4,13 +4,19 @@
 //! and are evicted the step they finish — the batch composition changes
 //! every step, exactly like a multi-user serving loop. Prefill and decode
 //! are unified: an admitted sequence first streams its prompt tokens
-//! through [`decode::step`] (outputs ignored) one per scheduler tick, then
-//! switches to feeding back sampled tokens.
+//! through [`decode::step_select`] (outputs ignored) in chunks of up to
+//! [`SchedConfig::prefill_chunk`] tokens per scheduler tick, then switches
+//! to feeding back sampled tokens one per tick. A per-tick
+//! [`SchedConfig::token_budget`] caps the total rows pushed through the
+//! model in one step so a burst of long prompts cannot starve live decodes
+//! (every live sequence is still guaranteed at least one row per tick).
 //!
-//! Because the fused GEMM and attention are row-independent, a sequence's
-//! output stream does not depend on which other sequences share its steps —
-//! `rust/tests/engine.rs` asserts completions are identical for
-//! `max_batch = 1` and `max_batch = N`.
+//! Because the fused GEMM and attention are row-independent — and chunk
+//! rows replay the exact cache states token-at-a-time stepping produces —
+//! a sequence's greedy output stream depends on neither the batch
+//! composition nor the chunking: `rust/tests/engine.rs` asserts completions
+//! are identical for `max_batch = 1` vs `N` and for every prefill chunk
+//! size.
 
 use std::collections::VecDeque;
 
@@ -32,6 +38,30 @@ pub struct Request {
     pub eos: Option<i32>,
 }
 
+/// Why a sequence left the scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Produced its `eos` token (kept in the output).
+    Eos,
+    /// Hit its `max_new` generation budget.
+    MaxNew,
+    /// Evicted at the learned-positional-table edge. This can happen
+    /// mid-prefill, in which case `tokens` is empty — without this marker
+    /// such a truncation would be indistinguishable from a completion.
+    PosCapacity,
+}
+
+impl FinishReason {
+    /// Short human-readable label for CLI/exhibit output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::MaxNew => "max_new",
+            FinishReason::PosCapacity => "pos_capacity",
+        }
+    }
+}
+
 /// A finished request: the generated continuation (prompt excluded).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Completion {
@@ -40,6 +70,26 @@ pub struct Completion {
     pub tokens: Vec<i32>,
     /// Scheduler ticks this sequence was live for (prefill + decode).
     pub steps: usize,
+    /// Why the sequence stopped.
+    pub finish: FinishReason,
+}
+
+/// Scheduler tuning knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedConfig {
+    /// Maximum prompt tokens pushed through the model per sequence per
+    /// tick. `0` means "the whole remaining prompt in one chunk".
+    pub prefill_chunk: usize,
+    /// Per-tick cap on total rows (prompt + decode) across the batch;
+    /// every live sequence still gets at least one row per tick, so the
+    /// effective floor is the live-sequence count. `0` means unlimited.
+    pub token_budget: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> SchedConfig {
+        SchedConfig { prefill_chunk: 1, token_budget: 0 }
+    }
 }
 
 struct Active {
@@ -62,11 +112,17 @@ pub struct RunStats {
     pub tokens_processed: usize,
     /// Generated tokens only.
     pub tokens_generated: usize,
+    /// Peak rows in one step (prompt chunks count each of their rows).
     pub peak_batch: usize,
+    /// Ticks that stepped the model with a free slot while requests were
+    /// queued — admission failing to use freed capacity. Should be 0; a
+    /// regression test asserts it stays 0 across mid-tick evictions.
+    pub starved_ticks: usize,
 }
 
 pub struct Scheduler {
     max_batch: usize,
+    cfg: SchedConfig,
     pending: VecDeque<Request>,
     active: Vec<Option<Active>>,
     finished: Vec<Completion>,
@@ -75,9 +131,14 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(max_batch: usize) -> Scheduler {
+        Scheduler::with_config(max_batch, SchedConfig::default())
+    }
+
+    pub fn with_config(max_batch: usize, cfg: SchedConfig) -> Scheduler {
         assert!(max_batch > 0);
         Scheduler {
             max_batch,
+            cfg,
             pending: VecDeque::new(),
             active: (0..max_batch).map(|_| None).collect(),
             finished: Vec::new(),
@@ -93,6 +154,16 @@ impl Scheduler {
 
     pub fn has_work(&self) -> bool {
         !self.pending.is_empty() || self.active.iter().any(Option::is_some)
+    }
+
+    /// Queued (not yet admitted) request count.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Slots without a live sequence.
+    pub fn free_slots(&self) -> usize {
+        self.active.iter().filter(|a| a.is_none()).count()
     }
 
     /// Admit pending requests into free slots (resets their cache slots).
@@ -127,19 +198,21 @@ impl Scheduler {
     }
 
     /// Retire a live sequence into `finished` and free its slot.
-    fn finish(&mut self, slot: usize, cache: &mut KvCache) {
+    fn finish(&mut self, slot: usize, cache: &mut KvCache, finish: FinishReason) {
         let a = self.active[slot].take().expect("finish on empty slot");
         self.finished.push(Completion {
             id: a.req.id,
             prompt_len: a.req.prompt.len(),
             tokens: a.generated,
             steps: a.steps,
+            finish,
         });
         cache.reset(slot);
     }
 
-    /// One scheduler tick: admit, step every live sequence by one token,
-    /// sample/finish. Returns false when no work remains.
+    /// One scheduler tick: admit, push up to `token_budget` rows (decode
+    /// sequences one each, prefilling sequences a chunk each), sample and
+    /// finish. Returns false when no work remains.
     pub fn tick(
         &mut self,
         model: &PackedModel,
@@ -151,24 +224,56 @@ impl Scheduler {
         let hard_cap = Self::max_len(model);
         // evict sequences that cannot be stepped further (positional table
         // exhausted mid-prompt or mid-decode)
+        let mut evicted = false;
         for slot in 0..self.max_batch {
             if self.active[slot].as_ref().is_some_and(|a| a.pos >= hard_cap) {
-                self.finish(slot, cache);
+                self.finish(slot, cache, FinishReason::PosCapacity);
+                evicted = true;
             }
         }
+        // freed capacity must be usable the same tick — re-run admission
+        // after the eviction sweep instead of letting slots idle a step
+        if evicted {
+            self.admit(cache);
+        }
+        if !self.pending.is_empty() && self.active.iter().any(Option::is_none) {
+            self.stats.starved_ticks += 1;
+        }
+
+        let chunk = match self.cfg.prefill_chunk {
+            0 => usize::MAX,
+            c => c,
+        };
+        let mut budget_left = match self.cfg.token_budget {
+            0 => usize::MAX,
+            b => b,
+        };
         let mut batch: Vec<StepInput> = Vec::new();
-        let mut slots: Vec<usize> = Vec::new();
+        // (slot, index of the slot's last row in `batch`, rows this tick)
+        let mut groups: Vec<(usize, usize, usize)> = Vec::new();
         let mut needs: Vec<bool> = Vec::new();
         for a in self.active.iter().flatten() {
-            let token = if a.fed < a.req.prompt.len() {
-                a.req.prompt[a.fed]
+            let remaining_prompt = a.req.prompt.len() - a.fed;
+            let want = if remaining_prompt > 0 {
+                remaining_prompt.min(chunk).min(hard_cap - a.pos)
             } else {
-                a.last_sampled
+                1
             };
-            batch.push(StepInput { slot: a.slot, token, pos: a.pos });
-            slots.push(a.slot);
-            // mid-prefill rows discard their logits; skip the vocab head
-            needs.push(a.fed + 1 >= a.req.prompt.len());
+            // every live sequence gets at least one row, so a tight budget
+            // degrades to token-at-a-time rather than starving anyone
+            let n = want.min(budget_left.max(1));
+            budget_left = budget_left.saturating_sub(n);
+            for t in 0..n {
+                let token = if a.fed + t < a.req.prompt.len() {
+                    a.req.prompt[a.fed + t]
+                } else {
+                    a.last_sampled
+                };
+                batch.push(StepInput { slot: a.slot, token, pos: a.pos + t });
+                // mid-prefill rows discard their logits; skip the vocab head
+                needs.push(a.fed + t + 1 >= a.req.prompt.len());
+            }
+            groups.push((a.slot, batch.len() - 1, n));
         }
         if batch.is_empty() {
             return self.has_work();
@@ -179,35 +284,33 @@ impl Scheduler {
 
         let logits = decode::step_select(model, &batch, cache, Some(&needs));
 
-        for (row, slot) in slots.into_iter().enumerate() {
+        for (slot, last_row, n) in groups {
             let a = self.active[slot].as_mut().expect("active slot vanished");
             a.steps += 1;
-            a.pos += 1;
-            let mut done = false;
-            if a.fed < a.req.prompt.len() {
-                a.fed += 1;
-                if a.fed < a.req.prompt.len() {
-                    // still prefilling; ignore the logits
-                    continue;
-                }
+            let prompt_rows = n.min(a.req.prompt.len() - a.fed);
+            a.fed += prompt_rows;
+            a.pos += n;
+            if !needs[last_row] {
+                // still prefilling; no logits were produced for this chunk
+                continue;
             }
-            // the step consumed the last prompt token or a fed-back sample:
-            // this row's logits predict the next token
-            let tok = sample_row(logits.row(row), sampler, rng);
+            // the last row consumed the final prompt token or a fed-back
+            // sample: its logits predict the next token
+            let tok = sample_row(logits.row(last_row), sampler, rng);
             a.generated.push(tok);
             a.last_sampled = tok;
             self.stats.tokens_generated += 1;
-            if a.generated.len() >= a.req.max_new {
-                done = true;
-            }
-            if a.req.eos == Some(tok) {
-                done = true;
-            }
-            if a.pos >= hard_cap {
-                done = true;
-            }
-            if done {
-                self.finish(slot, cache);
+            let finish = if a.req.eos == Some(tok) {
+                Some(FinishReason::Eos)
+            } else if a.generated.len() >= a.req.max_new {
+                Some(FinishReason::MaxNew)
+            } else if a.pos >= hard_cap {
+                Some(FinishReason::PosCapacity)
+            } else {
+                None
+            };
+            if let Some(f) = finish {
+                self.finish(slot, cache, f);
             }
         }
         self.has_work()

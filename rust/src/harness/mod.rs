@@ -256,23 +256,33 @@ pub fn gradual_ablation(ctx: &mut Ctx, model: &str, config: &str, stem: &str) ->
 
 /// Packed-engine exhibit: parity of the host engine against the PJRT
 /// "merged serving" path (RTN fake-quant + `block_fp`), deployment memory
-/// vs fp16, and decode throughput — engine continuous batching vs the naive
-/// PJRT alternative (one full `(batch, seq)` forward per generated token,
-/// the only way to decode through the fixed-shape AOT graphs).
+/// vs fp16, decode throughput — engine continuous batching (chunked
+/// prefill, 16 prompt tokens per tick) vs the naive PJRT alternative (one
+/// full `(batch, seq)` forward per generated token, the only way to decode
+/// through the fixed-shape AOT graphs) — and time-to-first-token on a
+/// near-table-length prompt.
 pub fn engine_table(
     ctx: &mut Ctx,
     model: &str,
     configs: &[String],
     stem: &str,
 ) -> Result<Table> {
-    use crate::engine::{Engine, PackedModel, Request, Sampler};
+    use crate::engine::{Engine, PackedModel, Request, Sampler, SchedConfig};
     use crate::util::Timer;
 
     let (rt, fp) = ctx.model(model)?;
     let cfg = rt.cfg.clone();
+    let sched = SchedConfig { prefill_chunk: 16, token_budget: 0 };
     let mut t = Table::new(
         &format!("Packed engine — {model}"),
-        &["config", "hidden_maxdiff", "mem_vs_fp16", "engine_tok_s_b16", "pjrt_naive_tok_s"],
+        &[
+            "config",
+            "hidden_maxdiff",
+            "mem_vs_fp16",
+            "engine_tok_s_b16",
+            "ttft_ms",
+            "pjrt_naive_tok_s",
+        ],
     );
 
     // PJRT naive-decode baseline: a full (batch, seq) forward yields one
@@ -305,8 +315,8 @@ pub fn engine_table(
         }
         let mem_ratio = pm.fp16_linear_bytes() as f64 / pm.packed_bytes() as f64;
 
-        // engine throughput: 16 concurrent greedy decodes
-        let mut engine = Engine::new(pm, 16);
+        // engine throughput: 16 concurrent greedy decodes, chunked prefill
+        let mut engine = Engine::with_config(pm, 16, sched);
         let reqs: Vec<Request> = (0..16)
             .map(|i| Request {
                 id: i as u64,
@@ -319,11 +329,20 @@ pub fn engine_table(
         let (_, stats) = engine.generate(reqs, Sampler::Greedy, 0);
         let engine_tok_s = stats.tokens_processed as f64 / timer.secs();
 
+        // TTFT: one near-table-length prompt, chunked prefill, 1 new token
+        let ttft_prompt: Vec<i32> =
+            (0..cfg.seq.saturating_sub(16).max(8)).map(|i| ((i * 13 + 7) % 256) as i32).collect();
+        let ttft_req = vec![Request { id: 0, prompt: ttft_prompt, max_new: 1, eos: None }];
+        let timer = Timer::start();
+        let _ = engine.generate(ttft_req, Sampler::Greedy, 0);
+        let ttft_ms = timer.secs() * 1e3;
+
         t.row(vec![
             config.clone(),
             format!("{max_diff:.2e}"),
             format!("{mem_ratio:.2}x"),
             format!("{engine_tok_s:.0}"),
+            format!("{ttft_ms:.2}"),
             format!("{pjrt_tok_s:.1}"),
         ]);
         t.print_last();

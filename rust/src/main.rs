@@ -3,8 +3,13 @@
 //! Subcommands:
 //!   generate  --model NAME [--config w4a16g128] [--prompt "the "] [--n N]
 //!             [--max-new N] [--topk K] [--temp=T] [--batch B] [--seed S]
+//!             [--prefill-chunk N] [--token-budget N]
 //!             [--ckpt DIR] [--save-packed PATH | --load-packed PATH]
-//!             — packed-weight engine decode; pure host, no artifacts
+//!             — packed-weight engine decode; pure host, no artifacts.
+//!             `--prefill-chunk` (default 16, 0 = whole prompt) pushes that
+//!             many prompt tokens per scheduler tick; `--token-budget`
+//!             caps total rows per tick (0 = unlimited). Greedy output is
+//!             bit-identical for any setting.
 //!   train     --model NAME | --all  [--steps N] [--out DIR]      (pjrt)
 //!   quantize  --model NAME --method M --config w3a16g128 [--alpha A]
 //!   eval      --model NAME [--method M --config C] [--zeroshot]  (pjrt)
@@ -36,12 +41,16 @@ fn main() -> Result<()> {
 /// deterministic seeded init — so the command runs fully offline.
 fn cmd_generate(cli: &Cli) -> Result<()> {
     use affinequant::cli::parse_config;
-    use affinequant::engine::{Engine, Sampler};
+    use affinequant::engine::{Engine, Sampler, SchedConfig};
     use affinequant::model::zoo;
     use affinequant::util::{human_secs, Timer};
 
     let model = cli.str_or("model", "opt-s1");
     let max_batch = cli.usize_or("batch", 8);
+    let sched = SchedConfig {
+        prefill_chunk: cli.usize_or("prefill-chunk", 16),
+        token_budget: cli.usize_or("token-budget", 0),
+    };
     let mut engine = if let Some(path) = cli.get("load-packed") {
         Engine::load(path, max_batch)?
     } else {
@@ -58,11 +67,18 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
         }
         Engine::from_store(&ps, spec, max_batch)
     };
+    engine.sched = sched;
     if let Some(path) = cli.get("save-packed") {
         engine.model.save(path)?;
         eprintln!("[generate] saved packed model to {path}");
     }
     eprintln!("[generate] {}", engine.memory_report());
+    let show = |v: usize| if v == 0 { "unlimited".to_string() } else { v.to_string() };
+    eprintln!(
+        "[generate] prefill chunk {} tokens/tick, token budget {}",
+        show(engine.sched.prefill_chunk),
+        show(engine.sched.token_budget),
+    );
 
     let prompt = cli.str_or("prompt", "the ");
     let n = cli.usize_or("n", 1);
@@ -76,16 +92,13 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
     // distinct per-request suffixes so top-k runs diverge visibly
     let prompts: Vec<String> = (0..n).map(|i| format!("{prompt}{}", "and ".repeat(i % 3))).collect();
     let prefs: Vec<&str> = prompts.iter().map(|s| s.as_str()).collect();
+    let reqs = Engine::byte_requests(&prefs, max_new);
     let t = Timer::start();
-    let (texts, stats) = engine.generate_text(
-        &prefs,
-        max_new,
-        sampler,
-        cli.usize_or("seed", 1) as u64,
-    );
+    let (completions, stats) = engine.generate(reqs, sampler, cli.usize_or("seed", 1) as u64);
     let secs = t.secs();
-    for (p, out) in prefs.iter().zip(&texts) {
-        println!("{p}⟨{out}⟩");
+    for (p, c) in prefs.iter().zip(&completions) {
+        // completions come back sorted by id, i.e. prompt order
+        println!("{p}⟨{}⟩ [{}]", Engine::completion_text(c), c.finish.label());
     }
     eprintln!(
         "[generate] {} generated (+{} prefill) in {} — {:.1} tok/s throughput \

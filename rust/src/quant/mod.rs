@@ -62,6 +62,23 @@ pub struct GroupQ {
 fn cell_params(wmin: f32, wmax: f32, gamma: f32, beta: f32, qmax: f32) -> GroupQ {
     let cmax = sigmoid(gamma) * wmax;
     let cmin = sigmoid(beta) * wmin;
+    if cmax - cmin <= qmax * EPS {
+        // Degenerate (constant or fully-clipped) group: the generic formula
+        // would floor the scale at EPS and put the zero-point at
+        // `round(-cmin/EPS)` — far outside [0, qmax], so every code clamps
+        // and dequant destroys the group. Encode the *clipped* midpoint
+        // exactly instead: scale = |c| with the zero-point one code away,
+        // so `(q - zp) * scale == c` bit-for-bit. (Midpoint of [cmin, cmax]
+        // rather than [wmin, wmax], so LWC clipping is still honored; with
+        // no clipping the two coincide and a constant group roundtrips
+        // exactly.)
+        let c = 0.5 * (cmax + cmin);
+        if c == 0.0 {
+            return GroupQ { scale: EPS, zp: 0.0 };
+        }
+        let zp = if c > 0.0 { 0.0 } else { 1.0 };
+        return GroupQ { scale: c.abs(), zp };
+    }
     let scale = ((cmax - cmin) / qmax).max(EPS);
     let zp = (-cmin / scale).round();
     GroupQ { scale, zp }
@@ -273,6 +290,65 @@ mod tests {
         let (codes2, params2, _) = quantize_codes(&dq, spec, None);
         let dq2 = dequantize_codes(&codes2, &params2, &shape, spec);
         assert!(dq.mse(&dq2) < 1e-12);
+    }
+
+    #[test]
+    fn constant_groups_roundtrip_exactly() {
+        // all-zero, all-positive-equal, all-negative-equal weights: dequant
+        // must reproduce the constant bit-for-bit (regression: the EPS
+        // scale floor used to put the zero-point at ~1e8 and clamp every
+        // code to garbage)
+        for &c in &[0.0f32, 1.0, -1.0, 0.037, -2.5e-3, 1234.5] {
+            let w = Tensor::new(vec![64, 8], vec![c; 64 * 8]);
+            for (bits, group) in [(2u32, 0usize), (3, 32), (4, 16), (8, 64)] {
+                let spec = QuantSpec::new(bits, group);
+                let (codes, params, shape) = quantize_codes(&w, spec, None);
+                assert!(
+                    codes.iter().all(|&q| f32::from(q) <= spec.qmax()),
+                    "w{bits}g{group} c={c}: code out of range"
+                );
+                for p in &params {
+                    assert!(
+                        p.zp >= 0.0 && p.zp <= spec.qmax(),
+                        "w{bits}g{group} c={c}: zero-point {} outside [0, qmax]",
+                        p.zp
+                    );
+                }
+                let dq = dequantize_codes(&codes, &params, &shape, spec);
+                assert!(
+                    dq.data.iter().all(|&v| v == c),
+                    "w{bits}g{group}: constant {c} not reproduced, got {}",
+                    dq.data[0]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_constant_and_normal_groups() {
+        // one constant group amid random ones must not perturb the others
+        let mut w = rand_w(128, 16, 11);
+        for col in 0..16 {
+            for r in 0..32 {
+                w.data[r * 16 + col] = 0.25; // first g=32 group constant
+            }
+        }
+        let spec = QuantSpec::new(4, 32);
+        let (codes, params, shape) = quantize_codes(&w, spec, None);
+        let dq = dequantize_codes(&codes, &params, &shape, spec);
+        for col in 0..16 {
+            for r in 0..32 {
+                assert_eq!(dq.at2(r, col), 0.25, "constant group row {r} col {col}");
+            }
+        }
+        let g = spec.group_len(128);
+        for r in 32..128 {
+            for col in 0..16 {
+                let p = params[(r / g) * 16 + col];
+                let err = (dq.at2(r, col) - w.at2(r, col)).abs();
+                assert!(err <= p.scale / 2.0 + 1e-6, "row {r} col {col}: {err}");
+            }
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use affinequant::engine::decode::{self, argmax, Sampler, StepInput};
 use affinequant::engine::kv::KvCache;
 use affinequant::engine::packed::{PackedLinear, PackedModel};
-use affinequant::engine::{Engine, Request};
+use affinequant::engine::{Engine, FinishReason, Request, SchedConfig};
 use affinequant::model::zoo;
 use affinequant::prop_assert;
 use affinequant::proptestx::{Runner, Shrink};
@@ -188,6 +188,128 @@ fn completions_invariant_to_max_batch() {
         assert_eq!(a.id, b.id);
         assert_eq!(a.tokens, b.tokens, "request {} depends on batch composition", a.id);
     }
+}
+
+/// Chunked prefill — any chunk size, with or without a per-tick token
+/// budget — produces bit-identical greedy completions to token-at-a-time
+/// prefill, for both families, including prompts longer than the KV ring
+/// (chunks that wrap the ring mid-prefill).
+#[test]
+fn chunked_prefill_bit_identical_for_any_chunk_and_budget() {
+    for (name, spec, prompt_len) in [
+        ("opt-s1", QuantSpec::new(4, 128), 24usize),
+        ("ll-s1", QuantSpec::new(3, 64), 24),
+        // prompt longer than the KV ring capacity (128): prefill slides it
+        ("ll-s1", QuantSpec::new(4, 128), 200),
+    ] {
+        let ps = zoo::seeded_store(name, 42).unwrap();
+        let pm = PackedModel::from_store(&ps, spec);
+        let reqs: Vec<Request> = (0..3u64)
+            .map(|i| Request {
+                id: i,
+                prompt: test_tokens(prompt_len + 3 * i as usize),
+                max_new: 6,
+                eos: None,
+            })
+            .collect();
+        let run = |sched: SchedConfig| {
+            let mut e = Engine::with_config(pm.clone(), 2, sched);
+            e.generate(reqs.clone(), Sampler::Greedy, 0).0
+        };
+        let base = run(SchedConfig { prefill_chunk: 1, token_budget: 0 });
+        assert_eq!(base.len(), 3);
+        for sched in [
+            SchedConfig { prefill_chunk: 4, token_budget: 0 },
+            SchedConfig { prefill_chunk: 16, token_budget: 0 },
+            // 0 = the whole remaining prompt in one chunk
+            SchedConfig { prefill_chunk: 0, token_budget: 0 },
+            // tight budget: chunks are clipped but outputs must not change
+            SchedConfig { prefill_chunk: 16, token_budget: 8 },
+        ] {
+            let got = run(sched);
+            assert_eq!(base.len(), got.len());
+            for (a, b) in base.iter().zip(&got) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "{name} prompt_len={prompt_len} {sched:?}: chunking changed the output"
+                );
+                assert_eq!(a.finish, b.finish);
+            }
+        }
+    }
+}
+
+/// A slot freed by the positional-table eviction sweep must be refilled by
+/// a queued request in the *same* tick (regression: admission used to run
+/// only before the sweep, idling freed capacity for a full step).
+#[test]
+fn evicted_slot_is_refilled_the_same_tick() {
+    let ps = zoo::seeded_store("opt-s1", 42).unwrap();
+    let pm = PackedModel::from_store(&ps, QuantSpec::new(4, 128));
+    let seq = pm.cfg.seq;
+    let sched = SchedConfig { prefill_chunk: 16, token_budget: 0 };
+    let mut e = Engine::with_config(pm, 2, sched);
+    let reqs = vec![
+        // overruns the positional table -> evicted mid-prefill by the sweep
+        Request { id: 0, prompt: test_tokens(seq + 12), max_new: 4, eos: None },
+        // keeps the other slot busy while the eviction happens
+        Request { id: 1, prompt: test_tokens(4), max_new: 60, eos: None },
+        // queued behind both; must enter the freed slot the tick it frees
+        Request { id: 2, prompt: test_tokens(5), max_new: 4, eos: None },
+    ];
+    let (c, stats) = e.generate(reqs, Sampler::Greedy, 0);
+    assert_eq!(
+        stats.starved_ticks, 0,
+        "a slot idled for a tick while requests were queued"
+    );
+    assert_eq!(c.len(), 3);
+    // the truncated sequence is flagged, not passed off as a completion
+    assert_eq!(c[0].finish, FinishReason::PosCapacity);
+    assert!(c[0].tokens.is_empty(), "mid-prefill eviction generates nothing");
+    assert_eq!(c[0].prompt_len, seq + 12);
+    assert_eq!(c[1].tokens.len(), 60);
+    assert_eq!(c[1].finish, FinishReason::MaxNew);
+    assert_eq!(c[2].tokens.len(), 4);
+    assert_eq!(c[2].finish, FinishReason::MaxNew);
+}
+
+/// Decoding through a small KV ring far past its capacity is bit-identical
+/// to an independent sliding-window reference forward (flat arena, window
+/// masks) — the ring's eviction path checked from outside `kv.rs`.
+#[test]
+fn ring_eviction_matches_sliding_window_reference() {
+    let ps = zoo::seeded_store("ll-s1", 42).unwrap();
+    let pm = PackedModel::from_store(&ps, QuantSpec::new(4, 64));
+    let cfg = pm.cfg.clone();
+    let window = 16usize;
+    let prompt = test_tokens(8);
+    let steps = 40usize; // decode to 3x the ring capacity
+
+    let mut cache = KvCache::new(1, cfg.n_layers, window, cfg.d_model);
+    let mut last = decode::step(
+        &pm,
+        &[StepInput { slot: 0, token: prompt[0], pos: 0 }],
+        &mut cache,
+    );
+    for (i, &tok) in prompt.iter().enumerate().skip(1) {
+        last = decode::step(&pm, &[StepInput { slot: 0, token: tok, pos: i }], &mut cache);
+    }
+    let mut seq = prompt.clone();
+    for step_i in 0..steps {
+        let reference = decode::forward_window(&pm, &seq, window);
+        assert_eq!(
+            last.row(0),
+            reference.row(seq.len() - 1),
+            "step {step_i}: ring logits diverge from the sliding-window reference"
+        );
+        let tok = argmax(last.row(0));
+        assert_eq!(tok, argmax(reference.row(seq.len() - 1)));
+        let pos = seq.len();
+        seq.push(tok);
+        last = decode::step(&pm, &[StepInput { slot: 0, token: tok, pos }], &mut cache);
+    }
+    assert!(seq.len() > window + prompt.len(), "test must actually wrap the ring");
 }
 
 /// RoPE models keep decoding past the cache capacity via the sliding ring.

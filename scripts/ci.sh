@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI gate: formatting + the offline-safe (no-XLA) build and test paths.
+# CI gate: formatting, clippy lints, + the offline-safe (no-XLA) build and
+# test paths.
 #
 # The default feature set (`pjrt`) needs the vendored xla crate closure and
 # the AOT artifacts; this script enforces that the pure-host subset — the
@@ -17,6 +18,9 @@ cd "$(dirname "$0")/.."
 
 echo "== cargo fmt --check"
 cargo fmt --check
+
+echo "== cargo clippy --no-default-features -- -D warnings"
+cargo clippy --no-default-features -- -D warnings
 
 echo "== cargo build --release --no-default-features"
 cargo build --release --no-default-features
