@@ -97,7 +97,7 @@ fn main() -> Result<()> {
     let prompts = ["the bani ", "a fel of the ", "the masi sotos "];
     let gen_t = Timer::start();
     let (texts, stats) =
-        engine.generate_text(&prompts, 32, affinequant::engine::Sampler::Greedy, 0);
+        engine.generate_text(&prompts, 32, affinequant::engine::Sampler::Greedy, 0)?;
     for (p, o) in prompts.iter().zip(&texts) {
         println!("  {p}⟨{o}⟩");
     }

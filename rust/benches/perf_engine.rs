@@ -18,13 +18,22 @@ use affinequant::benchx::{bench, Table};
 use affinequant::engine::gemm::{packed_gemm, packed_matvec_grouped, PackedWeight};
 use affinequant::engine::packed::PackedLinear;
 use affinequant::engine::{Engine, Request, Sampler, SchedConfig};
+use affinequant::jsonx::{self, Value};
 use affinequant::model::zoo;
 use affinequant::quant::{quant_dequant, QuantSpec};
-use affinequant::report::save_table;
+use affinequant::report::{save_json, save_table};
 use affinequant::rngx::Pcg32;
 use affinequant::tensor::Tensor;
 
+/// The perf-trajectory snapshot this bench persists (`BENCH_6.json`): the
+/// ROADMAP asks every PR to leave a machine-readable record so the next
+/// re-anchor can see regressions, not just today's stdout.
+const BENCH_JSON: &str = "BENCH_6.json";
+
 fn main() -> anyhow::Result<()> {
+    let mut json_gemm: Vec<Value> = Vec::new();
+    let mut json_decode: Vec<Value> = Vec::new();
+    let mut json_ttft: Vec<Value> = Vec::new();
     let mut rng = Pcg32::seeded(1);
     let (din, dout) = (1024usize, 1024usize);
     let w = Tensor::randn(&[din, dout], 0.02, &mut rng);
@@ -62,6 +71,14 @@ fn main() -> anyhow::Result<()> {
             if label == "w4g128" && m == 16 {
                 w4b16_speedup = speedup;
             }
+            json_gemm.push(jsonx::obj(vec![
+                ("config", jsonx::s(label)),
+                ("batch", jsonx::num(m as f64)),
+                ("fakequant_ms", jsonx::num(r_fq.median_s * 1e3)),
+                ("dense_ms", jsonx::num(r_dense.median_s * 1e3)),
+                ("packed_ms", jsonx::num(r_packed.median_s * 1e3)),
+                ("speedup_vs_fq", jsonx::num(speedup)),
+            ]));
             t.row(vec![
                 label.to_string(),
                 m.to_string(),
@@ -121,8 +138,14 @@ fn main() -> anyhow::Result<()> {
             })
             .collect();
         let timer = affinequant::util::Timer::start();
-        let (_, stats) = engine.generate(reqs, Sampler::Greedy, 0);
+        let (_, stats) = engine.generate(reqs, Sampler::Greedy, 0)?;
         let secs = timer.secs();
+        json_decode.push(jsonx::obj(vec![
+            ("batch", jsonx::num(batch as f64)),
+            ("tok_s", jsonx::num(stats.tokens_processed as f64 / secs)),
+            ("scheduler_steps", jsonx::num(stats.scheduler_steps as f64)),
+            ("kv_mb", jsonx::num(engine.kv_bytes() as f64 / 1e6)),
+        ]));
         dt.row(vec![
             batch.to_string(),
             format!("{:.0}", stats.tokens_processed as f64 / secs),
@@ -148,13 +171,13 @@ fn main() -> anyhow::Result<()> {
     let mut ttft_chunk1 = 0.0f64;
     let mut ttft_chunk16 = 0.0f64;
     for chunk in [1usize, 4, 16, 64, 0] {
-        let sched = SchedConfig { prefill_chunk: chunk, token_budget: 0 };
+        let sched = SchedConfig { prefill_chunk: chunk, ..SchedConfig::default() };
         let mut engine = Engine::with_config(pm_ll.clone(), 1, sched);
         let label = if chunk == 0 { "full".to_string() } else { chunk.to_string() };
         let r = bench(&format!("ttft chunk {label}"), 1, 5, || {
             let reqs =
                 vec![Request { id: 0, prompt: long_prompt.clone(), max_new: 1, eos: None }];
-            let (c, _) = engine.generate(reqs, Sampler::Greedy, 0);
+            let (c, _) = engine.generate(reqs, Sampler::Greedy, 0).expect("bench request");
             std::hint::black_box(c);
         });
         if chunk == 1 {
@@ -164,6 +187,11 @@ fn main() -> anyhow::Result<()> {
             ttft_chunk16 = r.median_s;
         }
         let speedup = if chunk == 1 { 1.0 } else { ttft_chunk1 / r.median_s };
+        json_ttft.push(jsonx::obj(vec![
+            ("prefill_chunk", jsonx::num(chunk as f64)),
+            ("ttft_ms", jsonx::num(r.median_s * 1e3)),
+            ("speedup_vs_chunk1", jsonx::num(speedup)),
+        ]));
         tt.row(vec![
             label,
             format!("{:.3}", r.median_s * 1e3),
@@ -182,6 +210,18 @@ fn main() -> anyhow::Result<()> {
     save_table(&t, "perf_engine_gemm")?;
     save_table(&dt, "perf_engine_decode")?;
     save_table(&tt, "perf_engine_ttft")?;
+    save_json(
+        BENCH_JSON,
+        &jsonx::obj(vec![
+            ("pr", jsonx::num(6.0)),
+            ("bench", jsonx::s("perf_engine")),
+            ("threads", jsonx::num(std::thread::available_parallelism()?.get() as f64)),
+            ("gemm_1024x1024", Value::Arr(json_gemm)),
+            ("decode_opt_s2_w4g128", Value::Arr(json_decode)),
+            ("ttft_ll_s1_256tok_w4g128", Value::Arr(json_ttft)),
+            ("w4g128_b16_speedup_vs_fakequant", jsonx::num(w4b16_speedup)),
+        ]),
+    )?;
 
     // PJRT comparison when the artifacts exist (skipped silently otherwise)
     #[cfg(feature = "pjrt")]

@@ -32,7 +32,9 @@ use crate::rngx::Pcg32;
 
 pub use decode::{forward_full, forward_window, hidden_full, Sampler};
 pub use packed::{PackedLinear, PackedModel};
-pub use sched::{Completion, FinishReason, Request, RunStats, SchedConfig, Scheduler};
+pub use sched::{
+    Completion, FinishReason, Request, RunStats, SchedConfig, Scheduler, SubmitError,
+};
 
 use kv::KvCache;
 
@@ -85,20 +87,30 @@ impl Engine {
     /// Serve a batch of requests to completion with continuous batching.
     /// Deterministic for a fixed `(requests, sampler, seed, sched)`; greedy
     /// sampling is additionally independent of `max_batch`, the prefill
-    /// chunk size, and the token budget.
+    /// chunk size, and the token budget. Fails (instead of panicking) on a
+    /// malformed request — empty prompt, `max_new == 0` — or a queue cap
+    /// overflow, so callers holding user input can map errors to HTTP 4xx.
     pub fn generate(
         &mut self,
         requests: Vec<Request>,
         sampler: Sampler,
         seed: u64,
-    ) -> (Vec<Completion>, RunStats) {
+    ) -> Result<(Vec<Completion>, RunStats)> {
         let mut sched = Scheduler::with_config(self.max_batch, self.sched);
         for r in requests {
-            sched.submit(r);
+            let id = r.id;
+            sched.submit(r).map_err(|e| anyhow::anyhow!("request {id}: {e}"))?;
         }
         let mut rng = Pcg32::seeded(seed);
         let out = sched.run(&self.model, &mut self.cache, sampler, &mut rng);
-        (out, sched.stats)
+        Ok((out, sched.stats))
+    }
+
+    /// Split-borrow the model and KV arena — the serving loop drives its
+    /// own long-lived [`Scheduler`] session over them (streaming tokens
+    /// between ticks) instead of the run-to-completion `generate` path.
+    pub fn parts(&mut self) -> (&PackedModel, &mut KvCache) {
+        (&self.model, &mut self.cache)
     }
 
     /// Byte-level requests, one per prompt, ids in prompt order — the
@@ -131,10 +143,10 @@ impl Engine {
         max_new: usize,
         sampler: Sampler,
         seed: u64,
-    ) -> (Vec<String>, RunStats) {
+    ) -> Result<(Vec<String>, RunStats)> {
         let reqs = Engine::byte_requests(prompts, max_new);
-        let (completions, stats) = self.generate(reqs, sampler, seed);
-        (completions.iter().map(Engine::completion_text).collect(), stats)
+        let (completions, stats) = self.generate(reqs, sampler, seed)?;
+        Ok((completions.iter().map(Engine::completion_text).collect(), stats))
     }
 
     /// One-line memory summary: packed vs fp16 linear bytes + KV arena.
@@ -163,8 +175,8 @@ mod tests {
         let ps = zoo::seeded_store("opt-s1", 42).unwrap();
         let mut e1 = Engine::from_store(&ps, QuantSpec::new(4, 128), 4);
         let mut e2 = Engine::from_store(&ps, QuantSpec::new(4, 128), 4);
-        let (t1, s1) = e1.generate_text(&["the bani ", "a masi "], 8, Sampler::Greedy, 1);
-        let (t2, _) = e2.generate_text(&["the bani ", "a masi "], 8, Sampler::Greedy, 1);
+        let (t1, s1) = e1.generate_text(&["the bani ", "a masi "], 8, Sampler::Greedy, 1).unwrap();
+        let (t2, _) = e2.generate_text(&["the bani ", "a masi "], 8, Sampler::Greedy, 1).unwrap();
         assert_eq!(t1, t2);
         assert_eq!(t1.len(), 2);
         // count tokens, not String bytes — non-ASCII byte-tokens widen lossily
@@ -177,19 +189,23 @@ mod tests {
         let ps = zoo::seeded_store("ll-s1", 42).unwrap();
         let mut e = Engine::from_store(&ps, QuantSpec::new(4, 64), 2);
         // find what greedy produces first, then use it as eos
-        let (c, _) = e.generate(
-            vec![Request { id: 0, prompt: vec![10, 20, 30], max_new: 4, eos: None }],
-            Sampler::Greedy,
-            0,
-        );
+        let (c, _) = e
+            .generate(
+                vec![Request { id: 0, prompt: vec![10, 20, 30], max_new: 4, eos: None }],
+                Sampler::Greedy,
+                0,
+            )
+            .unwrap();
         assert_eq!(c[0].tokens.len(), 4);
         assert_eq!(c[0].finish, FinishReason::MaxNew);
         let first = c[0].tokens[0];
-        let (c2, _) = e.generate(
-            vec![Request { id: 0, prompt: vec![10, 20, 30], max_new: 4, eos: Some(first) }],
-            Sampler::Greedy,
-            0,
-        );
+        let (c2, _) = e
+            .generate(
+                vec![Request { id: 0, prompt: vec![10, 20, 30], max_new: 4, eos: Some(first) }],
+                Sampler::Greedy,
+                0,
+            )
+            .unwrap();
         assert_eq!(c2[0].tokens, vec![first], "eos must stop generation early");
         assert_eq!(c2[0].finish, FinishReason::Eos);
     }
@@ -200,11 +216,13 @@ mod tests {
         let mut e = Engine::from_store(&ps, QuantSpec::new(4, 128), 1);
         let seq = e.model.cfg.seq;
         // ask for more tokens than the positional table allows
-        let (c, _) = e.generate(
-            vec![Request { id: 7, prompt: vec![1, 2, 3], max_new: seq * 2, eos: None }],
-            Sampler::Greedy,
-            0,
-        );
+        let (c, _) = e
+            .generate(
+                vec![Request { id: 7, prompt: vec![1, 2, 3], max_new: seq * 2, eos: None }],
+                Sampler::Greedy,
+                0,
+            )
+            .unwrap();
         assert_eq!(c.len(), 1);
         // positions 0..seq-1 are steppable; the first two steps are pure
         // prefill, every later one samples -> seq - 2 generated tokens

@@ -19,6 +19,7 @@
 //! size.
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
 use crate::rngx::Pcg32;
 
@@ -49,6 +50,10 @@ pub enum FinishReason {
     /// mid-prefill, in which case `tokens` is empty — without this marker
     /// such a truncation would be indistinguishable from a completion.
     PosCapacity,
+    /// Evicted because its deadline passed — while queued (no tokens) or
+    /// mid-generation (partial tokens). The serving front-end maps this to
+    /// a timeout status instead of passing the truncation off as done.
+    Deadline,
 }
 
 impl FinishReason {
@@ -58,9 +63,36 @@ impl FinishReason {
             FinishReason::Eos => "eos",
             FinishReason::MaxNew => "max_new",
             FinishReason::PosCapacity => "pos_capacity",
+            FinishReason::Deadline => "deadline",
         }
     }
 }
+
+/// Why [`Scheduler::submit`] refused a request. Malformed requests used to
+/// be `assert!`s — fatal for a serving process, where a bad network payload
+/// must become HTTP 400/429, not a panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The prompt has no tokens.
+    EmptyPrompt,
+    /// `max_new == 0`: the request could never produce anything.
+    ZeroMaxNew,
+    /// The pending queue is at [`SchedConfig::queue_cap`]; the caller
+    /// should shed load (HTTP 429) rather than queue unboundedly.
+    QueueFull { cap: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::EmptyPrompt => write!(f, "empty prompt"),
+            SubmitError::ZeroMaxNew => write!(f, "max_new must be at least 1"),
+            SubmitError::QueueFull { cap } => write!(f, "pending queue full (cap {cap})"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// A finished request: the generated continuation (prompt excluded).
 #[derive(Clone, Debug, PartialEq)]
@@ -84,12 +116,23 @@ pub struct SchedConfig {
     /// every live sequence still gets at least one row per tick, so the
     /// effective floor is the live-sequence count. `0` means unlimited.
     pub token_budget: usize,
+    /// Hard cap on the pending (admitted-to-queue, not yet slotted)
+    /// request count: `submit` returns [`SubmitError::QueueFull`] beyond
+    /// it, so the deque can never grow unboundedly under overload.
+    /// `0` means unbounded (the offline `generate` path).
+    pub queue_cap: usize,
 }
 
 impl Default for SchedConfig {
     fn default() -> SchedConfig {
-        SchedConfig { prefill_chunk: 1, token_budget: 0 }
+        SchedConfig { prefill_chunk: 1, token_budget: 0, queue_cap: 0 }
     }
+}
+
+/// A queued request plus its serving metadata.
+struct Pending {
+    req: Request,
+    deadline: Option<Instant>,
 }
 
 struct Active {
@@ -102,6 +145,8 @@ struct Active {
     generated: Vec<i32>,
     last_sampled: i32,
     steps: usize,
+    /// Wall-clock eviction point (serving requests only).
+    deadline: Option<Instant>,
 }
 
 /// Aggregate serving statistics for one `run`.
@@ -118,14 +163,27 @@ pub struct RunStats {
     /// queued — admission failing to use freed capacity. Should be 0; a
     /// regression test asserts it stays 0 across mid-tick evictions.
     pub starved_ticks: usize,
+    /// Requests refused at submit because the pending queue was at
+    /// [`SchedConfig::queue_cap`] — each one is an HTTP 429 upstream.
+    pub shed_requests: usize,
+    /// Sequences evicted (queued or live) because their deadline passed.
+    pub deadline_evictions: usize,
+    /// Sequences dropped via [`Scheduler::cancel`] — e.g. the client
+    /// disconnected mid-stream, so the slot was reclaimed with no
+    /// completion to deliver.
+    pub cancelled: usize,
 }
 
 pub struct Scheduler {
     max_batch: usize,
     cfg: SchedConfig,
-    pending: VecDeque<Request>,
+    pending: VecDeque<Pending>,
     active: Vec<Option<Active>>,
     finished: Vec<Completion>,
+    /// `(request id, token)` pairs sampled by the most recent `tick` —
+    /// the incremental stream a serving front-end forwards to clients.
+    /// Cleared at the start of every tick.
+    emitted: Vec<(u64, i32)>,
     pub stats: RunStats,
 }
 
@@ -142,14 +200,37 @@ impl Scheduler {
             pending: VecDeque::new(),
             active: (0..max_batch).map(|_| None).collect(),
             finished: Vec::new(),
+            emitted: Vec::new(),
             stats: RunStats::default(),
         }
     }
 
-    pub fn submit(&mut self, req: Request) {
-        assert!(!req.prompt.is_empty(), "request {} has an empty prompt", req.id);
-        assert!(req.max_new > 0, "request {} asks for zero tokens", req.id);
-        self.pending.push_back(req);
+    /// Queue a request. Refuses (instead of panicking) on malformed input
+    /// or a full queue — a serving process must survive bad payloads.
+    pub fn submit(&mut self, req: Request) -> Result<(), SubmitError> {
+        self.submit_at(req, None)
+    }
+
+    /// [`submit`](Scheduler::submit) with a wall-clock deadline: past it
+    /// the sequence is evicted (queued or mid-generation) with
+    /// [`FinishReason::Deadline`].
+    pub fn submit_at(
+        &mut self,
+        req: Request,
+        deadline: Option<Instant>,
+    ) -> Result<(), SubmitError> {
+        if req.prompt.is_empty() {
+            return Err(SubmitError::EmptyPrompt);
+        }
+        if req.max_new == 0 {
+            return Err(SubmitError::ZeroMaxNew);
+        }
+        if self.cfg.queue_cap > 0 && self.pending.len() >= self.cfg.queue_cap {
+            self.stats.shed_requests += 1;
+            return Err(SubmitError::QueueFull { cap: self.cfg.queue_cap });
+        }
+        self.pending.push_back(Pending { req, deadline });
+        Ok(())
     }
 
     pub fn has_work(&self) -> bool {
@@ -161,9 +242,81 @@ impl Scheduler {
         self.pending.len()
     }
 
+    /// Live (slotted) sequence count.
+    pub fn active_len(&self) -> usize {
+        self.active.iter().filter(|a| a.is_some()).count()
+    }
+
     /// Slots without a live sequence.
     pub fn free_slots(&self) -> usize {
         self.active.iter().filter(|a| a.is_none()).count()
+    }
+
+    /// `(request id, token)` pairs sampled by the most recent
+    /// [`tick`](Scheduler::tick) — the per-tick stream a serving layer
+    /// forwards to clients while sequences are still running.
+    pub fn emitted(&self) -> &[(u64, i32)] {
+        &self.emitted
+    }
+
+    /// Drain completions finished so far (any order); lets a serving loop
+    /// deliver results incrementally instead of waiting for
+    /// [`run`](Scheduler::run) to return.
+    pub fn take_finished(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Evict every sequence — queued or live — whose deadline is at or
+    /// before `now`, finishing it with [`FinishReason::Deadline`].
+    /// `tick` calls this automatically; it is public so serving loops and
+    /// tests can drive it with an explicit clock (deterministically).
+    pub fn evict_expired(&mut self, now: Instant, cache: &mut KvCache) {
+        for slot in 0..self.max_batch {
+            let expired = self.active[slot]
+                .as_ref()
+                .is_some_and(|a| a.deadline.is_some_and(|d| d <= now));
+            if expired {
+                self.finish(slot, cache, FinishReason::Deadline);
+                self.stats.deadline_evictions += 1;
+            }
+        }
+        // expired queue entries finish without ever touching a slot
+        let mut kept = VecDeque::with_capacity(self.pending.len());
+        for p in self.pending.drain(..) {
+            if p.deadline.is_some_and(|d| d <= now) {
+                self.finished.push(Completion {
+                    id: p.req.id,
+                    prompt_len: p.req.prompt.len(),
+                    tokens: Vec::new(),
+                    steps: 0,
+                    finish: FinishReason::Deadline,
+                });
+                self.stats.deadline_evictions += 1;
+            } else {
+                kept.push_back(p);
+            }
+        }
+        self.pending = kept;
+    }
+
+    /// Drop a request (queued or live) without producing a completion —
+    /// the disconnect path: the client is gone, so the slot is reclaimed
+    /// and there is nobody to deliver to. Returns whether `id` was found.
+    pub fn cancel(&mut self, id: u64, cache: &mut KvCache) -> bool {
+        for slot in 0..self.max_batch {
+            if self.active[slot].as_ref().is_some_and(|a| a.req.id == id) {
+                self.active[slot] = None;
+                cache.reset(slot);
+                self.stats.cancelled += 1;
+                return true;
+            }
+        }
+        if let Some(i) = self.pending.iter().position(|p| p.req.id == id) {
+            self.pending.remove(i);
+            self.stats.cancelled += 1;
+            return true;
+        }
+        false
     }
 
     /// Admit pending requests into free slots (resets their cache slots).
@@ -172,16 +325,17 @@ impl Scheduler {
             if self.active[slot].is_some() {
                 continue;
             }
-            let Some(req) = self.pending.pop_front() else { break };
+            let Some(p) = self.pending.pop_front() else { break };
             cache.reset(slot);
             self.active[slot] = Some(Active {
-                req,
+                req: p.req,
                 slot,
                 fed: 0,
                 pos: 0,
                 generated: Vec::new(),
                 last_sampled: 0,
                 steps: 0,
+                deadline: p.deadline,
             });
         }
     }
@@ -220,6 +374,15 @@ impl Scheduler {
         sampler: Sampler,
         rng: &mut Pcg32,
     ) -> bool {
+        self.emitted.clear();
+        // deadline sweep first, so an expired sequence never costs a step;
+        // the clock is only read when a deadline actually exists, keeping
+        // the offline `generate` path free of wall-clock dependence
+        let any_deadline = self.active.iter().flatten().any(|a| a.deadline.is_some())
+            || self.pending.iter().any(|p| p.deadline.is_some());
+        if any_deadline {
+            self.evict_expired(Instant::now(), cache);
+        }
         self.admit(cache);
         let hard_cap = Self::max_len(model);
         // evict sequences that cannot be stepped further (positional table
@@ -299,6 +462,7 @@ impl Scheduler {
             let tok = sample_row(logits.row(last_row), sampler, rng);
             a.generated.push(tok);
             a.last_sampled = tok;
+            self.emitted.push((a.req.id, tok));
             self.stats.tokens_generated += 1;
             let finish = if a.req.eos == Some(tok) {
                 Some(FinishReason::Eos)

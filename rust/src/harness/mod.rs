@@ -272,7 +272,7 @@ pub fn engine_table(
 
     let (rt, fp) = ctx.model(model)?;
     let cfg = rt.cfg.clone();
-    let sched = SchedConfig { prefill_chunk: 16, token_budget: 0 };
+    let sched = SchedConfig { prefill_chunk: 16, ..SchedConfig::default() };
     let mut t = Table::new(
         &format!("Packed engine — {model}"),
         &[
@@ -282,6 +282,9 @@ pub fn engine_table(
             "engine_tok_s_b16",
             "ttft_ms",
             "pjrt_naive_tok_s",
+            "shed",
+            "deadline_evict",
+            "starved_ticks",
         ],
     );
 
@@ -326,7 +329,7 @@ pub fn engine_table(
             })
             .collect();
         let timer = Timer::start();
-        let (_, stats) = engine.generate(reqs, Sampler::Greedy, 0);
+        let (_, stats) = engine.generate(reqs, Sampler::Greedy, 0)?;
         let engine_tok_s = stats.tokens_processed as f64 / timer.secs();
 
         // TTFT: one near-table-length prompt, chunked prefill, 1 new token
@@ -334,7 +337,7 @@ pub fn engine_table(
             (0..cfg.seq.saturating_sub(16).max(8)).map(|i| ((i * 13 + 7) % 256) as i32).collect();
         let ttft_req = vec![Request { id: 0, prompt: ttft_prompt, max_new: 1, eos: None }];
         let timer = Timer::start();
-        let _ = engine.generate(ttft_req, Sampler::Greedy, 0);
+        let _ = engine.generate(ttft_req, Sampler::Greedy, 0)?;
         let ttft_ms = timer.secs() * 1e3;
 
         t.row(vec![
@@ -344,6 +347,12 @@ pub fn engine_table(
             format!("{engine_tok_s:.0}"),
             format!("{ttft_ms:.2}"),
             format!("{pjrt_tok_s:.1}"),
+            // robustness counters: zero offline, but the serving front-end
+            // feeds the same RunStats — keeping the columns here makes a
+            // nonzero value under `generate` an immediate red flag
+            stats.shed_requests.to_string(),
+            stats.deadline_evictions.to_string(),
+            stats.starved_ticks.to_string(),
         ]);
         t.print_last();
     }

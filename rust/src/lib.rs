@@ -21,7 +21,10 @@
 //! continuous-batching scheduler — no XLA, no artifacts. It demonstrates
 //! the memory/throughput win the paper's "no inference overhead" merge
 //! promises, and is the only subsystem available when the crate is built
-//! with `--no-default-features` (no `pjrt`).
+//! with `--no-default-features` (no `pjrt`). [`server`] puts an
+//! overload-safe HTTP front door on it: bounded admission (429 +
+//! `Retry-After`), per-request deadlines, per-client caps, token
+//! streaming, and graceful drain — `affinequant serve`.
 //!
 //! Substrate modules (`jsonx`, `rngx`, `tensor`, `linalg`, `quant`, `data`,
 //! `benchx`, `proptestx`) are implemented from scratch: the offline build
@@ -45,6 +48,7 @@ pub mod proptestx;
 pub mod quant;
 pub mod report;
 pub mod rngx;
+pub mod server;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod tensor;

@@ -10,6 +10,18 @@
 //!             many prompt tokens per scheduler tick; `--token-budget`
 //!             caps total rows per tick (0 = unlimited). Greedy output is
 //!             bit-identical for any setting.
+//!   serve     --model NAME [--config C] [--addr 127.0.0.1] [--port 8080]
+//!             [--batch B] [--queue-cap N] [--client-cap N] [--workers N]
+//!             [--deadline-ms D] [--max-new N] [--prefill-chunk N]
+//!             [--token-budget N] [--ckpt DIR] [--load-packed PATH]
+//!             [--fault-tick-ms N] [--fault-admit-ms N]
+//!             [--fault-drop-after N]
+//!             — overload-safe HTTP serving over the packed engine:
+//!             POST /v1/completions (OpenAI-style, `"stream": true` for
+//!             SSE), GET /healthz, GET /v1/stats, POST /admin/shutdown.
+//!             Sheds load with 429 + Retry-After past the queue cap,
+//!             evicts expired requests (504/`deadline`), drains
+//!             gracefully on SIGTERM. Pure host, no artifacts.
 //!   train     --model NAME | --all  [--steps N] [--out DIR]      (pjrt)
 //!   quantize  --model NAME --method M --config w3a16g128 [--alpha A]
 //!   eval      --model NAME [--method M --config C] [--zeroshot]  (pjrt)
@@ -26,31 +38,30 @@ fn main() -> Result<()> {
     let cli = match Cli::from_env() {
         Ok(c) => c,
         Err(_) => {
-            eprintln!("usage: affinequant <generate|train|quantize|eval|info> [--options]");
+            eprintln!("usage: affinequant <generate|serve|train|quantize|eval|info> [--options]");
             std::process::exit(2);
         }
     };
     if cli.cmd == "generate" {
         return cmd_generate(&cli);
     }
+    if cli.cmd == "serve" {
+        return cmd_serve(&cli);
+    }
     pjrt_main(cli)
 }
 
-/// Packed-engine decode. Uses a trained checkpoint when one exists under
-/// `--ckpt` (same `.aqck` files the PJRT trainer writes), otherwise a
-/// deterministic seeded init — so the command runs fully offline.
-fn cmd_generate(cli: &Cli) -> Result<()> {
+/// Build the packed serving engine a pure-host subcommand drives. Uses a
+/// trained checkpoint when one exists under `--ckpt` (same `.aqck` files
+/// the PJRT trainer writes), otherwise a deterministic seeded init — so
+/// `generate` and `serve` run fully offline.
+fn build_engine(cli: &Cli, tag: &str) -> Result<affinequant::engine::Engine> {
     use affinequant::cli::parse_config;
-    use affinequant::engine::{Engine, Sampler, SchedConfig};
+    use affinequant::engine::{Engine, SchedConfig};
     use affinequant::model::zoo;
-    use affinequant::util::{human_secs, Timer};
 
     let model = cli.str_or("model", "opt-s1");
     let max_batch = cli.usize_or("batch", 8);
-    let sched = SchedConfig {
-        prefill_chunk: cli.usize_or("prefill-chunk", 16),
-        token_budget: cli.usize_or("token-budget", 0),
-    };
     let mut engine = if let Some(path) = cli.get("load-packed") {
         Engine::load(path, max_batch)?
     } else {
@@ -60,14 +71,27 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
         let ckpt = format!("{}/{model}.aqck", cli.str_or("ckpt", "checkpoints"));
         if std::path::Path::new(&ckpt).exists() {
             ps.load_into(&ckpt)?;
-            eprintln!("[generate] loaded checkpoint {ckpt}");
+            eprintln!("[{tag}] loaded checkpoint {ckpt}");
         } else {
             ps.init(cli.usize_or("init-seed", 42) as u64);
-            eprintln!("[generate] no checkpoint at {ckpt}; using seeded init");
+            eprintln!("[{tag}] no checkpoint at {ckpt}; using seeded init");
         }
         Engine::from_store(&ps, spec, max_batch)
     };
-    engine.sched = sched;
+    engine.sched = SchedConfig {
+        prefill_chunk: cli.usize_or("prefill-chunk", 16),
+        token_budget: cli.usize_or("token-budget", 0),
+        queue_cap: 0, // generate: unbounded; serve overwrites from --queue-cap
+    };
+    Ok(engine)
+}
+
+/// Packed-engine decode (see [`build_engine`] for checkpoint fallback).
+fn cmd_generate(cli: &Cli) -> Result<()> {
+    use affinequant::engine::{Engine, Sampler};
+    use affinequant::util::{human_secs, Timer};
+
+    let mut engine = build_engine(cli, "generate")?;
     if let Some(path) = cli.get("save-packed") {
         engine.model.save(path)?;
         eprintln!("[generate] saved packed model to {path}");
@@ -94,7 +118,8 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
     let prefs: Vec<&str> = prompts.iter().map(|s| s.as_str()).collect();
     let reqs = Engine::byte_requests(&prefs, max_new);
     let t = Timer::start();
-    let (completions, stats) = engine.generate(reqs, sampler, cli.usize_or("seed", 1) as u64);
+    // submit errors (empty prompt, zero max-new) report instead of panic
+    let (completions, stats) = engine.generate(reqs, sampler, cli.usize_or("seed", 1) as u64)?;
     let secs = t.secs();
     for (p, c) in prefs.iter().zip(&completions) {
         // completions come back sorted by id, i.e. prompt order
@@ -113,11 +138,55 @@ fn cmd_generate(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Overload-safe HTTP serving over the packed engine. Blocks until the
+/// server drains (SIGTERM/SIGINT or `POST /admin/shutdown`).
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    use affinequant::engine::Sampler;
+    use affinequant::server::{fault::FaultConfig, install_signal_handlers, Server, ServerConfig};
+
+    let engine = build_engine(cli, "serve")?;
+    let topk = cli.usize_or("topk", 0);
+    let cfg = ServerConfig {
+        addr: format!("{}:{}", cli.str_or("addr", "127.0.0.1"), cli.usize_or("port", 8080)),
+        workers: cli.usize_or("workers", 4),
+        queue_cap: cli.usize_or("queue-cap", 32),
+        client_cap: cli.usize_or("client-cap", 8),
+        default_max_new: cli.usize_or("max-new", 64),
+        default_deadline_ms: cli.usize_or("deadline-ms", 0) as u64,
+        retry_after_s: cli.usize_or("retry-after", 1) as u64,
+        sampler: if topk > 1 {
+            Sampler::TopK { k: topk, temperature: cli.f32_or("temp", 1.0) }
+        } else {
+            Sampler::Greedy
+        },
+        seed: cli.usize_or("seed", 1) as u64,
+        fault: FaultConfig {
+            tick_delay_ms: cli.usize_or("fault-tick-ms", 0) as u64,
+            admit_delay_ms: cli.usize_or("fault-admit-ms", 0) as u64,
+            drop_after_tokens: cli.usize_or("fault-drop-after", 0),
+        },
+    };
+    eprintln!("[serve] {}", engine.memory_report());
+    if cfg.fault.active() {
+        eprintln!("[serve] FAULT INJECTION ACTIVE: {:?}", cfg.fault);
+    }
+    install_signal_handlers();
+    let handle = Server::spawn(engine, cfg)?;
+    eprintln!(
+        "[serve] listening on http://{} (queue cap {}, SIGTERM drains gracefully)",
+        handle.addr,
+        cli.usize_or("queue-cap", 32),
+    );
+    handle.join();
+    eprintln!("[serve] drained; bye");
+    Ok(())
+}
+
 #[cfg(not(feature = "pjrt"))]
 fn pjrt_main(cli: Cli) -> Result<()> {
     anyhow::bail!(
         "subcommand {:?} needs the PJRT runtime; this binary was built with \
-         --no-default-features (only `generate` is available)",
+         --no-default-features (only `generate` and `serve` are available)",
         cli.cmd
     )
 }

@@ -14,6 +14,18 @@ pub fn save_table(table: &Table, stem: &str) -> std::io::Result<()> {
     Ok(())
 }
 
+/// Write a JSON value to an explicit path (e.g. the `BENCH_<pr>.json`
+/// perf-trajectory snapshots the ROADMAP asks for — repo-root files that
+/// persist across PRs so regressions are visible at re-anchor time).
+pub fn save_json(path: &str, v: &crate::jsonx::Value) -> std::io::Result<()> {
+    ensure_parent(path)?;
+    let mut text = crate::jsonx::emit(v);
+    text.push('\n');
+    std::fs::write(path, text)?;
+    println!("saved {path}");
+    Ok(())
+}
+
 /// Append a line to results/log.txt with a timestamp counter.
 pub fn log_line(line: &str) -> std::io::Result<()> {
     use std::io::Write;

@@ -1,0 +1,213 @@
+//! Admission control: the front door that keeps overload out of the
+//! engine. Two gates, both answered with HTTP 429 + `Retry-After`:
+//!
+//! * a **global in-flight ceiling** (`max_batch + queue_cap`): beyond it a
+//!   request could only sit in the scheduler's pending deque past its cap,
+//!   so it is shed here — cheaply, before the engine thread is touched;
+//! * a **per-client concurrency cap**: one client opening hundreds of
+//!   streams cannot monopolize the slots (backpressure is per-client, not
+//!   just global).
+//!
+//! Admission is a [`Permit`] (RAII): dropping it — on completion, client
+//! disconnect, or any error path — releases both counts, so leaks are
+//! impossible by construction.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Why admission refused a request (both are 429s upstream).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The box is full: active slots + bounded queue all taken.
+    Capacity { in_flight: usize, cap: usize },
+    /// This client is at its concurrent-request cap.
+    ClientCap { cap: usize },
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::Capacity { in_flight, cap } => {
+                write!(f, "server at capacity ({in_flight}/{cap} requests in flight)")
+            }
+            AdmitError::ClientCap { cap } => {
+                write!(f, "client at its concurrency cap ({cap})")
+            }
+        }
+    }
+}
+
+pub struct Admission {
+    /// `max_batch + queue_cap`; 0 = unbounded (not recommended serving).
+    max_in_flight: usize,
+    /// Per-client concurrent request cap; 0 = unlimited.
+    client_cap: usize,
+    in_flight: AtomicUsize,
+    clients: Mutex<HashMap<String, usize>>,
+    // counters for /v1/stats
+    pub admitted: AtomicU64,
+    pub shed_capacity: AtomicU64,
+    pub shed_client: AtomicU64,
+}
+
+impl Admission {
+    pub fn new(max_in_flight: usize, client_cap: usize) -> Arc<Admission> {
+        Arc::new(Admission {
+            max_in_flight,
+            client_cap,
+            in_flight: AtomicUsize::new(0),
+            clients: Mutex::new(HashMap::new()),
+            admitted: AtomicU64::new(0),
+            shed_capacity: AtomicU64::new(0),
+            shed_client: AtomicU64::new(0),
+        })
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+
+    /// Try to admit one request for `client`; the permit must be held for
+    /// the request's whole lifetime (queue wait + decode + streaming).
+    pub fn try_admit(self: &Arc<Admission>, client: &str) -> Result<Permit, AdmitError> {
+        // per-client first: a greedy client is told so even when the box
+        // also happens to be full
+        if self.client_cap > 0 {
+            let mut clients = self.clients.lock().expect("admission lock poisoned");
+            let n = clients.entry(client.to_string()).or_insert(0);
+            if *n >= self.client_cap {
+                self.shed_client.fetch_add(1, Ordering::Relaxed);
+                return Err(AdmitError::ClientCap { cap: self.client_cap });
+            }
+            *n += 1;
+        }
+        if self.max_in_flight > 0 {
+            // CAS loop so concurrent workers cannot overshoot the ceiling
+            let mut cur = self.in_flight.load(Ordering::Relaxed);
+            loop {
+                if cur >= self.max_in_flight {
+                    self.release_client(client);
+                    self.shed_capacity.fetch_add(1, Ordering::Relaxed);
+                    return Err(AdmitError::Capacity {
+                        in_flight: cur,
+                        cap: self.max_in_flight,
+                    });
+                }
+                match self.in_flight.compare_exchange_weak(
+                    cur,
+                    cur + 1,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        } else {
+            self.in_flight.fetch_add(1, Ordering::AcqRel);
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(Permit { adm: Arc::clone(self), client: client.to_string() })
+    }
+
+    fn release_client(&self, client: &str) {
+        if self.client_cap == 0 {
+            return;
+        }
+        let mut clients = self.clients.lock().expect("admission lock poisoned");
+        if let Some(n) = clients.get_mut(client) {
+            *n -= 1;
+            if *n == 0 {
+                clients.remove(client);
+            }
+        }
+    }
+}
+
+/// A live admission; dropping it releases the global and per-client slots.
+pub struct Permit {
+    adm: Arc<Admission>,
+    client: String,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.adm.in_flight.fetch_sub(1, Ordering::AcqRel);
+        self.adm.release_client(&self.client);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_ceiling_sheds_and_releases() {
+        let adm = Admission::new(2, 0);
+        let p1 = adm.try_admit("a").unwrap();
+        let _p2 = adm.try_admit("b").unwrap();
+        let err = adm.try_admit("c").unwrap_err();
+        assert!(matches!(err, AdmitError::Capacity { cap: 2, .. }));
+        assert_eq!(adm.shed_capacity.load(Ordering::Relaxed), 1);
+        drop(p1);
+        assert!(adm.try_admit("c").is_ok());
+    }
+
+    #[test]
+    fn per_client_cap_is_isolated() {
+        let adm = Admission::new(0, 1);
+        let _p = adm.try_admit("alice").unwrap();
+        assert!(matches!(
+            adm.try_admit("alice").unwrap_err(),
+            AdmitError::ClientCap { cap: 1 }
+        ));
+        // a different client is unaffected by alice's backlog
+        assert!(adm.try_admit("bob").is_ok());
+        assert_eq!(adm.shed_client.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn client_count_survives_capacity_rejection() {
+        // a capacity shed must roll back the per-client increment
+        let adm = Admission::new(1, 5);
+        let _p = adm.try_admit("a").unwrap();
+        let _ = adm.try_admit("b").unwrap_err();
+        drop(_p);
+        for _ in 0..5 {
+            // b's failed attempt must not have consumed a client slot
+            let p = adm.try_admit("b").unwrap();
+            drop(p);
+        }
+    }
+
+    #[test]
+    fn concurrent_admission_never_overshoots() {
+        let adm = Admission::new(8, 0);
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let adm = Arc::clone(&adm);
+            handles.push(std::thread::spawn(move || {
+                let mut got = 0usize;
+                for i in 0..64 {
+                    if let Ok(p) = adm.try_admit(&format!("c{t}")) {
+                        got += 1;
+                        assert!(adm.in_flight() <= 8, "ceiling overshoot");
+                        if i % 3 == 0 {
+                            drop(p);
+                        } else {
+                            std::mem::forget(p); // hold a few permanently
+                        }
+                    }
+                    if got >= 2 {
+                        break;
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(adm.in_flight() <= 8);
+    }
+}

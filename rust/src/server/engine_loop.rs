@@ -1,0 +1,164 @@
+//! The single engine thread: owns the packed model, the KV arena, and one
+//! long-lived [`Scheduler`] session; connection workers hand it jobs over
+//! a channel and get tokens streamed back per scheduler tick.
+//!
+//! One thread, by design: the scheduler already multiplexes sequences
+//! inside each tick (continuous batching), so serving concurrency comes
+//! from batch slots, not from racing threads over the KV cache — and the
+//! bit-stability contract (greedy streamed tokens == offline `generate`)
+//! holds because this is literally the same `tick` the offline path runs.
+//!
+//! Robustness duties here:
+//! * `submit_at` failures (malformed request, pending deque at its cap)
+//!   are *replied*, not panicked — the worker maps them to HTTP 400/429;
+//! * a failed token send means the worker is gone (client disconnect):
+//!   the sequence is cancelled the same tick, freeing its KV slot;
+//! * deadlines are swept between ticks by the scheduler itself
+//!   ([`FinishReason::Deadline`]);
+//! * on drain the loop stops taking jobs only when the channel closes,
+//!   and keeps ticking until every admitted sequence finished.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use crate::engine::{Completion, Engine, Request, Sampler, Scheduler, SubmitError};
+use crate::rngx::Pcg32;
+
+use super::fault::FaultConfig;
+
+/// What a connection worker receives over its per-request channel.
+#[derive(Debug)]
+pub enum StreamEvent {
+    /// One sampled token (the request is still live).
+    Token(i32),
+    /// The request finished; terminal event.
+    Done(Completion),
+    /// The scheduler refused the request; terminal event.
+    Rejected(SubmitError),
+}
+
+/// One admitted request travelling to the engine thread.
+pub struct Job {
+    pub req: Request,
+    pub deadline: Option<Instant>,
+    pub tx: Sender<StreamEvent>,
+}
+
+/// Live gauges + counters the stats endpoint reads while the loop runs.
+#[derive(Default)]
+pub struct EngineGauges {
+    pub pending: AtomicUsize,
+    pub active: AtomicUsize,
+    pub peak_pending: AtomicUsize,
+    pub tokens_generated: AtomicU64,
+    pub completed: AtomicU64,
+    pub shed_requests: AtomicU64,
+    pub deadline_evictions: AtomicU64,
+    pub cancelled: AtomicU64,
+    pub starved_ticks: AtomicU64,
+}
+
+/// How long the loop blocks for a job when idle before re-checking drain.
+const IDLE_POLL: Duration = Duration::from_millis(2);
+
+/// Run until the job channel closes and all admitted work has finished.
+pub fn run(
+    engine: &mut Engine,
+    jobs: Receiver<Job>,
+    sampler: Sampler,
+    seed: u64,
+    fault: FaultConfig,
+    gauges: &EngineGauges,
+) {
+    let sched_cfg = engine.sched;
+    let max_batch = engine.max_batch;
+    let (model, cache) = engine.parts();
+    let mut sched = Scheduler::with_config(max_batch, sched_cfg);
+    let mut rng = Pcg32::seeded(seed);
+    let mut streams: HashMap<u64, Sender<StreamEvent>> = HashMap::new();
+    let mut closed = false;
+
+    loop {
+        // ---- intake: block briefly when idle, drain the backlog when busy
+        if !sched.has_work() && !closed {
+            match jobs.recv_timeout(IDLE_POLL) {
+                Ok(job) => accept(&mut sched, &mut streams, job),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => closed = true,
+            }
+        }
+        loop {
+            match jobs.try_recv() {
+                Ok(job) => accept(&mut sched, &mut streams, job),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    closed = true;
+                    break;
+                }
+            }
+        }
+        if !sched.has_work() {
+            publish(&sched, gauges);
+            if closed {
+                break; // drained: nothing in flight, no more submitters
+            }
+            continue;
+        }
+
+        // ---- one model step (deadline sweep happens inside tick)
+        sched.tick(model, cache, sampler, &mut rng);
+
+        // ---- stream this tick's tokens; a dead receiver = disconnected
+        // client, so reclaim the slot instead of decoding to nobody
+        let mut dead: Vec<u64> = Vec::new();
+        for &(id, tok) in sched.emitted() {
+            if let Some(tx) = streams.get(&id) {
+                if tx.send(StreamEvent::Token(tok)).is_err() {
+                    dead.push(id);
+                }
+            }
+        }
+        for c in sched.take_finished() {
+            gauges.completed.fetch_add(1, Ordering::Relaxed);
+            if let Some(tx) = streams.remove(&c.id) {
+                let _ = tx.send(StreamEvent::Done(c));
+            }
+        }
+        for id in dead {
+            sched.cancel(id, cache);
+            streams.remove(&id);
+        }
+
+        if fault.tick_delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(fault.tick_delay_ms));
+        }
+        publish(&sched, gauges);
+    }
+}
+
+fn accept(sched: &mut Scheduler, streams: &mut HashMap<u64, Sender<StreamEvent>>, job: Job) {
+    let id = job.req.id;
+    match sched.submit_at(job.req, job.deadline) {
+        Ok(()) => {
+            streams.insert(id, job.tx);
+        }
+        Err(e) => {
+            let _ = job.tx.send(StreamEvent::Rejected(e));
+        }
+    }
+}
+
+fn publish(sched: &Scheduler, gauges: &EngineGauges) {
+    let pending = sched.pending_len();
+    gauges.pending.store(pending, Ordering::Relaxed);
+    gauges.peak_pending.fetch_max(pending, Ordering::Relaxed);
+    gauges.active.store(sched.active_len(), Ordering::Relaxed);
+    let s = &sched.stats;
+    gauges.tokens_generated.store(s.tokens_generated as u64, Ordering::Relaxed);
+    gauges.shed_requests.store(s.shed_requests as u64, Ordering::Relaxed);
+    gauges.deadline_evictions.store(s.deadline_evictions as u64, Ordering::Relaxed);
+    gauges.cancelled.store(s.cancelled as u64, Ordering::Relaxed);
+    gauges.starved_ticks.store(s.starved_ticks as u64, Ordering::Relaxed);
+}

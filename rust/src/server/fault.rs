@@ -1,0 +1,69 @@
+//! Deterministic fault injection for the serving path.
+//!
+//! Overload and mid-stream-failure behaviour is only trustworthy if it is
+//! *testable*: these knobs let a test (or an operator drill) slow the
+//! engine down until the admission queue actually fills, delay admission
+//! so concurrent clients really pile up, and cut streams off mid-flight —
+//! all deterministically, with no reliance on racing real hardware.
+//!
+//! Sourced from explicit config (CLI flags) with environment-variable
+//! overrides, so a running binary can be driven into the degraded paths
+//! without a rebuild:
+//!
+//! | env                      | effect                                       |
+//! |--------------------------|----------------------------------------------|
+//! | `AQ_FAULT_TICK_MS`       | sleep after every scheduler tick (slow model)|
+//! | `AQ_FAULT_ADMIT_MS`      | sleep before admission (pile-up window)      |
+//! | `AQ_FAULT_DROP_AFTER`    | abort each stream after N tokens (server-side|
+//! |                          | connection drop; exercises slot reclamation) |
+
+/// All-zero = disabled (the production default).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultConfig {
+    /// Sleep this long after every engine tick — makes the model
+    /// arbitrarily slow so queue-growth windows are deterministic.
+    pub tick_delay_ms: u64,
+    /// Sleep this long in the connection worker before admission.
+    pub admit_delay_ms: u64,
+    /// Abort a streaming response (drop the socket without a terminator)
+    /// after this many tokens; `0` = off.
+    pub drop_after_tokens: usize,
+}
+
+impl FaultConfig {
+    /// Apply `AQ_FAULT_*` environment overrides on top of `self`.
+    pub fn with_env(mut self) -> FaultConfig {
+        if let Some(v) = env_u64("AQ_FAULT_TICK_MS") {
+            self.tick_delay_ms = v;
+        }
+        if let Some(v) = env_u64("AQ_FAULT_ADMIT_MS") {
+            self.admit_delay_ms = v;
+        }
+        if let Some(v) = env_u64("AQ_FAULT_DROP_AFTER") {
+            self.drop_after_tokens = v as usize;
+        }
+        self
+    }
+
+    pub fn active(&self) -> bool {
+        *self != FaultConfig::default()
+    }
+}
+
+fn env_u64(key: &str) -> Option<u64> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_overrides_and_active_flag() {
+        assert!(!FaultConfig::default().active());
+        let f = FaultConfig { tick_delay_ms: 3, ..Default::default() };
+        assert!(f.active());
+        // unset env leaves explicit config untouched
+        assert_eq!(f.with_env().tick_delay_ms, 3);
+    }
+}

@@ -1,0 +1,247 @@
+//! Minimal HTTP/1.1 support (substrate: hyper/axum are not vendored
+//! offline): request parsing with hard size limits, fixed-length
+//! responses, and a chunked-transfer writer for token streams.
+//!
+//! Robustness over features: every parse failure is an `Err(String)` the
+//! connection worker maps to HTTP 400 — never a panic — and oversized
+//! headers/bodies are refused before they are buffered, so a hostile
+//! client cannot balloon server memory. One request per connection
+//! (`Connection: close`): serving completions means most responses are
+//! streams that end by closing anyway, and it keeps the worker loop free
+//! of keep-alive state.
+
+use std::io::{BufRead, Read, Write};
+
+/// Largest accepted request body (a prompt payload); larger ones are
+/// refused while parsing, before allocation.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+/// Largest accepted single header line / request line.
+pub const MAX_LINE_BYTES: usize = 8 << 10;
+/// Most headers accepted on one request.
+pub const MAX_HEADERS: usize = 64;
+
+/// A parsed HTTP request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header with this name, case-insensitively.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Read one request off the wire. Errors are protocol violations or
+    /// limit overruns — the caller answers 400 and closes.
+    pub fn read_from<R: BufRead>(r: &mut R) -> Result<HttpRequest, String> {
+        let line = read_line(r)?;
+        let mut parts = line.split_whitespace();
+        let method = parts.next().ok_or("empty request line")?.to_string();
+        let path = parts.next().ok_or("missing request path")?.to_string();
+        let version = parts.next().ok_or("missing HTTP version")?;
+        if !version.starts_with("HTTP/1.") {
+            return Err(format!("unsupported version {version:?}"));
+        }
+        let mut headers = Vec::new();
+        loop {
+            let line = read_line(r)?;
+            if line.is_empty() {
+                break;
+            }
+            if headers.len() >= MAX_HEADERS {
+                return Err("too many headers".into());
+            }
+            let (k, v) = line.split_once(':').ok_or_else(|| format!("bad header {line:?}"))?;
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+        let content_len = headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+            .map(|(_, v)| v.parse::<usize>().map_err(|_| format!("bad content-length {v:?}")))
+            .transpose()?
+            .unwrap_or(0);
+        if content_len > MAX_BODY_BYTES {
+            return Err(format!("body too large ({content_len} > {MAX_BODY_BYTES})"));
+        }
+        let mut body = vec![0u8; content_len];
+        r.read_exact(&mut body).map_err(|e| format!("short body: {e}"))?;
+        Ok(HttpRequest { method, path, headers, body })
+    }
+}
+
+/// Read a CRLF-terminated line (LF tolerated), bounded by
+/// [`MAX_LINE_BYTES`].
+fn read_line<R: BufRead>(r: &mut R) -> Result<String, String> {
+    let mut buf = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => return Err("connection closed mid-request".into()),
+            Ok(_) => {}
+            Err(e) => return Err(format!("read error: {e}")),
+        }
+        if byte[0] == b'\n' {
+            break;
+        }
+        buf.push(byte[0]);
+        if buf.len() > MAX_LINE_BYTES {
+            return Err("header line too long".into());
+        }
+    }
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    String::from_utf8(buf).map_err(|_| "non-utf8 header bytes".into())
+}
+
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        429 => "Too Many Requests",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response (`Connection: close`).
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        status_reason(status),
+        body.len(),
+    )?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// JSON convenience for error/result bodies.
+pub fn write_json<W: Write>(
+    w: &mut W,
+    status: u16,
+    extra_headers: &[(&str, String)],
+    json: &str,
+) -> std::io::Result<()> {
+    write_response(w, status, "application/json", extra_headers, json.as_bytes())
+}
+
+/// Streaming body via `Transfer-Encoding: chunked`; each call to
+/// [`chunk`](ChunkedWriter::chunk) is flushed immediately so clients see
+/// tokens as the scheduler ticks, and a write failure surfaces as `Err` —
+/// the disconnect signal that frees the decode slot upstream.
+pub struct ChunkedWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> ChunkedWriter<W> {
+    pub fn start(mut w: W, status: u16, content_type: &str) -> std::io::Result<ChunkedWriter<W>> {
+        write!(
+            w,
+            "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+            status_reason(status),
+        )?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    pub fn chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        if data.is_empty() {
+            return Ok(()); // an empty chunk would terminate the stream
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    /// Terminate the stream cleanly (zero-length chunk).
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/completions HTTP/1.1\r\nHost: x\r\nContent-Length: 7\r\n\r\n{\"a\":1}";
+        let req = HttpRequest::read_from(&mut Cursor::new(&raw[..])).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert_eq!(req.body, b"{\"a\":1}");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for raw in [
+            &b"GARBAGE\r\n\r\n"[..],
+            b"GET /x SPDY/3\r\n\r\n",
+            b"GET /x HTTP/1.1\r\nbroken header\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+            b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort",
+        ] {
+            assert!(HttpRequest::read_from(&mut Cursor::new(raw)).is_err(), "{raw:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_body_before_reading_it() {
+        let raw = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        let err = HttpRequest::read_from(&mut Cursor::new(raw.as_bytes())).unwrap_err();
+        assert!(err.contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn chunked_wire_format() {
+        let mut out = Vec::new();
+        let mut cw = ChunkedWriter::start(&mut out, 200, "text/event-stream").unwrap();
+        cw.chunk(b"data: hi\n\n").unwrap();
+        cw.chunk(b"").unwrap(); // no-op, must not terminate the stream
+        cw.chunk(b"data: [DONE]\n\n").unwrap();
+        cw.finish().unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(s.contains("Transfer-Encoding: chunked"));
+        assert!(s.contains("a\r\ndata: hi\n\n\r\n"), "{s}");
+        assert!(s.ends_with("0\r\n\r\n"));
+    }
+
+    #[test]
+    fn fixed_response_has_content_length() {
+        let mut out = Vec::new();
+        write_json(&mut out, 429, &[("Retry-After", "1".into())], "{\"error\":\"x\"}").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(s.contains("Content-Length: 13\r\n"));
+        assert!(s.contains("Retry-After: 1\r\n"));
+    }
+}

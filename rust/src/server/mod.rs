@@ -1,0 +1,630 @@
+//! Overload-safe HTTP serving front-end over the packed engine.
+//!
+//! The ROADMAP's north star needs a network front door that *degrades
+//! gracefully*: the merged-transform serving path only stays "no overhead"
+//! (FlatQuant/OstQuant's assumption) if the layer above the kernels —
+//! admission, queueing, timeouts — never becomes the failure mode. Layout
+//! (Actyx-style node-API / event-stream separation):
+//!
+//! * [`http`]        — HTTP/1.1 parsing + fixed/chunked response writers;
+//! * [`admission`]   — bounded in-flight ceiling + per-client caps (429);
+//! * [`engine_loop`] — the one thread that owns the model and streams
+//!   tokens per scheduler tick;
+//! * [`fault`]       — deterministic fault injection (delays, drops);
+//! * this module     — listener, worker pool, routing, drain.
+//!
+//! ## Endpoints
+//!
+//! | endpoint               | behaviour                                       |
+//! |------------------------|-------------------------------------------------|
+//! | `POST /v1/completions` | OpenAI-style; `"stream": true` = SSE over chunked transfer |
+//! | `GET /healthz`         | liveness + drain state                          |
+//! | `GET /v1/stats`        | admission/scheduler/HTTP counters (JSON)        |
+//! | `POST /admin/shutdown` | begin graceful drain (what SIGTERM also does)   |
+//!
+//! ## Degradation ladder
+//!
+//! 1. queue has room → admit; tokens stream as the scheduler ticks;
+//! 2. in-flight ceiling (`max_batch + queue_cap`) or per-client cap hit →
+//!    **429** + `Retry-After` (the scheduler's pending deque is bounded by
+//!    construction — overload sheds, it never queues unboundedly);
+//! 3. per-request deadline passes (queued or mid-decode) → evicted with
+//!    [`FinishReason::Deadline`](crate::engine::FinishReason) → **504**
+//!    (non-stream) or a `"finish_reason":"deadline"` terminator (stream);
+//! 4. client disconnects mid-stream → the send fails → the sequence is
+//!    cancelled and its KV slot freed the same tick;
+//! 5. SIGTERM / `/admin/shutdown` → stop accepting (503), finish every
+//!    admitted request, then exit.
+//!
+//! Greedy streamed tokens are bit-identical to offline
+//! [`Engine::generate`] output — same scheduler, same tick, same kernels
+//! (`rust/tests/server.rs` asserts this over a real socket).
+
+pub mod admission;
+pub mod engine_loop;
+pub mod fault;
+pub mod http;
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::engine::{Completion, Engine, FinishReason, Request, Sampler, SubmitError};
+use crate::jsonx::{self, Value};
+
+use admission::{Admission, AdmitError};
+use engine_loop::{EngineGauges, Job, StreamEvent};
+use fault::FaultConfig;
+
+/// Serving knobs; `Default` is a sane single-box profile.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address; port 0 picks an ephemeral port (tests).
+    pub addr: String,
+    /// Connection-handling worker threads.
+    pub workers: usize,
+    /// Pending-queue bound beyond the batch slots; the in-flight ceiling
+    /// is `max_batch + queue_cap`. Must be > 0 — serving without a bound
+    /// is exactly the failure mode this front-end exists to prevent.
+    pub queue_cap: usize,
+    /// Per-client concurrent-request cap (keyed by `client_id` or peer
+    /// IP); 0 = unlimited.
+    pub client_cap: usize,
+    /// `max_tokens` when the request omits it.
+    pub default_max_new: usize,
+    /// Deadline applied when the request omits `deadline_ms`; 0 = none.
+    pub default_deadline_ms: u64,
+    /// `Retry-After` seconds on 429/503.
+    pub retry_after_s: u64,
+    /// Sampler for every request (per-request sampling params are not
+    /// honoured: one scheduler session shares one sampler + RNG).
+    pub sampler: Sampler,
+    /// RNG seed for the serving session (relevant to top-k only).
+    pub seed: u64,
+    pub fault: FaultConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 4,
+            queue_cap: 32,
+            client_cap: 8,
+            default_max_new: 64,
+            default_deadline_ms: 0,
+            retry_after_s: 1,
+            sampler: Sampler::Greedy,
+            seed: 0,
+            fault: FaultConfig::default(),
+        }
+    }
+}
+
+/// HTTP-layer counters (the engine/scheduler ones live in
+/// [`EngineGauges`], admission's in [`Admission`]).
+#[derive(Default)]
+pub struct Metrics {
+    pub connections: AtomicU64,
+    pub requests: AtomicU64,
+    pub completed_2xx: AtomicU64,
+    pub bad_requests: AtomicU64,
+    pub shed_429: AtomicU64,
+    pub unavailable_503: AtomicU64,
+    pub deadline_504: AtomicU64,
+    pub disconnects: AtomicU64,
+}
+
+struct Ctx {
+    cfg: ServerConfig,
+    model_name: String,
+    max_batch: usize,
+    admission: Arc<Admission>,
+    job_tx: Sender<Job>,
+    next_id: AtomicU64,
+    draining: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+    gauges: Arc<EngineGauges>,
+}
+
+/// A running server; dropping the handle does NOT stop it — call
+/// [`shutdown`](ServerHandle::shutdown) then [`join`](ServerHandle::join).
+pub struct Server;
+
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    draining: Arc<AtomicBool>,
+    threads: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    pub gauges: Arc<EngineGauges>,
+}
+
+impl ServerHandle {
+    /// Begin graceful drain: stop admitting, finish in-flight, exit.
+    pub fn shutdown(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Wait for every thread (accept, workers, engine) to exit.
+    pub fn join(self) {
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Set by the SIGTERM/SIGINT handler; every server observes it.
+static SIGNAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Route SIGTERM/SIGINT into graceful drain (unix; no-op elsewhere).
+/// Kept out of `Server::spawn` so tests can run servers un-hooked.
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    {
+        extern "C" fn on_signal(_sig: i32) {
+            SIGNAL_DRAIN.store(true, Ordering::SeqCst);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        unsafe {
+            signal(15, on_signal as usize); // SIGTERM
+            signal(2, on_signal as usize); // SIGINT
+        }
+    }
+}
+
+impl Server {
+    /// Bind, spawn the accept loop + worker pool + engine thread, and
+    /// return immediately. `engine.sched.queue_cap` is overwritten from
+    /// `cfg.queue_cap` so the scheduler's own bound always matches the
+    /// admission ceiling.
+    pub fn spawn(mut engine: Engine, cfg: ServerConfig) -> Result<ServerHandle> {
+        anyhow::ensure!(
+            cfg.queue_cap > 0,
+            "serving without a queue cap is unbounded by definition"
+        );
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let addr = listener.local_addr()?;
+
+        engine.sched.queue_cap = cfg.queue_cap;
+        let max_batch = engine.max_batch;
+        let fault = cfg.fault.with_env();
+        let draining = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(Metrics::default());
+        let gauges = Arc::new(EngineGauges::default());
+        let admission = Admission::new(max_batch + cfg.queue_cap, cfg.client_cap);
+        let (job_tx, job_rx) = channel::<Job>();
+        let (conn_tx, conn_rx) = channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+        let ctx = Arc::new(Ctx {
+            model_name: engine.model.cfg.name.clone(),
+            max_batch,
+            admission,
+            job_tx,
+            next_id: AtomicU64::new(1),
+            draining: Arc::clone(&draining),
+            metrics: Arc::clone(&metrics),
+            gauges: Arc::clone(&gauges),
+            cfg: ServerConfig { fault, ..cfg },
+        });
+
+        let mut threads = Vec::new();
+
+        // engine thread: owns the model; exits once every worker is gone
+        // (job channel closed) and all admitted sequences finished
+        {
+            let gauges = Arc::clone(&gauges);
+            let sampler = ctx.cfg.sampler;
+            let seed = ctx.cfg.seed;
+            threads.push(std::thread::spawn(move || {
+                engine_loop::run(&mut engine, job_rx, sampler, seed, fault, &gauges);
+            }));
+        }
+
+        // worker pool: drain accepted connections
+        for _ in 0..ctx.cfg.workers.max(1) {
+            let conn_rx = Arc::clone(&conn_rx);
+            let ctx = Arc::clone(&ctx);
+            threads.push(std::thread::spawn(move || loop {
+                let conn = {
+                    let rx = conn_rx.lock().expect("conn queue lock poisoned");
+                    rx.recv()
+                };
+                match conn {
+                    Ok(stream) => handle_connection(stream, &ctx),
+                    Err(_) => break, // accept loop gone and queue drained
+                }
+            }));
+        }
+
+        // accept loop: nonblocking so drain is noticed promptly
+        {
+            let draining = Arc::clone(&draining);
+            threads.push(std::thread::spawn(move || {
+                loop {
+                    if draining.load(Ordering::SeqCst) || SIGNAL_DRAIN.load(Ordering::SeqCst) {
+                        draining.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            if conn_tx.send(stream).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(2)),
+                    }
+                }
+                // dropping conn_tx ends the workers once the backlog drains
+            }));
+        }
+
+        Ok(ServerHandle { addr, draining, threads, metrics, gauges })
+    }
+}
+
+// ------------------------------------------------------------ connection
+
+fn handle_connection(stream: TcpStream, ctx: &Ctx) {
+    ctx.metrics.connections.fetch_add(1, Ordering::Relaxed);
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let peer = stream.peer_addr().map(|a| a.ip().to_string()).unwrap_or_default();
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+
+    let req = match http::HttpRequest::read_from(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            ctx.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json(&mut writer, 400, &[], &err_json(&e));
+            return;
+        }
+    };
+    ctx.metrics.requests.fetch_add(1, Ordering::Relaxed);
+
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/completions") => handle_completions(&req, &mut writer, ctx, &peer),
+        ("GET", "/healthz") => {
+            let draining = ctx.draining.load(Ordering::SeqCst);
+            let body = jsonx::emit(&jsonx::obj(vec![
+                ("status", jsonx::s(if draining { "draining" } else { "ok" })),
+                ("pending", jsonx::num(ctx.gauges.pending.load(Ordering::Relaxed) as f64)),
+                ("active", jsonx::num(ctx.gauges.active.load(Ordering::Relaxed) as f64)),
+            ]));
+            let _ = http::write_json(&mut writer, 200, &[], &body);
+        }
+        ("GET", "/v1/stats") => {
+            let _ = http::write_json(&mut writer, 200, &[], &stats_json(ctx));
+        }
+        ("POST", "/admin/shutdown") => {
+            ctx.draining.store(true, Ordering::SeqCst);
+            let _ = http::write_json(&mut writer, 202, &[], "{\"status\":\"draining\"}");
+        }
+        ("POST" | "GET", _) => {
+            let _ = http::write_json(&mut writer, 404, &[], &err_json("no such endpoint"));
+        }
+        _ => {
+            let _ = http::write_json(&mut writer, 405, &[], &err_json("method not allowed"));
+        }
+    }
+}
+
+// ------------------------------------------------------------ completion
+
+/// Parsed `/v1/completions` payload.
+struct CompletionParams {
+    prompt: Vec<i32>,
+    max_new: usize,
+    stream: bool,
+    eos: Option<i32>,
+    deadline_ms: u64,
+    client: String,
+}
+
+fn parse_completion(body: &[u8], ctx: &Ctx, peer: &str) -> Result<CompletionParams, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
+    let v = jsonx::parse(text).map_err(|e| format!("bad json: {e}"))?;
+    let prompt = match v.get("prompt") {
+        Some(Value::Str(s)) => s.bytes().map(|b| b as i32).collect(),
+        Some(_) => return Err("\"prompt\" must be a string".into()),
+        None => return Err("missing \"prompt\"".into()),
+    };
+    let max_new = match get_num(&v, &["max_tokens", "max_new"]) {
+        Some(n) if n >= 0.0 => n as usize,
+        Some(_) => return Err("\"max_tokens\" must be non-negative".into()),
+        None => ctx.cfg.default_max_new,
+    };
+    let stream = matches!(v.get("stream"), Some(Value::Bool(true)));
+    let eos = match v.get("eos") {
+        Some(Value::Num(n)) => Some(*n as i32),
+        Some(Value::Null) | None => None,
+        Some(_) => return Err("\"eos\" must be a token id".into()),
+    };
+    let deadline_ms = match get_num(&v, &["deadline_ms"]) {
+        Some(n) if n >= 0.0 => n as u64,
+        Some(_) => return Err("\"deadline_ms\" must be non-negative".into()),
+        None => ctx.cfg.default_deadline_ms,
+    };
+    let client = match v.get("client_id") {
+        Some(Value::Str(s)) if !s.is_empty() => s.clone(),
+        _ => peer.to_string(),
+    };
+    Ok(CompletionParams { prompt, max_new, stream, eos, deadline_ms, client })
+}
+
+fn get_num(v: &Value, keys: &[&str]) -> Option<f64> {
+    keys.iter().find_map(|k| match v.get(k) {
+        Some(Value::Num(n)) => Some(*n),
+        _ => None,
+    })
+}
+
+fn handle_completions(req: &http::HttpRequest, writer: &mut TcpStream, ctx: &Ctx, peer: &str) {
+    if ctx.draining.load(Ordering::SeqCst) {
+        ctx.metrics.unavailable_503.fetch_add(1, Ordering::Relaxed);
+        let _ = http::write_json(writer, 503, &retry_after(ctx), &err_json("server is draining"));
+        return;
+    }
+    let params = match parse_completion(&req.body, ctx, peer) {
+        Ok(p) => p,
+        Err(e) => {
+            ctx.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json(writer, 400, &[], &err_json(&e));
+            return;
+        }
+    };
+    if ctx.cfg.fault.admit_delay_ms > 0 {
+        std::thread::sleep(Duration::from_millis(ctx.cfg.fault.admit_delay_ms));
+    }
+
+    // admission: cheap shed before the engine thread is involved
+    let _permit = match ctx.admission.try_admit(&params.client) {
+        Ok(p) => p,
+        Err(e) => {
+            ctx.metrics.shed_429.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json(writer, 429, &retry_after(ctx), &err_json(&e.to_string()));
+            return;
+        }
+    };
+
+    let id = ctx.next_id.fetch_add(1, Ordering::Relaxed);
+    let deadline = (params.deadline_ms > 0)
+        .then(|| Instant::now() + Duration::from_millis(params.deadline_ms));
+    let (tx, rx) = channel::<StreamEvent>();
+    let job = Job {
+        req: Request { id, prompt: params.prompt, max_new: params.max_new, eos: params.eos },
+        deadline,
+        tx,
+    };
+    if ctx.job_tx.send(job).is_err() {
+        ctx.metrics.unavailable_503.fetch_add(1, Ordering::Relaxed);
+        let _ = http::write_json(writer, 503, &retry_after(ctx), &err_json("engine stopped"));
+        return;
+    }
+
+    // first event decides the status line (409-free: Rejected vs tokens)
+    let first = match rx.recv_timeout(Duration::from_secs(120)) {
+        Ok(ev) => ev,
+        Err(RecvTimeoutError::Timeout | RecvTimeoutError::Disconnected) => {
+            ctx.metrics.unavailable_503.fetch_add(1, Ordering::Relaxed);
+            let _ = http::write_json(writer, 503, &retry_after(ctx), &err_json("engine stalled"));
+            return;
+        }
+    };
+    if let StreamEvent::Rejected(e) = first {
+        let (status, extra) = match e {
+            // the scheduler's own cap is the backstop behind admission; a
+            // race that slips past the ceiling still sheds, never queues
+            SubmitError::QueueFull { .. } => {
+                ctx.metrics.shed_429.fetch_add(1, Ordering::Relaxed);
+                (429, retry_after(ctx))
+            }
+            SubmitError::EmptyPrompt | SubmitError::ZeroMaxNew => {
+                ctx.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
+                (400, Vec::new())
+            }
+        };
+        let _ = http::write_json(writer, status, &extra, &err_json(&e.to_string()));
+        return;
+    }
+
+    if params.stream {
+        stream_response(writer, ctx, first, &rx);
+    } else {
+        buffered_response(writer, ctx, first, &rx);
+    }
+}
+
+/// Buffered (non-streaming) mode: collect everything, one JSON response.
+/// [`FinishReason::Deadline`] maps to 504 with the partial text attached.
+fn buffered_response(
+    writer: &mut TcpStream,
+    ctx: &Ctx,
+    first: StreamEvent,
+    rx: &Receiver<StreamEvent>,
+) {
+    let mut ev = first;
+    loop {
+        match ev {
+            StreamEvent::Done(c) => {
+                let status = match c.finish {
+                    FinishReason::Deadline => {
+                        ctx.metrics.deadline_504.fetch_add(1, Ordering::Relaxed);
+                        504
+                    }
+                    _ => {
+                        ctx.metrics.completed_2xx.fetch_add(1, Ordering::Relaxed);
+                        200
+                    }
+                };
+                let _ = http::write_json(writer, status, &[], &completion_json(ctx, &c));
+                return;
+            }
+            StreamEvent::Token(_) => {} // accumulated inside the Completion
+            StreamEvent::Rejected(_) => unreachable!("terminal event handled by caller"),
+        }
+        ev = match rx.recv() {
+            Ok(ev) => ev,
+            Err(_) => {
+                let _ = http::write_json(writer, 503, &[], &err_json("engine stopped"));
+                return;
+            }
+        };
+    }
+}
+
+/// Streaming mode: SSE events over chunked transfer, one `data:` line per
+/// token as the scheduler ticks, terminated by a finish event + `[DONE]`.
+/// A write failure = client disconnect: dropping `rx` makes the engine's
+/// next send fail, which cancels the sequence and frees its slot.
+fn stream_response(
+    writer: &mut TcpStream,
+    ctx: &Ctx,
+    first: StreamEvent,
+    rx: &Receiver<StreamEvent>,
+) {
+    let Ok(mut out) = http::ChunkedWriter::start(&mut *writer, 200, "text/event-stream") else {
+        ctx.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+        return;
+    };
+    let mut index = 0usize;
+    let mut ev = first;
+    loop {
+        match ev {
+            StreamEvent::Token(tok) => {
+                let body = jsonx::emit(&jsonx::obj(vec![
+                    ("index", jsonx::num(index as f64)),
+                    ("token", jsonx::num(tok as f64)),
+                    ("text", jsonx::s(&token_text(tok))),
+                ]));
+                if out.chunk(format!("data: {body}\n\n").as_bytes()).is_err() {
+                    // client gone mid-stream; rx drops here → slot freed
+                    ctx.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                index += 1;
+                if ctx.cfg.fault.drop_after_tokens > 0 && index >= ctx.cfg.fault.drop_after_tokens
+                {
+                    // injected mid-stream failure: vanish without a
+                    // terminator, exactly like a cut connection
+                    ctx.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            }
+            StreamEvent::Done(c) => {
+                ctx.metrics.completed_2xx.fetch_add(1, Ordering::Relaxed);
+                if c.finish == FinishReason::Deadline {
+                    ctx.metrics.deadline_504.fetch_add(1, Ordering::Relaxed);
+                }
+                let fin = format!("data: {}\n\n", completion_json(ctx, &c));
+                let ok = out.chunk(fin.as_bytes()).is_ok()
+                    && out.chunk(b"data: [DONE]\n\n").is_ok();
+                if ok {
+                    let _ = out.finish();
+                } else {
+                    ctx.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+                }
+                return;
+            }
+            StreamEvent::Rejected(_) => unreachable!("terminal event handled by caller"),
+        }
+        ev = match rx.recv() {
+            Ok(ev) => ev,
+            Err(_) => return, // engine stopped; stream ends without [DONE]
+        };
+    }
+}
+
+// -------------------------------------------------------------- payloads
+
+fn err_json(msg: &str) -> String {
+    jsonx::emit(&jsonx::obj(vec![("error", jsonx::s(msg))]))
+}
+
+fn retry_after(ctx: &Ctx) -> Vec<(&'static str, String)> {
+    vec![("Retry-After", ctx.cfg.retry_after_s.to_string())]
+}
+
+fn token_text(tok: i32) -> String {
+    String::from_utf8_lossy(&[tok as u8]).into_owned()
+}
+
+fn completion_json(ctx: &Ctx, c: &Completion) -> String {
+    let bytes: Vec<u8> = c.tokens.iter().map(|&t| t as u8).collect();
+    jsonx::emit(&jsonx::obj(vec![
+        ("id", jsonx::num(c.id as f64)),
+        ("object", jsonx::s("text_completion")),
+        ("model", jsonx::s(&ctx.model_name)),
+        ("text", jsonx::s(&String::from_utf8_lossy(&bytes))),
+        (
+            "tokens",
+            Value::Arr(c.tokens.iter().map(|&t| jsonx::num(t as f64)).collect()),
+        ),
+        ("finish_reason", jsonx::s(c.finish.label())),
+        ("prompt_len", jsonx::num(c.prompt_len as f64)),
+        ("steps", jsonx::num(c.steps as f64)),
+    ]))
+}
+
+fn stats_json(ctx: &Ctx) -> String {
+    let g = &ctx.gauges;
+    let m = &ctx.metrics;
+    let a = &ctx.admission;
+    let n = |v: u64| jsonx::num(v as f64);
+    jsonx::emit(&jsonx::obj(vec![
+        ("draining", Value::Bool(ctx.draining.load(Ordering::SeqCst))),
+        ("max_batch", jsonx::num(ctx.max_batch as f64)),
+        ("queue_cap", jsonx::num(ctx.cfg.queue_cap as f64)),
+        ("in_flight", jsonx::num(a.in_flight() as f64)),
+        ("pending", jsonx::num(g.pending.load(Ordering::Relaxed) as f64)),
+        ("peak_pending", jsonx::num(g.peak_pending.load(Ordering::Relaxed) as f64)),
+        ("active", jsonx::num(g.active.load(Ordering::Relaxed) as f64)),
+        (
+            "admission",
+            jsonx::obj(vec![
+                ("admitted", n(a.admitted.load(Ordering::Relaxed))),
+                ("shed_capacity", n(a.shed_capacity.load(Ordering::Relaxed))),
+                ("shed_client", n(a.shed_client.load(Ordering::Relaxed))),
+            ]),
+        ),
+        (
+            "sched",
+            jsonx::obj(vec![
+                ("tokens_generated", n(g.tokens_generated.load(Ordering::Relaxed))),
+                ("completed", n(g.completed.load(Ordering::Relaxed))),
+                ("shed_requests", n(g.shed_requests.load(Ordering::Relaxed))),
+                ("deadline_evictions", n(g.deadline_evictions.load(Ordering::Relaxed))),
+                ("cancelled", n(g.cancelled.load(Ordering::Relaxed))),
+                ("starved_ticks", n(g.starved_ticks.load(Ordering::Relaxed))),
+            ]),
+        ),
+        (
+            "http",
+            jsonx::obj(vec![
+                ("connections", n(m.connections.load(Ordering::Relaxed))),
+                ("requests", n(m.requests.load(Ordering::Relaxed))),
+                ("completed_2xx", n(m.completed_2xx.load(Ordering::Relaxed))),
+                ("bad_requests", n(m.bad_requests.load(Ordering::Relaxed))),
+                ("shed_429", n(m.shed_429.load(Ordering::Relaxed))),
+                ("unavailable_503", n(m.unavailable_503.load(Ordering::Relaxed))),
+                ("deadline_504", n(m.deadline_504.load(Ordering::Relaxed))),
+                ("disconnects", n(m.disconnects.load(Ordering::Relaxed))),
+            ]),
+        ),
+    ]))
+}

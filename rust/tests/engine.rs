@@ -7,7 +7,7 @@
 use affinequant::engine::decode::{self, argmax, Sampler, StepInput};
 use affinequant::engine::kv::KvCache;
 use affinequant::engine::packed::{PackedLinear, PackedModel};
-use affinequant::engine::{Engine, FinishReason, Request, SchedConfig};
+use affinequant::engine::{Engine, FinishReason, Request, SchedConfig, Scheduler, SubmitError};
 use affinequant::model::zoo;
 use affinequant::prop_assert;
 use affinequant::proptestx::{Runner, Shrink};
@@ -154,7 +154,7 @@ fn greedy_decode_matches_reference_forward() {
         Request { id: 1, prompt: test_tokens(5), max_new: 20, eos: None },
         Request { id: 2, prompt: test_tokens(17), max_new: 3, eos: None },
     ];
-    let (completions, stats) = engine.generate(reqs, Sampler::Greedy, 0);
+    let (completions, stats) = engine.generate(reqs, Sampler::Greedy, 0).unwrap();
     assert_eq!(completions.len(), 3);
     assert_eq!(
         completions[0].tokens, reference,
@@ -179,7 +179,7 @@ fn completions_invariant_to_max_batch() {
         .collect();
     let run = |max_batch: usize| {
         let mut e = Engine::new(pm.clone(), max_batch);
-        e.generate(reqs.clone(), Sampler::Greedy, 0).0
+        e.generate(reqs.clone(), Sampler::Greedy, 0).unwrap().0
     };
     let serial = run(1);
     let batched = run(4);
@@ -214,17 +214,17 @@ fn chunked_prefill_bit_identical_for_any_chunk_and_budget() {
             .collect();
         let run = |sched: SchedConfig| {
             let mut e = Engine::with_config(pm.clone(), 2, sched);
-            e.generate(reqs.clone(), Sampler::Greedy, 0).0
+            e.generate(reqs.clone(), Sampler::Greedy, 0).unwrap().0
         };
-        let base = run(SchedConfig { prefill_chunk: 1, token_budget: 0 });
+        let base = run(SchedConfig { prefill_chunk: 1, ..SchedConfig::default() });
         assert_eq!(base.len(), 3);
         for sched in [
-            SchedConfig { prefill_chunk: 4, token_budget: 0 },
-            SchedConfig { prefill_chunk: 16, token_budget: 0 },
+            SchedConfig { prefill_chunk: 4, ..SchedConfig::default() },
+            SchedConfig { prefill_chunk: 16, ..SchedConfig::default() },
             // 0 = the whole remaining prompt in one chunk
-            SchedConfig { prefill_chunk: 0, token_budget: 0 },
+            SchedConfig { prefill_chunk: 0, ..SchedConfig::default() },
             // tight budget: chunks are clipped but outputs must not change
-            SchedConfig { prefill_chunk: 16, token_budget: 8 },
+            SchedConfig { prefill_chunk: 16, token_budget: 8, ..SchedConfig::default() },
         ] {
             let got = run(sched);
             assert_eq!(base.len(), got.len());
@@ -248,7 +248,7 @@ fn evicted_slot_is_refilled_the_same_tick() {
     let ps = zoo::seeded_store("opt-s1", 42).unwrap();
     let pm = PackedModel::from_store(&ps, QuantSpec::new(4, 128));
     let seq = pm.cfg.seq;
-    let sched = SchedConfig { prefill_chunk: 16, token_budget: 0 };
+    let sched = SchedConfig { prefill_chunk: 16, ..SchedConfig::default() };
     let mut e = Engine::with_config(pm, 2, sched);
     let reqs = vec![
         // overruns the positional table -> evicted mid-prefill by the sweep
@@ -258,7 +258,7 @@ fn evicted_slot_is_refilled_the_same_tick() {
         // queued behind both; must enter the freed slot the tick it frees
         Request { id: 2, prompt: test_tokens(5), max_new: 4, eos: None },
     ];
-    let (c, stats) = e.generate(reqs, Sampler::Greedy, 0);
+    let (c, stats) = e.generate(reqs, Sampler::Greedy, 0).unwrap();
     assert_eq!(
         stats.starved_ticks, 0,
         "a slot idled for a tick while requests were queued"
@@ -319,11 +319,13 @@ fn ring_slides_past_capacity_for_rope_models() {
     let mut engine = Engine::from_store(&ps, QuantSpec::new(4, 128), 1);
     let cap = engine.model.cfg.seq;
     let max_new = cap + 12; // forces eviction of the oldest entries
-    let (c, _) = engine.generate(
-        vec![Request { id: 0, prompt: test_tokens(4), max_new, eos: None }],
-        Sampler::Greedy,
-        0,
-    );
+    let (c, _) = engine
+        .generate(
+            vec![Request { id: 0, prompt: test_tokens(4), max_new, eos: None }],
+            Sampler::Greedy,
+            0,
+        )
+        .unwrap();
     assert_eq!(c[0].tokens.len(), max_new);
     assert!(c[0].tokens.iter().all(|&t| (0..256).contains(&t)));
 }
@@ -339,7 +341,142 @@ fn packed_model_roundtrip_preserves_decode() {
     let mut e2 = Engine::load(path, 2).unwrap();
     std::fs::remove_file(path).ok();
     let reqs = vec![Request { id: 0, prompt: test_tokens(6), max_new: 10, eos: None }];
-    let (c1, _) = e1.generate(reqs.clone(), Sampler::Greedy, 0);
-    let (c2, _) = e2.generate(reqs, Sampler::Greedy, 0);
+    let (c1, _) = e1.generate(reqs.clone(), Sampler::Greedy, 0).unwrap();
+    let (c2, _) = e2.generate(reqs, Sampler::Greedy, 0).unwrap();
     assert_eq!(c1[0].tokens, c2[0].tokens);
+}
+
+// ------------------------------------------- serving-robustness scheduler
+
+/// A small packed model + matching cache for direct `Scheduler` tests.
+fn sched_fixture(max_batch: usize) -> (PackedModel, KvCache) {
+    let ps = zoo::seeded_store("opt-s1", 42).unwrap();
+    let pm = PackedModel::from_store(&ps, QuantSpec::new(4, 128));
+    let cache = KvCache::new(max_batch, pm.cfg.n_layers, pm.cfg.seq, pm.cfg.d_model);
+    (pm, cache)
+}
+
+fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> Request {
+    Request { id, prompt, max_new, eos: None }
+}
+
+/// Malformed requests are refused as values, never panics — and through
+/// `Engine::generate` they surface as errors naming the request.
+#[test]
+fn submit_refuses_malformed_requests() {
+    let mut sched = Scheduler::new(1);
+    assert_eq!(sched.submit(req(0, vec![], 4)), Err(SubmitError::EmptyPrompt));
+    assert_eq!(sched.submit(req(1, vec![5], 0)), Err(SubmitError::ZeroMaxNew));
+    assert!(sched.submit(req(2, vec![5], 1)).is_ok());
+
+    let ps = zoo::seeded_store("opt-s1", 42).unwrap();
+    let mut engine = Engine::from_store(&ps, QuantSpec::new(4, 128), 1);
+    let err = engine.generate(vec![req(9, vec![], 4)], Sampler::Greedy, 0).unwrap_err();
+    assert!(err.to_string().contains("request 9"), "{err}");
+}
+
+/// Past `queue_cap` the pending deque sheds instead of growing; the shed
+/// count lands in `RunStats` and capacity freed by a drain re-admits.
+#[test]
+fn queue_cap_bounds_the_pending_deque() {
+    let cfg = SchedConfig { queue_cap: 2, ..SchedConfig::default() };
+    let mut sched = Scheduler::with_config(1, cfg);
+    assert!(sched.submit(req(0, vec![1], 1)).is_ok());
+    assert!(sched.submit(req(1, vec![1], 1)).is_ok());
+    assert_eq!(sched.submit(req(2, vec![1], 1)), Err(SubmitError::QueueFull { cap: 2 }));
+    assert_eq!(sched.pending_len(), 2, "the refused request must not queue");
+    assert_eq!(sched.stats.shed_requests, 1);
+
+    let (pm, mut cache) = sched_fixture(1);
+    let mut rng = Pcg32::seeded(0);
+    let done = sched.run(&pm, &mut cache, Sampler::Greedy, &mut rng);
+    assert_eq!(done.len(), 2);
+    assert!(sched.submit(req(2, vec![1], 1)).is_ok(), "drained queue admits again");
+}
+
+/// `evict_expired` with an explicit clock: deterministic deadline eviction
+/// for both queued and live sequences, partial output preserved.
+#[test]
+fn deadline_eviction_is_deterministic() {
+    let (pm, mut cache) = sched_fixture(1);
+    let mut rng = Pcg32::seeded(0);
+    let mut sched = Scheduler::new(1);
+    let soon = std::time::Instant::now() + std::time::Duration::from_secs(3600);
+    sched.submit_at(req(0, vec![3, 4, 5], 100), Some(soon)).unwrap();
+    sched.submit_at(req(1, vec![6, 7], 100), Some(soon)).unwrap();
+
+    // a few ticks: request 0 decodes in the only slot, request 1 queues
+    for _ in 0..6 {
+        sched.tick(&pm, &mut cache, Sampler::Greedy, &mut rng);
+    }
+    assert_eq!(sched.active_len(), 1);
+    assert_eq!(sched.pending_len(), 1);
+    assert!(sched.take_finished().is_empty());
+
+    // jump the clock past both deadlines — no sleeping, no wall time
+    sched.evict_expired(soon, &mut cache);
+    let mut done = sched.take_finished();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), 2);
+    assert_eq!(done[0].finish, FinishReason::Deadline);
+    assert!(!done[0].tokens.is_empty(), "mid-decode eviction keeps partial output");
+    assert_eq!(done[1].finish, FinishReason::Deadline);
+    assert!(done[1].tokens.is_empty(), "queued eviction never decoded");
+    assert_eq!(sched.stats.deadline_evictions, 2);
+    assert_eq!(sched.active_len(), 0, "the slot must be reclaimed");
+    assert!(!sched.has_work());
+}
+
+/// `cancel` (the disconnect path) frees the slot without a completion and
+/// the freed capacity is immediately reusable.
+#[test]
+fn cancel_frees_slot_without_completion() {
+    let (pm, mut cache) = sched_fixture(1);
+    let mut rng = Pcg32::seeded(0);
+    let mut sched = Scheduler::new(1);
+    sched.submit(req(0, vec![3, 4, 5], 100)).unwrap();
+    sched.submit(req(1, vec![6, 7], 100)).unwrap();
+    for _ in 0..4 {
+        sched.tick(&pm, &mut cache, Sampler::Greedy, &mut rng);
+    }
+    assert!(sched.cancel(0, &mut cache), "live sequence");
+    assert!(sched.cancel(1, &mut cache), "queued sequence");
+    assert!(!sched.cancel(7, &mut cache), "unknown id");
+    assert_eq!(sched.stats.cancelled, 2);
+    assert!(!sched.has_work());
+    assert!(sched.take_finished().is_empty(), "cancel delivers nothing");
+
+    sched.submit(req(2, vec![9, 9], 3)).unwrap();
+    let done = sched.run(&pm, &mut cache, Sampler::Greedy, &mut rng);
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].tokens.len(), 3, "reclaimed slot decodes normally");
+}
+
+/// The per-tick `emitted()` stream — what the HTTP server forwards —
+/// reassembles into exactly the completions' token lists.
+#[test]
+fn emitted_stream_reassembles_completions() {
+    let (pm, mut cache) = sched_fixture(2);
+    let mut rng = Pcg32::seeded(0);
+    let mut sched = Scheduler::new(2);
+    sched.submit(req(0, vec![3, 4, 5], 7)).unwrap();
+    sched.submit(req(1, vec![6, 7], 5)).unwrap();
+    sched.submit(req(2, vec![8], 4)).unwrap();
+
+    let mut streamed: std::collections::HashMap<u64, Vec<i32>> = Default::default();
+    let mut done = Vec::new();
+    loop {
+        let more = sched.tick(&pm, &mut cache, Sampler::Greedy, &mut rng);
+        for &(id, tok) in sched.emitted() {
+            streamed.entry(id).or_default().push(tok);
+        }
+        done.extend(sched.take_finished());
+        if !more {
+            break;
+        }
+    }
+    assert_eq!(done.len(), 3);
+    for c in &done {
+        assert_eq!(streamed[&c.id], c.tokens, "request {}: stream != completion", c.id);
+    }
 }

@@ -1,0 +1,353 @@
+//! End-to-end serving tests over a real socket: spawn the HTTP front-end
+//! in-process on an ephemeral port and drive it with raw `TcpStream`
+//! clients. Covers the whole degradation ladder — 400s for malformed
+//! payloads, 429 + `Retry-After` past the admission ceiling and per-client
+//! cap, deadline expiry (504 / `"deadline"`), mid-stream disconnects
+//! freeing their slot, graceful drain — plus the bit-stability contract:
+//! greedy tokens streamed over the socket are identical to offline
+//! [`Engine::generate`] output. Pure host — runs with
+//! `--no-default-features`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use affinequant::engine::{Engine, Sampler, SchedConfig};
+use affinequant::jsonx::{self, Value};
+use affinequant::model::zoo;
+use affinequant::quant::QuantSpec;
+use affinequant::server::fault::FaultConfig;
+use affinequant::server::{Server, ServerConfig, ServerHandle};
+
+// --------------------------------------------------------------- fixtures
+
+fn test_engine(max_batch: usize) -> Engine {
+    let ps = zoo::seeded_store("opt-s1", 42).expect("zoo model");
+    let mut engine = Engine::from_store(&ps, QuantSpec::new(4, 128), max_batch);
+    engine.sched = SchedConfig { prefill_chunk: 16, ..SchedConfig::default() };
+    engine
+}
+
+fn spawn(max_batch: usize, cfg: ServerConfig) -> ServerHandle {
+    Server::spawn(test_engine(max_batch), cfg).expect("spawn server")
+}
+
+fn quiet_cfg() -> ServerConfig {
+    ServerConfig { addr: "127.0.0.1:0".into(), workers: 4, ..ServerConfig::default() }
+}
+
+// ------------------------------------------------------------ raw client
+
+struct Response {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Response {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+fn send_request(stream: &mut TcpStream, method: &str, path: &str, body: &str) {
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("write request");
+}
+
+/// Parse a full `Connection: close` response (de-chunking if needed).
+fn parse_response(raw: &[u8]) -> Response {
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("no header/body separator");
+    let head = String::from_utf8_lossy(&raw[..split]);
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().expect("status line");
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line {status_line:?}"));
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        .collect();
+    let mut resp = Response { status, headers, body: raw[split + 4..].to_vec() };
+    if resp.header("transfer-encoding") == Some("chunked") {
+        resp.body = dechunk(&resp.body);
+    }
+    resp
+}
+
+/// Reassemble a chunked body; tolerates a truncated tail (cut streams).
+fn dechunk(mut raw: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    loop {
+        let Some(eol) = raw.windows(2).position(|w| w == b"\r\n") else { break };
+        let size = usize::from_str_radix(String::from_utf8_lossy(&raw[..eol]).trim(), 16)
+            .unwrap_or(0);
+        if size == 0 || raw.len() < eol + 2 + size {
+            break;
+        }
+        out.extend_from_slice(&raw[eol + 2..eol + 2 + size]);
+        raw = &raw[(eol + 2 + size + 2).min(raw.len())..];
+    }
+    out
+}
+
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> Response {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    send_request(&mut stream, method, path, body);
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    parse_response(&raw)
+}
+
+/// `data: ...` payloads from a de-chunked SSE body.
+fn sse_events(body: &str) -> Vec<String> {
+    body.split("\n\n")
+        .filter_map(|e| e.trim().strip_prefix("data: ").map(str::to_string))
+        .collect()
+}
+
+fn wait_until(what: &str, mut ok: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !ok() {
+        assert!(t0.elapsed() < Duration::from_secs(20), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+// ----------------------------------------------------------------- tests
+
+#[test]
+fn malformed_requests_get_400_not_a_crash() {
+    let handle = spawn(2, quiet_cfg());
+    let addr = handle.addr;
+    for body in [
+        "this is not json",
+        "{\"max_tokens\": 4}",                      // missing prompt
+        "{\"prompt\": 7}",                         // wrong type
+        "{\"prompt\": \"\", \"max_tokens\": 4}",   // scheduler: EmptyPrompt
+        "{\"prompt\": \"hi\", \"max_tokens\": 0}", // scheduler: ZeroMaxNew
+    ] {
+        let resp = request(addr, "POST", "/v1/completions", body);
+        assert_eq!(resp.status, 400, "{body:?} -> {}", resp.body_str());
+    }
+    assert_eq!(request(addr, "GET", "/nope", "").status, 404);
+    assert_eq!(request(addr, "DELETE", "/v1/completions", "").status, 405);
+    // the server survived all of it
+    let health = request(addr, "GET", "/healthz", "");
+    assert_eq!(health.status, 200);
+    assert!(health.body_str().contains("\"ok\""));
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn streamed_and_buffered_match_offline_generate() {
+    let prompt = "the bani ";
+    let max_new = 12;
+    let offline = {
+        let mut engine = test_engine(2);
+        let reqs = Engine::byte_requests(&[prompt], max_new);
+        let (c, _) = engine.generate(reqs, Sampler::Greedy, 0).expect("offline generate");
+        c.into_iter().next().expect("one completion")
+    };
+
+    let handle = spawn(2, quiet_cfg());
+    let body = format!("{{\"prompt\": \"{prompt}\", \"max_tokens\": {max_new}, \"stream\": true}}");
+    let resp = request(handle.addr, "POST", "/v1/completions", &body);
+    assert_eq!(resp.status, 200);
+    let events = sse_events(&resp.body_str());
+    assert_eq!(events.last().map(String::as_str), Some("[DONE]"));
+    // per-tick token events, then the completion object, then [DONE]
+    let token_events = &events[..events.len() - 2];
+    let streamed: Vec<i32> = token_events
+        .iter()
+        .map(|e| jsonx::parse(e).expect("token event json").req("token").as_f64() as i32)
+        .collect();
+    assert_eq!(streamed, offline.tokens, "streamed tokens must be bit-identical to offline");
+    let fin = jsonx::parse(&events[events.len() - 2]).expect("final event json");
+    assert_eq!(fin.req("finish_reason"), &Value::Str("max_new".into()));
+    let fin_tokens: Vec<i32> = match fin.req("tokens") {
+        Value::Arr(a) => a.iter().map(|v| v.as_f64() as i32).collect(),
+        other => panic!("tokens not an array: {other:?}"),
+    };
+    assert_eq!(fin_tokens, offline.tokens);
+
+    // buffered mode: same result, single JSON body
+    let body = format!("{{\"prompt\": \"{prompt}\", \"max_tokens\": {max_new}}}");
+    let resp = request(handle.addr, "POST", "/v1/completions", &body);
+    assert_eq!(resp.status, 200);
+    let v = jsonx::parse(&resp.body_str()).expect("completion json");
+    let buf_tokens: Vec<i32> = match v.req("tokens") {
+        Value::Arr(a) => a.iter().map(|t| t.as_f64() as i32).collect(),
+        other => panic!("tokens not an array: {other:?}"),
+    };
+    assert_eq!(buf_tokens, offline.tokens);
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn overload_sheds_429_with_retry_after() {
+    // 1 batch slot + 1 queue slot = in-flight ceiling 2; a slow engine
+    // (fault tick delay) keeps both held while the third request arrives
+    let cfg = ServerConfig {
+        queue_cap: 1,
+        client_cap: 0,
+        retry_after_s: 7,
+        fault: FaultConfig { tick_delay_ms: 30, ..FaultConfig::default() },
+        ..quiet_cfg()
+    };
+    let handle = spawn(1, cfg);
+    let addr = handle.addr;
+    let slow = "{\"prompt\": \"abcdef\", \"max_tokens\": 400, \"stream\": true}";
+    let mut s1 = TcpStream::connect(addr).expect("connect");
+    send_request(&mut s1, "POST", "/v1/completions", slow);
+    let mut s2 = TcpStream::connect(addr).expect("connect");
+    send_request(&mut s2, "POST", "/v1/completions", slow);
+    wait_until("both requests admitted", || {
+        handle.gauges.active.load(Ordering::Relaxed)
+            + handle.gauges.pending.load(Ordering::Relaxed)
+            >= 2
+    });
+
+    let resp = request(addr, "POST", "/v1/completions", slow);
+    assert_eq!(resp.status, 429, "{}", resp.body_str());
+    assert_eq!(resp.header("retry-after"), Some("7"), "429 must carry Retry-After");
+
+    let stats = jsonx::parse(&request(addr, "GET", "/v1/stats", "").body_str()).expect("stats");
+    assert!(stats.req("http").req("shed_429").as_f64() >= 1.0);
+    // the pending deque never grew past its cap while overloaded
+    assert!(stats.req("peak_pending").as_f64() <= 1.0);
+
+    drop(s1); // disconnects cancel the in-flight work so drain is quick
+    drop(s2);
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn per_client_cap_isolates_greedy_clients() {
+    let cfg = ServerConfig {
+        queue_cap: 8,
+        client_cap: 1,
+        fault: FaultConfig { tick_delay_ms: 20, ..FaultConfig::default() },
+        ..quiet_cfg()
+    };
+    let handle = spawn(4, cfg);
+    let addr = handle.addr;
+    let alice = "{\"prompt\": \"abcdef\", \"max_tokens\": 400, \"stream\": true, \
+                 \"client_id\": \"alice\"}";
+    let mut s1 = TcpStream::connect(addr).expect("connect");
+    send_request(&mut s1, "POST", "/v1/completions", alice);
+    wait_until("alice admitted", || handle.gauges.active.load(Ordering::Relaxed) >= 1);
+
+    // alice is at her cap; bob is unaffected by her backlog
+    let resp = request(addr, "POST", "/v1/completions", alice);
+    assert_eq!(resp.status, 429, "{}", resp.body_str());
+    let bob = "{\"prompt\": \"abcdef\", \"max_tokens\": 2, \"client_id\": \"bob\"}";
+    let resp = request(addr, "POST", "/v1/completions", bob);
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+
+    drop(s1);
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn expired_deadline_evicts_and_reports_504() {
+    // deadline_ms 1 with a 25ms/tick engine: the sweep on the second tick
+    // is always past the deadline, long before max_tokens could finish
+    let cfg = ServerConfig {
+        fault: FaultConfig { tick_delay_ms: 25, ..FaultConfig::default() },
+        ..quiet_cfg()
+    };
+    let handle = spawn(2, cfg);
+    let body = "{\"prompt\": \"abcdef\", \"max_tokens\": 400, \"deadline_ms\": 1}";
+    let resp = request(handle.addr, "POST", "/v1/completions", body);
+    assert_eq!(resp.status, 504, "{}", resp.body_str());
+    let v = jsonx::parse(&resp.body_str()).expect("completion json");
+    assert_eq!(v.req("finish_reason"), &Value::Str("deadline".into()));
+
+    // streamed flavour: the terminator event carries the deadline marker
+    let body = "{\"prompt\": \"abcdef\", \"max_tokens\": 400, \"deadline_ms\": 1, \
+                \"stream\": true}";
+    let resp = request(handle.addr, "POST", "/v1/completions", body);
+    assert_eq!(resp.status, 200, "streams commit their status before the outcome");
+    let events = sse_events(&resp.body_str());
+    assert_eq!(events.last().map(String::as_str), Some("[DONE]"));
+    let fin = jsonx::parse(&events[events.len() - 2]).expect("final event json");
+    assert_eq!(fin.req("finish_reason"), &Value::Str("deadline".into()));
+    assert!(handle.gauges.deadline_evictions.load(Ordering::Relaxed) >= 2);
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn mid_stream_disconnect_frees_the_slot() {
+    // one batch slot: if the dropped stream's slot were not reclaimed, the
+    // follow-up request could never decode
+    let cfg = ServerConfig {
+        queue_cap: 4,
+        fault: FaultConfig { tick_delay_ms: 10, ..FaultConfig::default() },
+        ..quiet_cfg()
+    };
+    let handle = spawn(1, cfg);
+    let addr = handle.addr;
+    {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        send_request(
+            &mut s,
+            "POST",
+            "/v1/completions",
+            "{\"prompt\": \"abcdef\", \"max_tokens\": 400, \"stream\": true}",
+        );
+        // read a few streamed bytes to prove it was decoding, then vanish
+        let mut buf = [0u8; 512];
+        let n = s.read(&mut buf).expect("first streamed bytes");
+        assert!(n > 0);
+    } // socket dropped mid-stream
+    wait_until("disconnect cancels the sequence", || {
+        handle.gauges.cancelled.load(Ordering::Relaxed) >= 1
+    });
+
+    let resp = request(addr, "POST", "/v1/completions", "{\"prompt\": \"hi\", \"max_tokens\": 2}");
+    assert_eq!(resp.status, 200, "slot was not reclaimed: {}", resp.body_str());
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn admin_shutdown_drains_gracefully() {
+    let handle = spawn(2, quiet_cfg());
+    let addr = handle.addr;
+    let ok = request(addr, "POST", "/v1/completions", "{\"prompt\": \"hi\", \"max_tokens\": 2}");
+    assert_eq!(ok.status, 200);
+    let resp = request(addr, "POST", "/admin/shutdown", "");
+    assert_eq!(resp.status, 202);
+    // every thread (accept, workers, engine) must exit on its own
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        handle.join();
+        let _ = tx.send(());
+    });
+    rx.recv_timeout(Duration::from_secs(20)).expect("drain must complete");
+    // fresh connections are refused once the listener is gone
+    wait_until("listener closed", || TcpStream::connect(addr).is_err());
+}

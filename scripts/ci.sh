@@ -28,6 +28,11 @@ cargo build --release --no-default-features
 echo "== cargo test -q --no-default-features"
 cargo test -q --no-default-features
 
+# the serving front-end must keep working without the PJRT stack: drive
+# the HTTP server over a real socket in the pure-host build
+echo "== server socket smoke (no-default-features)"
+cargo test -q --no-default-features --test server
+
 if [[ "${1:-}" == "--with-pjrt" ]]; then
     echo "== cargo build --release (default features)"
     cargo build --release
