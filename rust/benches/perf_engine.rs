@@ -25,10 +25,10 @@ use affinequant::report::{save_json, save_table};
 use affinequant::rngx::Pcg32;
 use affinequant::tensor::Tensor;
 
-/// The perf-trajectory snapshot this bench persists (`BENCH_6.json`): the
+/// The perf-trajectory snapshot this bench persists (`BENCH_7.json`): the
 /// ROADMAP asks every PR to leave a machine-readable record so the next
 /// re-anchor can see regressions, not just today's stdout.
-const BENCH_JSON: &str = "BENCH_6.json";
+const BENCH_JSON: &str = "BENCH_7.json";
 
 fn main() -> anyhow::Result<()> {
     let mut json_gemm: Vec<Value> = Vec::new();
@@ -122,13 +122,17 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---------------------------------------- end-to-end engine decode
+    // Each batch point runs twice: telemetry off (the zero-cost default)
+    // and telemetry on with sampled kernel timing — the on-run must stay
+    // within a few % tokens/s AND produce identical greedy tokens, which
+    // is the serving-overhead acceptance the telemetry layer signed up
+    // for. The ratio and the latency percentiles land in BENCH_7.json.
     let mut dt = Table::new(
         "engine decode throughput (opt-s2, w4g128, greedy)",
-        &["batch", "tok_s", "scheduler_steps", "kv_mb"],
+        &["batch", "tok_s_off", "tok_s_on", "on_off_ratio", "ttft_p50_ms", "it_p50_ms", "it_p99_ms", "kv_mb"],
     );
     let ps = zoo::seeded_store("opt-s2", 42).expect("zoo model");
     for batch in [1usize, 4, 16] {
-        let mut engine = Engine::from_store(&ps, QuantSpec::new(4, 128), batch);
         let reqs: Vec<Request> = (0..batch)
             .map(|i| Request {
                 id: i as u64,
@@ -137,19 +141,48 @@ fn main() -> anyhow::Result<()> {
                 eos: None,
             })
             .collect();
+
+        affinequant::telemetry::kernel::enable(false);
+        let mut engine = Engine::from_store(&ps, QuantSpec::new(4, 128), batch);
         let timer = affinequant::util::Timer::start();
-        let (_, stats) = engine.generate(reqs, Sampler::Greedy, 0)?;
-        let secs = timer.secs();
+        let (base, stats) = engine.generate(reqs.clone(), Sampler::Greedy, 0)?;
+        let tok_s_off = stats.tokens_processed as f64 / timer.secs();
+
+        let mut engine_on = Engine::from_store(&ps, QuantSpec::new(4, 128), batch);
+        engine_on.recorder = affinequant::telemetry::Recorder::new_enabled();
+        affinequant::telemetry::kernel::enable(true);
+        let timer = affinequant::util::Timer::start();
+        let (got, stats_on) = engine_on.generate(reqs, Sampler::Greedy, 0)?;
+        let tok_s_on = stats_on.tokens_processed as f64 / timer.secs();
+        affinequant::telemetry::kernel::enable(false);
+        for (a, b) in base.iter().zip(&got) {
+            assert_eq!(a.tokens, b.tokens, "telemetry changed greedy output at batch {batch}");
+        }
+        let tele = engine_on.recorder.telemetry().expect("recorder enabled");
+        let ratio = tok_s_on / tok_s_off.max(1e-12);
+
         json_decode.push(jsonx::obj(vec![
             ("batch", jsonx::num(batch as f64)),
-            ("tok_s", jsonx::num(stats.tokens_processed as f64 / secs)),
+            ("tok_s", jsonx::num(tok_s_off)),
+            ("tok_s_telemetry_on", jsonx::num(tok_s_on)),
+            ("telemetry_on_off_ratio", jsonx::num(ratio)),
+            ("ttft_p50_ms", jsonx::num(tele.ttft.percentile_ms(0.50))),
+            ("ttft_p90_ms", jsonx::num(tele.ttft.percentile_ms(0.90))),
+            ("ttft_p99_ms", jsonx::num(tele.ttft.percentile_ms(0.99))),
+            ("inter_token_p50_ms", jsonx::num(tele.inter_token.percentile_ms(0.50))),
+            ("inter_token_p90_ms", jsonx::num(tele.inter_token.percentile_ms(0.90))),
+            ("inter_token_p99_ms", jsonx::num(tele.inter_token.percentile_ms(0.99))),
             ("scheduler_steps", jsonx::num(stats.scheduler_steps as f64)),
             ("kv_mb", jsonx::num(engine.kv_bytes() as f64 / 1e6)),
         ]));
         dt.row(vec![
             batch.to_string(),
-            format!("{:.0}", stats.tokens_processed as f64 / secs),
-            stats.scheduler_steps.to_string(),
+            format!("{tok_s_off:.0}"),
+            format!("{tok_s_on:.0}"),
+            format!("{ratio:.3}"),
+            format!("{:.3}", tele.ttft.percentile_ms(0.50)),
+            format!("{:.3}", tele.inter_token.percentile_ms(0.50)),
+            format!("{:.3}", tele.inter_token.percentile_ms(0.99)),
             format!("{:.1}", engine.kv_bytes() as f64 / 1e6),
         ]);
         dt.print_last();
@@ -213,7 +246,7 @@ fn main() -> anyhow::Result<()> {
     save_json(
         BENCH_JSON,
         &jsonx::obj(vec![
-            ("pr", jsonx::num(6.0)),
+            ("pr", jsonx::num(7.0)),
             ("bench", jsonx::s("perf_engine")),
             ("threads", jsonx::num(std::thread::available_parallelism()?.get() as f64)),
             ("gemm_1024x1024", Value::Arr(json_gemm)),

@@ -283,6 +283,9 @@ fn embed_row(model: &PackedModel, token: i32, pos: usize, out: &mut [f32]) {
 /// prefill rows — leaving them zero; a row's logits never depend on the
 /// other rows, so skipping cannot change sampled outputs.
 fn head_logits(model: &PackedModel, x: &[f32], m: usize, select: Option<&[bool]>) -> Tensor {
+    // the vocab projection is the most expensive per-token stage; sampled
+    // telemetry times it without touching the math
+    let t0 = crate::telemetry::kernel::sample_start();
     let cfg = &model.cfg;
     let d = cfg.d_model;
     let emb = model.global("tok_emb");
@@ -303,6 +306,7 @@ fn head_logits(model: &PackedModel, x: &[f32], m: usize, select: Option<&[bool]>
             *o = dot(&hf, &emb.data[vcb * d..(vcb + 1) * d]);
         }
     }
+    crate::telemetry::kernel::record_head(t0);
     out
 }
 

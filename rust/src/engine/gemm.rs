@@ -86,6 +86,8 @@ pub fn packed_gemm(w: &PackedWeight, x: &[f32], y: &mut [f32], m: usize) {
     w.check();
     assert_eq!(x.len(), m * w.din, "x len vs (m={m}, din={})", w.din);
     assert_eq!(y.len(), m * w.dout, "y len vs (m={m}, dout={})", w.dout);
+    // sampled kernel telemetry: observes wall time only, never the math
+    let t0 = crate::telemetry::kernel::sample_start();
     let stripes = plan_stripes(m, w.din, w.dout);
     run_stripes(
         &stripes,
@@ -102,6 +104,7 @@ pub fn packed_gemm(w: &PackedWeight, x: &[f32], y: &mut [f32], m: usize) {
             }
         },
     );
+    crate::telemetry::kernel::record_gemm(w.bits, t0);
 }
 
 /// Workers for a stripe plan: one per stripe up to the core count; serial
@@ -268,6 +271,7 @@ pub fn packed_matvec_grouped(w: &PackedWeight, x: &[f32], y: &mut [f32]) {
     w.check();
     assert_eq!(x.len(), w.din);
     assert_eq!(y.len(), w.dout);
+    let t0 = crate::telemetry::kernel::sample_start();
     let stripes = plan_stripes(1, w.din, w.dout);
     let run = |j0: usize, j1: usize, part: &mut [f32]| {
         debug_assert_eq!(part.len(), j1 - j0);
@@ -301,6 +305,7 @@ pub fn packed_matvec_grouped(w: &PackedWeight, x: &[f32], y: &mut [f32]) {
             *yv += pv;
         }
     });
+    crate::telemetry::kernel::record_gemm(w.bits, t0);
 }
 
 #[cfg(test)]

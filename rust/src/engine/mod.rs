@@ -29,6 +29,7 @@ use anyhow::Result;
 use crate::model::ParamStore;
 use crate::quant::QuantSpec;
 use crate::rngx::Pcg32;
+use crate::telemetry::Recorder;
 
 pub use decode::{forward_full, forward_window, hidden_full, Sampler};
 pub use packed::{PackedLinear, PackedModel};
@@ -46,6 +47,10 @@ pub struct Engine {
     /// every [`generate`](Engine::generate) call. Greedy completions are
     /// bit-identical for any setting; only latency/throughput change.
     pub sched: SchedConfig,
+    /// Telemetry handle cloned into every [`generate`](Engine::generate)
+    /// scheduler session. Disabled by default; enabling it cannot change
+    /// outputs (observation only — asserted by a parity test).
+    pub recorder: Recorder,
     cache: KvCache,
 }
 
@@ -66,7 +71,7 @@ impl Engine {
             model.cfg.seq.max(1),
             model.cfg.d_model,
         );
-        Engine { model, max_batch, sched, cache }
+        Engine { model, max_batch, sched, recorder: Recorder::default(), cache }
     }
 
     /// Quantize + pack a (merged) `ParamStore` and serve it.
@@ -97,6 +102,7 @@ impl Engine {
         seed: u64,
     ) -> Result<(Vec<Completion>, RunStats)> {
         let mut sched = Scheduler::with_config(self.max_batch, self.sched);
+        sched.recorder = self.recorder.clone();
         for r in requests {
             let id = r.id;
             sched.submit(r).map_err(|e| anyhow::anyhow!("request {id}: {e}"))?;

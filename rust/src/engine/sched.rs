@@ -22,6 +22,7 @@ use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::rngx::Pcg32;
+use crate::telemetry::Recorder;
 
 use super::decode::{self, sample_row, Sampler, StepInput};
 use super::kv::KvCache;
@@ -133,6 +134,9 @@ impl Default for SchedConfig {
 struct Pending {
     req: Request,
     deadline: Option<Instant>,
+    /// Submit time — `Some` only when telemetry is live, so the offline
+    /// path never reads the clock.
+    t_submit: Option<Instant>,
 }
 
 struct Active {
@@ -147,6 +151,10 @@ struct Active {
     steps: usize,
     /// Wall-clock eviction point (serving requests only).
     deadline: Option<Instant>,
+    /// Telemetry timestamps (`Some` only when telemetry is live): submit
+    /// time and the previous emitted token, for TTFT / inter-token gaps.
+    t_submit: Option<Instant>,
+    t_last: Option<Instant>,
 }
 
 /// Aggregate serving statistics for one `run`.
@@ -185,6 +193,10 @@ pub struct Scheduler {
     /// Cleared at the start of every tick.
     emitted: Vec<(u64, i32)>,
     pub stats: RunStats,
+    /// Telemetry handle; `Default` is disabled, in which case every
+    /// recording call is an inline no-op and no clock is ever read — the
+    /// scheduled work itself is identical either way (observation only).
+    pub recorder: Recorder,
 }
 
 impl Scheduler {
@@ -202,6 +214,7 @@ impl Scheduler {
             finished: Vec::new(),
             emitted: Vec::new(),
             stats: RunStats::default(),
+            recorder: Recorder::default(),
         }
     }
 
@@ -227,9 +240,17 @@ impl Scheduler {
         }
         if self.cfg.queue_cap > 0 && self.pending.len() >= self.cfg.queue_cap {
             self.stats.shed_requests += 1;
+            let id = req.id;
+            self.recorder.event("shed", || format!("req {id}: pending queue full"));
             return Err(SubmitError::QueueFull { cap: self.cfg.queue_cap });
         }
-        self.pending.push_back(Pending { req, deadline });
+        let prompt_len = req.prompt.len();
+        let max_new = req.max_new;
+        self.recorder.span(req.id, |s| {
+            s.prompt_len = prompt_len;
+            s.max_new = max_new;
+        });
+        self.pending.push_back(Pending { req, deadline, t_submit: self.recorder.now() });
         Ok(())
     }
 
@@ -284,6 +305,14 @@ impl Scheduler {
         let mut kept = VecDeque::with_capacity(self.pending.len());
         for p in self.pending.drain(..) {
             if p.deadline.is_some_and(|d| d <= now) {
+                self.recorder.finished(
+                    p.req.id,
+                    FinishReason::Deadline.label(),
+                    0,
+                    p.t_submit.map(|t| now.duration_since(t)),
+                );
+                let id = p.req.id;
+                self.recorder.event("deadline", || format!("req {id}: expired while queued"));
                 self.finished.push(Completion {
                     id: p.req.id,
                     prompt_len: p.req.prompt.len(),
@@ -305,15 +334,24 @@ impl Scheduler {
     pub fn cancel(&mut self, id: u64, cache: &mut KvCache) -> bool {
         for slot in 0..self.max_batch {
             if self.active[slot].as_ref().is_some_and(|a| a.req.id == id) {
-                self.active[slot] = None;
+                let a = self.active[slot].take().expect("checked is_some");
                 cache.reset(slot);
                 self.stats.cancelled += 1;
+                self.recorder.finished(
+                    id,
+                    "cancelled",
+                    a.generated.len(),
+                    a.t_submit.map(|t| t.elapsed()),
+                );
+                self.recorder.event("cancel", || format!("req {id}: cancelled while live"));
                 return true;
             }
         }
         if let Some(i) = self.pending.iter().position(|p| p.req.id == id) {
-            self.pending.remove(i);
+            let p = self.pending.remove(i).expect("checked position");
             self.stats.cancelled += 1;
+            self.recorder.finished(id, "cancelled", 0, p.t_submit.map(|t| t.elapsed()));
+            self.recorder.event("cancel", || format!("req {id}: cancelled while queued"));
             return true;
         }
         false
@@ -327,6 +365,9 @@ impl Scheduler {
             }
             let Some(p) = self.pending.pop_front() else { break };
             cache.reset(slot);
+            if let Some(t0) = p.t_submit {
+                self.recorder.queue_wait(p.req.id, t0.elapsed());
+            }
             self.active[slot] = Some(Active {
                 req: p.req,
                 slot,
@@ -336,6 +377,8 @@ impl Scheduler {
                 last_sampled: 0,
                 steps: 0,
                 deadline: p.deadline,
+                t_submit: p.t_submit,
+                t_last: None,
             });
         }
     }
@@ -354,6 +397,12 @@ impl Scheduler {
     /// Retire a live sequence into `finished` and free its slot.
     fn finish(&mut self, slot: usize, cache: &mut KvCache, finish: FinishReason) {
         let a = self.active[slot].take().expect("finish on empty slot");
+        self.recorder.finished(
+            a.req.id,
+            finish.label(),
+            a.generated.len(),
+            a.t_submit.map(|t| t.elapsed()),
+        );
         self.finished.push(Completion {
             id: a.req.id,
             prompt_len: a.req.prompt.len(),
@@ -375,6 +424,8 @@ impl Scheduler {
         rng: &mut Pcg32,
     ) -> bool {
         self.emitted.clear();
+        // telemetry tick clock: one read at tick start (None when disabled)
+        let t_tick = self.recorder.now();
         // deadline sweep first, so an expired sequence never costs a step;
         // the clock is only read when a deadline actually exists, keeping
         // the offline `generate` path free of wall-clock dependence
@@ -415,6 +466,8 @@ impl Scheduler {
         // (slot, index of the slot's last row in `batch`, rows this tick)
         let mut groups: Vec<(usize, usize, usize)> = Vec::new();
         let mut needs: Vec<bool> = Vec::new();
+        // phase classification for tick telemetry
+        let (mut prefill_rows, mut decode_rows) = (0usize, 0usize);
         for a in self.active.iter().flatten() {
             let remaining_prompt = a.req.prompt.len() - a.fed;
             let want = if remaining_prompt > 0 {
@@ -426,6 +479,11 @@ impl Scheduler {
             // degrades to token-at-a-time rather than starving anyone
             let n = want.min(budget_left.max(1));
             budget_left = budget_left.saturating_sub(n);
+            if remaining_prompt > 0 {
+                prefill_rows += n;
+            } else {
+                decode_rows += n;
+            }
             for t in 0..n {
                 let token = if a.fed + t < a.req.prompt.len() {
                     a.req.prompt[a.fed + t]
@@ -446,6 +504,8 @@ impl Scheduler {
         self.stats.peak_batch = self.stats.peak_batch.max(batch.len());
 
         let logits = decode::step_select(model, &batch, cache, Some(&needs));
+        // one clock read per tick covers every TTFT/gap sample below
+        let t_now = self.recorder.now();
 
         for (slot, last_row, n) in groups {
             let a = self.active[slot].as_mut().expect("active slot vanished");
@@ -462,6 +522,16 @@ impl Scheduler {
             let tok = sample_row(logits.row(last_row), sampler, rng);
             a.generated.push(tok);
             a.last_sampled = tok;
+            if let Some(now) = t_now {
+                if a.generated.len() == 1 {
+                    if let Some(t0) = a.t_submit {
+                        self.recorder.ttft(a.req.id, now.duration_since(t0));
+                    }
+                } else if let Some(prev) = a.t_last {
+                    self.recorder.gap(a.req.id, now.duration_since(prev));
+                }
+                a.t_last = Some(now);
+            }
             self.emitted.push((a.req.id, tok));
             self.stats.tokens_generated += 1;
             let finish = if a.req.eos == Some(tok) {
@@ -477,6 +547,7 @@ impl Scheduler {
                 self.finish(slot, cache, f);
             }
         }
+        self.recorder.tick(t_tick, prefill_rows, decode_rows);
         self.has_work()
     }
 

@@ -268,6 +268,7 @@ pub fn engine_table(
     stem: &str,
 ) -> Result<Table> {
     use crate::engine::{Engine, PackedModel, Request, Sampler, SchedConfig};
+    use crate::telemetry::Recorder;
     use crate::util::Timer;
 
     let (rt, fp) = ctx.model(model)?;
@@ -280,6 +281,8 @@ pub fn engine_table(
             "hidden_maxdiff",
             "mem_vs_fp16",
             "engine_tok_s_b16",
+            "it_p50_ms",
+            "it_p99_ms",
             "ttft_ms",
             "pjrt_naive_tok_s",
             "shed",
@@ -318,8 +321,11 @@ pub fn engine_table(
         }
         let mem_ratio = pm.fp16_linear_bytes() as f64 / pm.packed_bytes() as f64;
 
-        // engine throughput: 16 concurrent greedy decodes, chunked prefill
+        // engine throughput: 16 concurrent greedy decodes, chunked prefill;
+        // a live recorder rides along so the table also reports inter-token
+        // gap percentiles (telemetry never changes the sampled tokens)
         let mut engine = Engine::with_config(pm, 16, sched);
+        engine.recorder = Recorder::new_enabled();
         let reqs: Vec<Request> = (0..16)
             .map(|i| Request {
                 id: i as u64,
@@ -331,6 +337,11 @@ pub fn engine_table(
         let timer = Timer::start();
         let (_, stats) = engine.generate(reqs, Sampler::Greedy, 0)?;
         let engine_tok_s = stats.tokens_processed as f64 / timer.secs();
+        let (it_p50, it_p99) = engine
+            .recorder
+            .telemetry()
+            .map(|t| (t.inter_token.percentile_ms(0.50), t.inter_token.percentile_ms(0.99)))
+            .unwrap_or((0.0, 0.0));
 
         // TTFT: one near-table-length prompt, chunked prefill, 1 new token
         let ttft_prompt: Vec<i32> =
@@ -345,6 +356,8 @@ pub fn engine_table(
             format!("{max_diff:.2e}"),
             format!("{mem_ratio:.2}x"),
             format!("{engine_tok_s:.0}"),
+            format!("{it_p50:.3}"),
+            format!("{it_p99:.3}"),
             format!("{ttft_ms:.2}"),
             format!("{pjrt_tok_s:.1}"),
             // robustness counters: zero offline, but the serving front-end

@@ -51,6 +51,7 @@ pub mod rngx;
 pub mod server;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod telemetry;
 pub mod tensor;
 #[cfg(feature = "pjrt")]
 pub mod train;

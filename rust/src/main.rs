@@ -15,13 +15,23 @@
 //!             [--deadline-ms D] [--max-new N] [--prefill-chunk N]
 //!             [--token-budget N] [--ckpt DIR] [--load-packed PATH]
 //!             [--fault-tick-ms N] [--fault-admit-ms N]
-//!             [--fault-drop-after N]
+//!             [--fault-drop-after N] [--no-telemetry] [--log-requests]
 //!             — overload-safe HTTP serving over the packed engine:
 //!             POST /v1/completions (OpenAI-style, `"stream": true` for
-//!             SSE), GET /healthz, GET /v1/stats, POST /admin/shutdown.
+//!             SSE), GET /healthz, GET /v1/stats, GET /metrics
+//!             (Prometheus), GET /v1/trace/<id>, GET /v1/journal,
+//!             POST /admin/shutdown.
 //!             Sheds load with 429 + Retry-After past the queue cap,
 //!             evicts expired requests (504/`deadline`), drains
 //!             gracefully on SIGTERM. Pure host, no artifacts.
+//!   profile   --model NAME [--config C] [--batch B] [--max-new N]
+//!             [--n N] [--prefill-chunk N] [--token-budget N]
+//!             [--ckpt DIR] [--load-packed PATH]
+//!             — run a canned mixed-length greedy workload with telemetry
+//!             and sampled kernel timing enabled, then print the latency
+//!             breakdown (queue wait / TTFT / inter-token / tick phases /
+//!             kernels) and save it to results/profile_latency.{md,csv}.
+//!             Pure host, no artifacts.
 //!   train     --model NAME | --all  [--steps N] [--out DIR]      (pjrt)
 //!   quantize  --model NAME --method M --config w3a16g128 [--alpha A]
 //!   eval      --model NAME [--method M --config C] [--zeroshot]  (pjrt)
@@ -38,7 +48,9 @@ fn main() -> Result<()> {
     let cli = match Cli::from_env() {
         Ok(c) => c,
         Err(_) => {
-            eprintln!("usage: affinequant <generate|serve|train|quantize|eval|info> [--options]");
+            eprintln!(
+                "usage: affinequant <generate|serve|profile|train|quantize|eval|info> [--options]"
+            );
             std::process::exit(2);
         }
     };
@@ -47,6 +59,9 @@ fn main() -> Result<()> {
     }
     if cli.cmd == "serve" {
         return cmd_serve(&cli);
+    }
+    if cli.cmd == "profile" {
+        return cmd_profile(&cli);
     }
     pjrt_main(cli)
 }
@@ -165,6 +180,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             admit_delay_ms: cli.usize_or("fault-admit-ms", 0) as u64,
             drop_after_tokens: cli.usize_or("fault-drop-after", 0),
         },
+        telemetry: !cli.flag("no-telemetry"),
+        log_requests: cli.flag("log-requests"),
     };
     eprintln!("[serve] {}", engine.memory_report());
     if cfg.fault.active() {
@@ -179,6 +196,83 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     );
     handle.join();
     eprintln!("[serve] drained; bye");
+    Ok(())
+}
+
+/// Telemetry exhibit: run a canned mixed-length greedy workload with the
+/// recorder and sampled kernel timing on, then print where the time went.
+fn cmd_profile(cli: &Cli) -> Result<()> {
+    use affinequant::benchx::Table;
+    use affinequant::engine::{Request, Sampler};
+    use affinequant::telemetry::{kernel, Histogram, Recorder};
+    use affinequant::util::human_secs;
+    use affinequant::util::Timer;
+
+    let mut engine = build_engine(cli, "profile")?;
+    engine.recorder = Recorder::new_enabled();
+    kernel::enable(true);
+    eprintln!("[profile] {}", engine.memory_report());
+
+    // canned workload: n requests with staggered prompt lengths (1/4, 1/2,
+    // 3/4 of the context window) so prefill, decode, and mixed ticks all
+    // show up in the phase split
+    let n = cli.usize_or("n", 6).max(1);
+    let max_new = cli.usize_or("max-new", 32);
+    let seq = engine.model.cfg.seq;
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            let plen = (seq * (1 + i % 3) / 4).saturating_sub(max_new).max(1);
+            Request {
+                id: i as u64 + 1,
+                prompt: (0..plen).map(|j| (j % 251) as i32).collect(),
+                max_new,
+                eos: None,
+            }
+        })
+        .collect();
+    let t = Timer::start();
+    let (_completions, stats) = engine.generate(reqs, Sampler::Greedy, 1)?;
+    let secs = t.secs();
+    eprintln!(
+        "[profile] {} tokens generated (+{} prefill) in {} — {:.1} tok/s",
+        stats.tokens_generated,
+        stats.tokens_processed - stats.tokens_generated,
+        human_secs(secs),
+        stats.tokens_processed as f64 / secs.max(1e-9),
+    );
+
+    let tele = engine.recorder.telemetry().expect("recorder was enabled above");
+    let mut table = Table::new(
+        "latency breakdown (profile workload)",
+        &["stage", "count", "p50 ms", "p90 ms", "p99 ms", "mean ms"],
+    );
+    let mut push = |stage: &str, h: &Histogram| {
+        table.row(vec![
+            stage.to_string(),
+            h.count().to_string(),
+            format!("{:.3}", h.percentile_ms(0.50)),
+            format!("{:.3}", h.percentile_ms(0.90)),
+            format!("{:.3}", h.percentile_ms(0.99)),
+            format!("{:.3}", h.mean_ms()),
+        ]);
+    };
+    push("queue_wait", &tele.queue_wait);
+    push("ttft", &tele.ttft);
+    push("inter_token", &tele.inter_token);
+    push("request", &tele.request);
+    push("tick", &tele.tick);
+    push("tick_prefill", &tele.tick_prefill);
+    push("tick_decode", &tele.tick_decode);
+    push("tick_mixed", &tele.tick_mixed);
+    let ks = kernel::stats();
+    for (i, label) in kernel::BITS_LABELS.iter().enumerate() {
+        if ks.gemm[i].count() > 0 {
+            push(&format!("gemm_w{label}"), &ks.gemm[i]);
+        }
+    }
+    push("head_logits", &ks.head);
+    table.print();
+    affinequant::report::save_table(&table, "profile_latency")?;
     Ok(())
 }
 

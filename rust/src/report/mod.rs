@@ -1,7 +1,20 @@
 //! Result recording: CSV/markdown writers under `results/`.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::benchx::Table;
 use crate::util::ensure_parent;
+
+/// Process-wide monotonic sequence for [`log_line`] stamps.
+static LOG_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Prefix `line` with the next value of the monotonic sequence counter —
+/// `[000042] line`. Lines written by concurrent threads interleave in the
+/// file, but their stamps give a total order over emission.
+pub fn stamp(line: &str) -> String {
+    let seq = LOG_SEQ.fetch_add(1, Ordering::Relaxed);
+    format!("[{seq:06}] {line}")
+}
 
 /// Write a table to `results/<stem>.md` and `results/<stem>.csv`.
 pub fn save_table(table: &Table, stem: &str) -> std::io::Result<()> {
@@ -26,7 +39,7 @@ pub fn save_json(path: &str, v: &crate::jsonx::Value) -> std::io::Result<()> {
     Ok(())
 }
 
-/// Append a line to results/log.txt with a timestamp counter.
+/// Append a line to results/log.txt with a timestamp counter ([`stamp`]).
 pub fn log_line(line: &str) -> std::io::Result<()> {
     use std::io::Write;
     ensure_parent("results/log.txt")?;
@@ -34,7 +47,7 @@ pub fn log_line(line: &str) -> std::io::Result<()> {
         .create(true)
         .append(true)
         .open("results/log.txt")?;
-    writeln!(f, "{line}")
+    writeln!(f, "{}", stamp(line))
 }
 
 /// Save (x, y) series as CSV for the figure benches.
@@ -53,6 +66,23 @@ pub fn save_series(stem: &str, header: &str, rows: &[(f64, f64)]) -> std::io::Re
 
 #[cfg(test)]
 mod tests {
+    #[test]
+    fn stamp_is_monotonic_and_formatted() {
+        // other tests may also draw from the shared sequence, so assert
+        // strict ordering of this thread's draws rather than exact values
+        let a = super::stamp("hello");
+        let b = super::stamp("world");
+        let seq = |s: &str| -> u64 {
+            assert!(s.starts_with('['), "{s}");
+            let close = s.find(']').unwrap();
+            assert!(close >= 7, "zero-padded to 6 digits: {s}");
+            s[1..close].parse().unwrap()
+        };
+        assert!(seq(&b) > seq(&a), "{a} then {b}");
+        assert!(a.ends_with("] hello"));
+        assert!(b.ends_with("] world"));
+    }
+
     #[test]
     fn series_format() {
         // formatting only; file IO covered by integration tests

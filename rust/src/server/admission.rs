@@ -16,6 +16,8 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::telemetry::Recorder;
+
 /// Why admission refused a request (both are 429s upstream).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdmitError {
@@ -49,10 +51,22 @@ pub struct Admission {
     pub admitted: AtomicU64,
     pub shed_capacity: AtomicU64,
     pub shed_client: AtomicU64,
+    /// Journals shed decisions for post-mortems; disabled by default.
+    recorder: Recorder,
 }
 
 impl Admission {
     pub fn new(max_in_flight: usize, client_cap: usize) -> Arc<Admission> {
+        Admission::with_recorder(max_in_flight, client_cap, Recorder::default())
+    }
+
+    /// [`new`](Admission::new) with a telemetry handle: every shed —
+    /// global ceiling or per-client cap — lands in the event journal.
+    pub fn with_recorder(
+        max_in_flight: usize,
+        client_cap: usize,
+        recorder: Recorder,
+    ) -> Arc<Admission> {
         Arc::new(Admission {
             max_in_flight,
             client_cap,
@@ -61,6 +75,7 @@ impl Admission {
             admitted: AtomicU64::new(0),
             shed_capacity: AtomicU64::new(0),
             shed_client: AtomicU64::new(0),
+            recorder,
         })
     }
 
@@ -78,6 +93,9 @@ impl Admission {
             let n = clients.entry(client.to_string()).or_insert(0);
             if *n >= self.client_cap {
                 self.shed_client.fetch_add(1, Ordering::Relaxed);
+                let cap = self.client_cap;
+                self.recorder
+                    .event("shed_client", || format!("client {client} at its cap ({cap})"));
                 return Err(AdmitError::ClientCap { cap: self.client_cap });
             }
             *n += 1;
@@ -89,6 +107,10 @@ impl Admission {
                 if cur >= self.max_in_flight {
                     self.release_client(client);
                     self.shed_capacity.fetch_add(1, Ordering::Relaxed);
+                    let cap = self.max_in_flight;
+                    self.recorder.event("shed_capacity", || {
+                        format!("client {client}: in-flight ceiling ({cur}/{cap})")
+                    });
                     return Err(AdmitError::Capacity {
                         in_flight: cur,
                         cap: self.max_in_flight,
@@ -179,6 +201,18 @@ mod tests {
             let p = adm.try_admit("b").unwrap();
             drop(p);
         }
+    }
+
+    #[test]
+    fn sheds_are_journaled() {
+        let rec = Recorder::new_enabled();
+        let adm = Admission::with_recorder(1, 1, rec.clone());
+        let _p = adm.try_admit("a").unwrap();
+        let _ = adm.try_admit("a").unwrap_err(); // per-client cap
+        let _ = adm.try_admit("b").unwrap_err(); // global ceiling
+        let t = rec.telemetry().unwrap();
+        let kinds: Vec<&str> = t.journal.snapshot().iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec!["shed_client", "shed_capacity"]);
     }
 
     #[test]

@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 
 use crate::engine::{Completion, Engine, Request, Sampler, Scheduler, SubmitError};
 use crate::rngx::Pcg32;
+use crate::telemetry::Recorder;
 
 use super::fault::FaultConfig;
 
@@ -71,11 +72,13 @@ pub fn run(
     seed: u64,
     fault: FaultConfig,
     gauges: &EngineGauges,
+    recorder: &Recorder,
 ) {
     let sched_cfg = engine.sched;
     let max_batch = engine.max_batch;
     let (model, cache) = engine.parts();
     let mut sched = Scheduler::with_config(max_batch, sched_cfg);
+    sched.recorder = recorder.clone();
     let mut rng = Pcg32::seeded(seed);
     let mut streams: HashMap<u64, Sender<StreamEvent>> = HashMap::new();
     let mut closed = false;

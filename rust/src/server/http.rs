@@ -101,6 +101,12 @@ fn read_line<R: BufRead>(r: &mut R) -> Result<String, String> {
     String::from_utf8(buf).map_err(|_| "non-utf8 header bytes".into())
 }
 
+/// Tiny route-parameter extractor: the non-empty suffix of `path` after
+/// `prefix` (`path_param("/v1/trace/abc", "/v1/trace/") == Some("abc")`).
+pub fn path_param<'a>(path: &'a str, prefix: &str) -> Option<&'a str> {
+    path.strip_prefix(prefix).filter(|rest| !rest.is_empty())
+}
+
 pub fn status_reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
@@ -157,12 +163,27 @@ pub struct ChunkedWriter<W: Write> {
 }
 
 impl<W: Write> ChunkedWriter<W> {
-    pub fn start(mut w: W, status: u16, content_type: &str) -> std::io::Result<ChunkedWriter<W>> {
+    pub fn start(w: W, status: u16, content_type: &str) -> std::io::Result<ChunkedWriter<W>> {
+        ChunkedWriter::start_with(w, status, content_type, &[])
+    }
+
+    /// [`start`](ChunkedWriter::start) with extra response headers (e.g.
+    /// the `X-Request-Id` echo on token streams).
+    pub fn start_with(
+        mut w: W,
+        status: u16,
+        content_type: &str,
+        extra_headers: &[(&str, String)],
+    ) -> std::io::Result<ChunkedWriter<W>> {
         write!(
             w,
-            "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+            "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n",
             status_reason(status),
         )?;
+        for (k, v) in extra_headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
         w.flush()?;
         Ok(ChunkedWriter { w })
     }
@@ -233,6 +254,30 @@ mod tests {
         assert!(s.contains("Transfer-Encoding: chunked"));
         assert!(s.contains("a\r\ndata: hi\n\n\r\n"), "{s}");
         assert!(s.ends_with("0\r\n\r\n"));
+    }
+
+    #[test]
+    fn path_param_extracts_suffix() {
+        assert_eq!(path_param("/v1/trace/abc", "/v1/trace/"), Some("abc"));
+        assert_eq!(path_param("/v1/trace/req-0a", "/v1/trace/"), Some("req-0a"));
+        assert_eq!(path_param("/v1/trace/", "/v1/trace/"), None);
+        assert_eq!(path_param("/v1/stats", "/v1/trace/"), None);
+    }
+
+    #[test]
+    fn chunked_start_with_emits_extra_headers() {
+        let mut out = Vec::new();
+        let cw = ChunkedWriter::start_with(
+            &mut out,
+            200,
+            "text/event-stream",
+            &[("X-Request-Id", "req-7".into())],
+        )
+        .unwrap();
+        drop(cw);
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("X-Request-Id: req-7\r\n"), "{s}");
+        assert!(s.ends_with("\r\n\r\n"));
     }
 
     #[test]

@@ -57,6 +57,7 @@ use anyhow::{Context, Result};
 
 use crate::engine::{Completion, Engine, FinishReason, Request, Sampler, SubmitError};
 use crate::jsonx::{self, Value};
+use crate::telemetry::{self, Histogram, Recorder, Span, Telemetry};
 
 use admission::{Admission, AdmitError};
 use engine_loop::{EngineGauges, Job, StreamEvent};
@@ -88,6 +89,14 @@ pub struct ServerConfig {
     /// RNG seed for the serving session (relevant to top-k only).
     pub seed: u64,
     pub fault: FaultConfig,
+    /// Collect latency histograms, request spans, and the event journal
+    /// (`/metrics`, `/v1/trace/<id>`, `/v1/journal`). Off = the zero-cost
+    /// path: counters still work, but no clock reads besides deadlines.
+    pub telemetry: bool,
+    /// Append one [`crate::report::log_line`] per finished completion
+    /// request (stamped with the monotonic sequence counter). Off by
+    /// default so embedded servers (tests) do not write `results/`.
+    pub log_requests: bool,
 }
 
 impl Default for ServerConfig {
@@ -103,6 +112,8 @@ impl Default for ServerConfig {
             sampler: Sampler::Greedy,
             seed: 0,
             fault: FaultConfig::default(),
+            telemetry: true,
+            log_requests: false,
         }
     }
 }
@@ -131,6 +142,9 @@ struct Ctx {
     draining: Arc<AtomicBool>,
     metrics: Arc<Metrics>,
     gauges: Arc<EngineGauges>,
+    /// Live when `cfg.telemetry`; shares the registry with the engine
+    /// thread's scheduler session.
+    recorder: Recorder,
 }
 
 /// A running server; dropping the handle does NOT stop it — call
@@ -143,6 +157,9 @@ pub struct ServerHandle {
     threads: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     pub gauges: Arc<EngineGauges>,
+    /// The metric registry behind `/metrics`; `None` when telemetry is
+    /// disabled in the config.
+    pub telemetry: Option<Arc<Telemetry>>,
 }
 
 impl ServerHandle {
@@ -201,7 +218,18 @@ impl Server {
         let draining = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Metrics::default());
         let gauges = Arc::new(EngineGauges::default());
-        let admission = Admission::new(max_batch + cfg.queue_cap, cfg.client_cap);
+        let tele = cfg.telemetry.then(Telemetry::new);
+        let recorder = match &tele {
+            Some(t) => Recorder::from_telemetry(Arc::clone(t)),
+            None => Recorder::default(),
+        };
+        if cfg.telemetry {
+            // sampled kernel timing is process-global; a telemetry-off
+            // server leaves whatever another enabled alone
+            telemetry::kernel::enable(true);
+        }
+        let admission =
+            Admission::with_recorder(max_batch + cfg.queue_cap, cfg.client_cap, recorder.clone());
         let (job_tx, job_rx) = channel::<Job>();
         let (conn_tx, conn_rx) = channel::<TcpStream>();
         let conn_rx = Arc::new(Mutex::new(conn_rx));
@@ -215,6 +243,7 @@ impl Server {
             draining: Arc::clone(&draining),
             metrics: Arc::clone(&metrics),
             gauges: Arc::clone(&gauges),
+            recorder: recorder.clone(),
             cfg: ServerConfig { fault, ..cfg },
         });
 
@@ -226,8 +255,9 @@ impl Server {
             let gauges = Arc::clone(&gauges);
             let sampler = ctx.cfg.sampler;
             let seed = ctx.cfg.seed;
+            let recorder = recorder.clone();
             threads.push(std::thread::spawn(move || {
-                engine_loop::run(&mut engine, job_rx, sampler, seed, fault, &gauges);
+                engine_loop::run(&mut engine, job_rx, sampler, seed, fault, &gauges, &recorder);
             }));
         }
 
@@ -272,7 +302,7 @@ impl Server {
             }));
         }
 
-        Ok(ServerHandle { addr, draining, threads, metrics, gauges })
+        Ok(ServerHandle { addr, draining, threads, metrics, gauges, telemetry: tele })
     }
 }
 
@@ -311,6 +341,35 @@ fn handle_connection(stream: TcpStream, ctx: &Ctx) {
         ("GET", "/v1/stats") => {
             let _ = http::write_json(&mut writer, 200, &[], &stats_json(ctx));
         }
+        ("GET", "/metrics") => {
+            let _ = http::write_response(
+                &mut writer,
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                &[],
+                metrics_text(ctx).as_bytes(),
+            );
+        }
+        ("GET", p) if p.starts_with("/v1/trace/") => {
+            let span = http::path_param(p, "/v1/trace/")
+                .and_then(|key| ctx.recorder.telemetry().and_then(|t| t.traces.lookup(key)));
+            match span {
+                Some(s) => {
+                    let _ = http::write_json(&mut writer, 200, &[], &trace_json(&s));
+                }
+                None => {
+                    let _ = http::write_json(&mut writer, 404, &[], &err_json("no such trace"));
+                }
+            }
+        }
+        ("GET", "/v1/journal") => match ctx.recorder.telemetry() {
+            Some(t) => {
+                let _ = http::write_json(&mut writer, 200, &[], &journal_json(t));
+            }
+            None => {
+                let _ = http::write_json(&mut writer, 404, &[], &err_json("telemetry disabled"));
+            }
+        },
         ("POST", "/admin/shutdown") => {
             ctx.draining.store(true, Ordering::SeqCst);
             let _ = http::write_json(&mut writer, 202, &[], "{\"status\":\"draining\"}");
@@ -375,16 +434,42 @@ fn get_num(v: &Value, keys: &[&str]) -> Option<f64> {
 }
 
 fn handle_completions(req: &http::HttpRequest, writer: &mut TcpStream, ctx: &Ctx, peer: &str) {
+    // allocate the engine id + externally visible trace id up front, so
+    // every response on this path — 2xx, 429, 504, even 400 — carries an
+    // `X-Request-Id` echo and is correlatable in client logs
+    let id = ctx.next_id.fetch_add(1, Ordering::Relaxed);
+    let trace_id = match req.header("x-request-id") {
+        Some(h) if !h.trim().is_empty() => h.trim().chars().take(120).collect::<String>(),
+        _ => format!("req-{id:08x}"),
+    };
+    let rid = ("X-Request-Id", trace_id.clone());
+    let with_retry = |ctx: &Ctx| {
+        let mut h = retry_after(ctx);
+        h.push(("X-Request-Id", trace_id.clone()));
+        h
+    };
+
     if ctx.draining.load(Ordering::SeqCst) {
         ctx.metrics.unavailable_503.fetch_add(1, Ordering::Relaxed);
-        let _ = http::write_json(writer, 503, &retry_after(ctx), &err_json("server is draining"));
+        let _ = http::write_json(
+            writer,
+            503,
+            &with_retry(ctx),
+            &err_json_id("server is draining", &trace_id),
+        );
         return;
     }
     let params = match parse_completion(&req.body, ctx, peer) {
         Ok(p) => p,
         Err(e) => {
             ctx.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
-            let _ = http::write_json(writer, 400, &[], &err_json(&e));
+            ctx.recorder.event("bad_request", || format!("{trace_id}: {e}"));
+            let _ = http::write_json(
+                writer,
+                400,
+                std::slice::from_ref(&rid),
+                &err_json_id(&e, &trace_id),
+            );
             return;
         }
     };
@@ -392,17 +477,28 @@ fn handle_completions(req: &http::HttpRequest, writer: &mut TcpStream, ctx: &Ctx
         std::thread::sleep(Duration::from_millis(ctx.cfg.fault.admit_delay_ms));
     }
 
+    // span identity: the engine side fills in timings keyed by the same id
+    ctx.recorder.span(id, |s| {
+        s.trace_id = trace_id.clone();
+        s.client = params.client.clone();
+    });
+
     // admission: cheap shed before the engine thread is involved
     let _permit = match ctx.admission.try_admit(&params.client) {
         Ok(p) => p,
         Err(e) => {
             ctx.metrics.shed_429.fetch_add(1, Ordering::Relaxed);
-            let _ = http::write_json(writer, 429, &retry_after(ctx), &err_json(&e.to_string()));
+            ctx.recorder.span(id, |s| s.outcome = "shed".to_string());
+            let _ = http::write_json(
+                writer,
+                429,
+                &with_retry(ctx),
+                &err_json_id(&e.to_string(), &trace_id),
+            );
             return;
         }
     };
 
-    let id = ctx.next_id.fetch_add(1, Ordering::Relaxed);
     let deadline = (params.deadline_ms > 0)
         .then(|| Instant::now() + Duration::from_millis(params.deadline_ms));
     let (tx, rx) = channel::<StreamEvent>();
@@ -413,7 +509,13 @@ fn handle_completions(req: &http::HttpRequest, writer: &mut TcpStream, ctx: &Ctx
     };
     if ctx.job_tx.send(job).is_err() {
         ctx.metrics.unavailable_503.fetch_add(1, Ordering::Relaxed);
-        let _ = http::write_json(writer, 503, &retry_after(ctx), &err_json("engine stopped"));
+        ctx.recorder.span(id, |s| s.outcome = "engine_stopped".to_string());
+        let _ = http::write_json(
+            writer,
+            503,
+            &with_retry(ctx),
+            &err_json_id("engine stopped", &trace_id),
+        );
         return;
     }
 
@@ -422,7 +524,13 @@ fn handle_completions(req: &http::HttpRequest, writer: &mut TcpStream, ctx: &Ctx
         Ok(ev) => ev,
         Err(RecvTimeoutError::Timeout | RecvTimeoutError::Disconnected) => {
             ctx.metrics.unavailable_503.fetch_add(1, Ordering::Relaxed);
-            let _ = http::write_json(writer, 503, &retry_after(ctx), &err_json("engine stalled"));
+            ctx.recorder.span(id, |s| s.outcome = "engine_stalled".to_string());
+            let _ = http::write_json(
+                writer,
+                503,
+                &with_retry(ctx),
+                &err_json_id("engine stalled", &trace_id),
+            );
             return;
         }
     };
@@ -432,48 +540,58 @@ fn handle_completions(req: &http::HttpRequest, writer: &mut TcpStream, ctx: &Ctx
             // race that slips past the ceiling still sheds, never queues
             SubmitError::QueueFull { .. } => {
                 ctx.metrics.shed_429.fetch_add(1, Ordering::Relaxed);
-                (429, retry_after(ctx))
+                (429, with_retry(ctx))
             }
             SubmitError::EmptyPrompt | SubmitError::ZeroMaxNew => {
                 ctx.metrics.bad_requests.fetch_add(1, Ordering::Relaxed);
-                (400, Vec::new())
+                (400, vec![("X-Request-Id", trace_id.clone())])
             }
         };
-        let _ = http::write_json(writer, status, &extra, &err_json(&e.to_string()));
+        ctx.recorder.span(id, |s| s.outcome = "rejected".to_string());
+        let _ = http::write_json(writer, status, &extra, &err_json_id(&e.to_string(), &trace_id));
         return;
     }
 
-    if params.stream {
-        stream_response(writer, ctx, first, &rx);
+    let outcome = if params.stream {
+        stream_response(writer, ctx, first, &rx, &trace_id)
     } else {
-        buffered_response(writer, ctx, first, &rx);
+        buffered_response(writer, ctx, first, &rx, &trace_id)
+    };
+    if ctx.cfg.log_requests {
+        let _ = crate::report::log_line(&format!(
+            "completion {trace_id} client={} max_new={} outcome={outcome}",
+            params.client, params.max_new,
+        ));
     }
 }
 
 /// Buffered (non-streaming) mode: collect everything, one JSON response.
 /// [`FinishReason::Deadline`] maps to 504 with the partial text attached.
+/// Returns the outcome label for the request log.
 fn buffered_response(
     writer: &mut TcpStream,
     ctx: &Ctx,
     first: StreamEvent,
     rx: &Receiver<StreamEvent>,
-) {
+    trace_id: &str,
+) -> &'static str {
+    let rid = [("X-Request-Id", trace_id.to_string())];
     let mut ev = first;
     loop {
         match ev {
             StreamEvent::Done(c) => {
-                let status = match c.finish {
+                let (status, outcome) = match c.finish {
                     FinishReason::Deadline => {
                         ctx.metrics.deadline_504.fetch_add(1, Ordering::Relaxed);
-                        504
+                        (504, "deadline")
                     }
                     _ => {
                         ctx.metrics.completed_2xx.fetch_add(1, Ordering::Relaxed);
-                        200
+                        (200, c.finish.label())
                     }
                 };
-                let _ = http::write_json(writer, status, &[], &completion_json(ctx, &c));
-                return;
+                let _ = http::write_json(writer, status, &rid, &completion_json(ctx, &c, trace_id));
+                return outcome;
             }
             StreamEvent::Token(_) => {} // accumulated inside the Completion
             StreamEvent::Rejected(_) => unreachable!("terminal event handled by caller"),
@@ -481,8 +599,9 @@ fn buffered_response(
         ev = match rx.recv() {
             Ok(ev) => ev,
             Err(_) => {
-                let _ = http::write_json(writer, 503, &[], &err_json("engine stopped"));
-                return;
+                let _ =
+                    http::write_json(writer, 503, &rid, &err_json_id("engine stopped", trace_id));
+                return "engine_stopped";
             }
         };
     }
@@ -497,10 +616,14 @@ fn stream_response(
     ctx: &Ctx,
     first: StreamEvent,
     rx: &Receiver<StreamEvent>,
-) {
-    let Ok(mut out) = http::ChunkedWriter::start(&mut *writer, 200, "text/event-stream") else {
+    trace_id: &str,
+) -> &'static str {
+    let rid = [("X-Request-Id", trace_id.to_string())];
+    let Ok(mut out) =
+        http::ChunkedWriter::start_with(&mut *writer, 200, "text/event-stream", &rid)
+    else {
         ctx.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
-        return;
+        return "disconnect";
     };
     let mut index = 0usize;
     let mut ev = first;
@@ -515,7 +638,7 @@ fn stream_response(
                 if out.chunk(format!("data: {body}\n\n").as_bytes()).is_err() {
                     // client gone mid-stream; rx drops here → slot freed
                     ctx.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
-                    return;
+                    return "disconnect";
                 }
                 index += 1;
                 if ctx.cfg.fault.drop_after_tokens > 0 && index >= ctx.cfg.fault.drop_after_tokens
@@ -523,7 +646,7 @@ fn stream_response(
                     // injected mid-stream failure: vanish without a
                     // terminator, exactly like a cut connection
                     ctx.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
-                    return;
+                    return "disconnect";
                 }
             }
             StreamEvent::Done(c) => {
@@ -531,7 +654,8 @@ fn stream_response(
                 if c.finish == FinishReason::Deadline {
                     ctx.metrics.deadline_504.fetch_add(1, Ordering::Relaxed);
                 }
-                let fin = format!("data: {}\n\n", completion_json(ctx, &c));
+                let outcome = c.finish.label();
+                let fin = format!("data: {}\n\n", completion_json(ctx, &c, trace_id));
                 let ok = out.chunk(fin.as_bytes()).is_ok()
                     && out.chunk(b"data: [DONE]\n\n").is_ok();
                 if ok {
@@ -539,13 +663,13 @@ fn stream_response(
                 } else {
                     ctx.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
                 }
-                return;
+                return outcome;
             }
             StreamEvent::Rejected(_) => unreachable!("terminal event handled by caller"),
         }
         ev = match rx.recv() {
             Ok(ev) => ev,
-            Err(_) => return, // engine stopped; stream ends without [DONE]
+            Err(_) => return "engine_stopped", // stream ends without [DONE]
         };
     }
 }
@@ -556,6 +680,15 @@ fn err_json(msg: &str) -> String {
     jsonx::emit(&jsonx::obj(vec![("error", jsonx::s(msg))]))
 }
 
+/// [`err_json`] carrying the request's trace id, so shed/timed-out/refused
+/// requests are correlatable in client logs.
+fn err_json_id(msg: &str, trace_id: &str) -> String {
+    jsonx::emit(&jsonx::obj(vec![
+        ("error", jsonx::s(msg)),
+        ("request_id", jsonx::s(trace_id)),
+    ]))
+}
+
 fn retry_after(ctx: &Ctx) -> Vec<(&'static str, String)> {
     vec![("Retry-After", ctx.cfg.retry_after_s.to_string())]
 }
@@ -564,10 +697,11 @@ fn token_text(tok: i32) -> String {
     String::from_utf8_lossy(&[tok as u8]).into_owned()
 }
 
-fn completion_json(ctx: &Ctx, c: &Completion) -> String {
+fn completion_json(ctx: &Ctx, c: &Completion, trace_id: &str) -> String {
     let bytes: Vec<u8> = c.tokens.iter().map(|&t| t as u8).collect();
     jsonx::emit(&jsonx::obj(vec![
         ("id", jsonx::num(c.id as f64)),
+        ("request_id", jsonx::s(trace_id)),
         ("object", jsonx::s("text_completion")),
         ("model", jsonx::s(&ctx.model_name)),
         ("text", jsonx::s(&String::from_utf8_lossy(&bytes))),
@@ -586,7 +720,7 @@ fn stats_json(ctx: &Ctx) -> String {
     let m = &ctx.metrics;
     let a = &ctx.admission;
     let n = |v: u64| jsonx::num(v as f64);
-    jsonx::emit(&jsonx::obj(vec![
+    let mut fields = vec![
         ("draining", Value::Bool(ctx.draining.load(Ordering::SeqCst))),
         ("max_batch", jsonx::num(ctx.max_batch as f64)),
         ("queue_cap", jsonx::num(ctx.cfg.queue_cap as f64)),
@@ -626,5 +760,166 @@ fn stats_json(ctx: &Ctx) -> String {
                 ("disconnects", n(m.disconnects.load(Ordering::Relaxed))),
             ]),
         ),
+    ];
+    if let Some(t) = ctx.recorder.telemetry() {
+        fields.push((
+            "latency",
+            jsonx::obj(vec![
+                ("ttft", hist_summary(&t.ttft)),
+                ("inter_token", hist_summary(&t.inter_token)),
+                ("queue_wait", hist_summary(&t.queue_wait)),
+                ("request", hist_summary(&t.request)),
+                ("tick", hist_summary(&t.tick)),
+            ]),
+        ));
+        fields.push((
+            "engine",
+            jsonx::obj(vec![
+                ("ticks", n(t.ticks.load(Ordering::Relaxed))),
+                ("prefill_rows", n(t.prefill_rows.load(Ordering::Relaxed))),
+                ("decode_rows", n(t.decode_rows.load(Ordering::Relaxed))),
+            ]),
+        ));
+    }
+    jsonx::emit(&jsonx::obj(fields))
+}
+
+/// Count + percentile summary of one histogram for the JSON surfaces.
+fn hist_summary(h: &Histogram) -> Value {
+    jsonx::obj(vec![
+        ("count", jsonx::num(h.count() as f64)),
+        ("p50_ms", jsonx::num(h.percentile_ms(0.50))),
+        ("p90_ms", jsonx::num(h.percentile_ms(0.90))),
+        ("p99_ms", jsonx::num(h.percentile_ms(0.99))),
+        ("mean_ms", jsonx::num(h.mean_ms())),
+    ])
+}
+
+/// One span rendered for `GET /v1/trace/<id>`. Negative duration fields
+/// mean "not reached" and are omitted rather than rendered as -1.
+fn trace_json(s: &Span) -> String {
+    let mut fields = vec![
+        ("id", jsonx::num(s.id as f64)),
+        ("request_id", jsonx::s(&s.trace_id)),
+        ("client", jsonx::s(&s.client)),
+        ("prompt_len", jsonx::num(s.prompt_len as f64)),
+        ("max_new", jsonx::num(s.max_new as f64)),
+        ("tokens", jsonx::num(s.tokens as f64)),
+        (
+            "outcome",
+            jsonx::s(if s.outcome.is_empty() { "in_flight" } else { &s.outcome }),
+        ),
+        ("gap_count", jsonx::num(s.gap_count as f64)),
+        ("mean_gap_ms", jsonx::num(s.mean_gap_ms())),
+        ("max_gap_ms", jsonx::num(s.gap_max_ms)),
+    ];
+    if s.queue_wait_ms >= 0.0 {
+        fields.push(("queue_wait_ms", jsonx::num(s.queue_wait_ms)));
+    }
+    if s.ttft_ms >= 0.0 {
+        fields.push(("ttft_ms", jsonx::num(s.ttft_ms)));
+    }
+    if s.total_ms >= 0.0 {
+        fields.push(("total_ms", jsonx::num(s.total_ms)));
+    }
+    jsonx::emit(&jsonx::obj(fields))
+}
+
+/// The event journal for `GET /v1/journal` (bounded ring; `total` counts
+/// everything ever pushed, so `total - events.len()` is how many wrapped).
+fn journal_json(t: &Telemetry) -> String {
+    let events: Vec<Value> = t
+        .journal
+        .snapshot()
+        .iter()
+        .map(|e| {
+            jsonx::obj(vec![
+                ("seq", jsonx::num(e.seq as f64)),
+                ("at_ms", jsonx::num(e.at_ms as f64)),
+                ("kind", jsonx::s(e.kind)),
+                ("detail", jsonx::s(&e.detail)),
+            ])
+        })
+        .collect();
+    jsonx::emit(&jsonx::obj(vec![
+        ("total", jsonx::num(t.journal.total() as f64)),
+        ("capacity", jsonx::num(t.journal.capacity() as f64)),
+        ("events", Value::Arr(events)),
     ]))
+}
+
+/// `GET /metrics` — Prometheus text exposition 0.0.4. Counters and gauges
+/// are always present (they are plain atomics); the histogram families
+/// appear only when telemetry is on, and the sampled kernel families
+/// whenever the process-global kernel timer has observations.
+fn metrics_text(ctx: &Ctx) -> String {
+    use telemetry::{
+        prom_counter, prom_gauge, prom_histogram, prom_histogram_header, prom_histogram_series,
+    };
+    let m = &ctx.metrics;
+    let g = &ctx.gauges;
+    let a = &ctx.admission;
+    let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+    let mut out = String::new();
+
+    // HTTP front door
+    prom_counter(&mut out, "aq_http_connections_total", "TCP connections accepted", ld(&m.connections));
+    prom_counter(&mut out, "aq_http_requests_total", "HTTP requests parsed", ld(&m.requests));
+    prom_counter(&mut out, "aq_http_completed_2xx_total", "completions answered 2xx", ld(&m.completed_2xx));
+    prom_counter(&mut out, "aq_http_bad_requests_total", "requests answered 400", ld(&m.bad_requests));
+    prom_counter(&mut out, "aq_http_shed_429_total", "requests shed with 429", ld(&m.shed_429));
+    prom_counter(&mut out, "aq_http_unavailable_503_total", "requests answered 503", ld(&m.unavailable_503));
+    prom_counter(&mut out, "aq_http_deadline_504_total", "requests past deadline (504)", ld(&m.deadline_504));
+    prom_counter(&mut out, "aq_http_disconnects_total", "client disconnects mid-stream", ld(&m.disconnects));
+
+    // admission
+    prom_gauge(&mut out, "aq_in_flight", "admitted requests currently alive", a.in_flight() as u64);
+    prom_counter(&mut out, "aq_admitted_total", "requests past admission", ld(&a.admitted));
+    prom_counter(&mut out, "aq_shed_capacity_total", "sheds at the in-flight ceiling", ld(&a.shed_capacity));
+    prom_counter(&mut out, "aq_shed_client_total", "sheds at a per-client cap", ld(&a.shed_client));
+
+    // engine/scheduler
+    prom_gauge(&mut out, "aq_pending", "requests queued for a KV slot", g.pending.load(Ordering::Relaxed) as u64);
+    prom_gauge(&mut out, "aq_active", "sequences decoding right now", g.active.load(Ordering::Relaxed) as u64);
+    prom_gauge(&mut out, "aq_peak_pending", "high-water mark of the pending queue", g.peak_pending.load(Ordering::Relaxed) as u64);
+    prom_counter(&mut out, "aq_tokens_generated_total", "tokens sampled by the scheduler", ld(&g.tokens_generated));
+    prom_counter(&mut out, "aq_completed_total", "sequences finished", ld(&g.completed));
+    prom_counter(&mut out, "aq_sched_shed_total", "submits refused by the scheduler's own cap", ld(&g.shed_requests));
+    prom_counter(&mut out, "aq_deadline_evictions_total", "sequences evicted past deadline", ld(&g.deadline_evictions));
+    prom_counter(&mut out, "aq_cancelled_total", "sequences cancelled (disconnects)", ld(&g.cancelled));
+    prom_counter(&mut out, "aq_starved_ticks_total", "ticks that ran below full batch with work queued", ld(&g.starved_ticks));
+
+    if let Some(t) = ctx.recorder.telemetry() {
+        prom_counter(&mut out, "aq_ticks_total", "scheduler ticks", t.ticks.load(Ordering::Relaxed));
+        prom_counter(&mut out, "aq_prefill_rows_total", "prefill rows batched", t.prefill_rows.load(Ordering::Relaxed));
+        prom_counter(&mut out, "aq_decode_rows_total", "decode rows batched", t.decode_rows.load(Ordering::Relaxed));
+        prom_counter(&mut out, "aq_journal_events_total", "events pushed to the journal", t.journal.total());
+
+        prom_histogram(&mut out, "aq_ttft_seconds", "submit to first generated token", &t.ttft);
+        prom_histogram(&mut out, "aq_inter_token_seconds", "gap between consecutive tokens of one sequence", &t.inter_token);
+        prom_histogram(&mut out, "aq_queue_wait_seconds", "submit to KV-slot admission", &t.queue_wait);
+        prom_histogram(&mut out, "aq_request_seconds", "submit to finish, whole request", &t.request);
+
+        prom_histogram_header(&mut out, "aq_tick_seconds", "one scheduler tick, by batch phase");
+        prom_histogram_series(&mut out, "aq_tick_seconds", r#"phase="all""#, &t.tick.snapshot());
+        prom_histogram_series(&mut out, "aq_tick_seconds", r#"phase="prefill""#, &t.tick_prefill.snapshot());
+        prom_histogram_series(&mut out, "aq_tick_seconds", r#"phase="decode""#, &t.tick_decode.snapshot());
+        prom_histogram_series(&mut out, "aq_tick_seconds", r#"phase="mixed""#, &t.tick_mixed.snapshot());
+    }
+
+    // sampled kernel timing is process-global, not per-server
+    let ks = telemetry::kernel::stats();
+    if ks.head.count() > 0 || ks.gemm.iter().any(|h| h.count() > 0) {
+        prom_histogram_header(&mut out, "aq_gemm_seconds", "sampled packed-GEMM kernel time by weight bit-width");
+        for (i, label) in telemetry::kernel::BITS_LABELS.iter().enumerate() {
+            prom_histogram_series(
+                &mut out,
+                "aq_gemm_seconds",
+                &format!(r#"bits="{label}""#),
+                &ks.gemm[i].snapshot(),
+            );
+        }
+        prom_histogram(&mut out, "aq_head_seconds", "sampled vocab-head projection time", &ks.head);
+    }
+    out
 }

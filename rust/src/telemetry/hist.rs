@@ -1,0 +1,237 @@
+//! Lock-free fixed-bucket log-scale latency histograms.
+//!
+//! One histogram is `BUCKETS` power-of-two-spaced duration buckets (first
+//! upper bound 1µs, doubling up to ~134s) plus an overflow bucket, each an
+//! `AtomicU64` — recording is wait-free (one relaxed `fetch_add` per
+//! observation), reading never blocks writers, and two histograms with the
+//! same layout merge by adding counts. Percentiles interpolate linearly
+//! inside the containing bucket, so p50/p90/p99 are exact to within one
+//! bucket's resolution (a factor of 2 — plenty for latency telemetry).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Finite bucket count; bucket `i` has upper bound `1µs << i`, so the last
+/// finite bound is `1000 << 27` ns ≈ 134.2 s. Anything slower lands in the
+/// overflow (`+Inf`) bucket.
+pub const BUCKETS: usize = 28;
+
+/// Upper bound of finite bucket `i` in nanoseconds.
+#[inline]
+pub fn bucket_bound_ns(i: usize) -> u64 {
+    debug_assert!(i < BUCKETS);
+    1000u64 << i
+}
+
+/// A mergeable log-scale duration histogram. All methods take `&self`;
+/// share it behind an `Arc` freely.
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS + 1], // last = overflow (+Inf)
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Index of the bucket an observation of `ns` nanoseconds lands in
+    /// (`BUCKETS` = the overflow bucket).
+    #[inline]
+    pub fn bucket_index(ns: u64) -> usize {
+        if ns <= 1000 {
+            return 0;
+        }
+        // smallest i with ns <= 1000 << i; ilog2 avoids a 28-step scan
+        let i = (ns.ilog2() as usize).saturating_sub(9);
+        let i = if i < BUCKETS && ns <= bucket_bound_ns(i) { i } else { i + 1 };
+        i.min(BUCKETS)
+    }
+
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.counts[Self::bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Point-in-time copy of the bucket counts (oldest-write visibility:
+    /// relaxed loads, fine for exposition).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let counts: Vec<u64> =
+            self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        HistSnapshot { counts, sum_ns: self.sum_ns.load(Ordering::Relaxed) }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns() as f64 / n as f64 / 1e6
+        }
+    }
+
+    /// Add `other`'s observations into `self` (same fixed layout by
+    /// construction, so merging is bucket-wise addition).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.counts.iter().zip(&other.counts) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.sum_ns.fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Quantile `p` in `[0, 1]` in nanoseconds, linearly interpolated
+    /// within the containing bucket; 0.0 when empty. Observations in the
+    /// overflow bucket report the last finite bound (a floor, not a lie:
+    /// "at least 134s").
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        self.snapshot().percentile_ns(p)
+    }
+
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        self.percentile_ns(p) / 1e6
+    }
+}
+
+/// A read-only copy of a histogram's state, for rendering/percentiles.
+pub struct HistSnapshot {
+    /// `BUCKETS + 1` entries; last is the overflow (+Inf) bucket.
+    pub counts: Vec<u64>,
+    pub sum_ns: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                if i >= BUCKETS {
+                    return bucket_bound_ns(BUCKETS - 1) as f64;
+                }
+                let lo = if i == 0 { 0.0 } else { bucket_bound_ns(i - 1) as f64 };
+                let hi = bucket_bound_ns(i) as f64;
+                let frac = (target - seen) as f64 / c as f64;
+                return lo + frac * (hi - lo);
+            }
+            seen += c;
+        }
+        bucket_bound_ns(BUCKETS - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_inclusive_upper() {
+        // bound[i] lands in bucket i, bound[i] + 1 in bucket i + 1
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(1000), 0);
+        assert_eq!(Histogram::bucket_index(1001), 1);
+        for i in 0..BUCKETS {
+            assert_eq!(Histogram::bucket_index(bucket_bound_ns(i)), i, "bound {i}");
+            let next = if i + 1 < BUCKETS { i + 1 } else { BUCKETS };
+            assert_eq!(
+                Histogram::bucket_index(bucket_bound_ns(i) + 1),
+                next,
+                "bound {i} + 1"
+            );
+        }
+        assert_eq!(Histogram::bucket_index(u64::MAX), BUCKETS);
+    }
+
+    #[test]
+    fn counts_and_sum_accumulate() {
+        let h = Histogram::new();
+        h.record_ns(500);
+        h.record_ns(1500);
+        h.record_ns(1500);
+        h.record(Duration::from_micros(100));
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum_ns(), 500 + 1500 + 1500 + 100_000);
+        let s = h.snapshot();
+        assert_eq!(s.counts[0], 1);
+        assert_eq!(s.counts[1], 2);
+        assert_eq!(s.counts[Histogram::bucket_index(100_000)], 1);
+    }
+
+    #[test]
+    fn percentiles_interpolate_and_order() {
+        let h = Histogram::new();
+        // 100 obs in bucket 1 (1µs..2µs], 100 in bucket 11 (~1ms..2ms]
+        for _ in 0..100 {
+            h.record_ns(1500);
+            h.record_ns(1_500_000);
+        }
+        let p25 = h.percentile_ns(0.25);
+        let p50 = h.percentile_ns(0.50);
+        let p99 = h.percentile_ns(0.99);
+        assert!(p25 > 1000.0 && p25 <= 2000.0, "p25 = {p25}");
+        assert!(p50 <= 2000.0, "p50 = {p50} (exactly half the mass is fast)");
+        assert!(p99 > 1_000_000.0 && p99 <= 2_097_152.0, "p99 = {p99}");
+        assert!(p25 <= p50 && p50 <= p99);
+        // empty histogram is all-zero
+        assert_eq!(Histogram::new().percentile_ns(0.99), 0.0);
+        assert_eq!(Histogram::new().mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn overflow_reports_last_finite_bound() {
+        let h = Histogram::new();
+        h.record_ns(u64::MAX);
+        assert_eq!(h.percentile_ns(0.5), bucket_bound_ns(BUCKETS - 1) as f64);
+    }
+
+    #[test]
+    fn merge_adds_bucketwise() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for _ in 0..10 {
+            a.record_ns(1500);
+            b.record_ns(1500);
+            b.record_ns(3_000_000);
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), 30);
+        assert_eq!(a.snapshot().counts[1], 20);
+        assert_eq!(a.sum_ns(), 10 * 1500 + 10 * 1500 + 10 * 3_000_000);
+        // merged percentiles see both populations
+        assert!(a.percentile_ns(0.99) > 2_000_000.0);
+    }
+}

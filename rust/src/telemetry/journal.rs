@@ -1,0 +1,109 @@
+//! Bounded ring-buffer event journal for post-mortem dumps.
+//!
+//! Fixed capacity; when full, the oldest event is dropped. Every event
+//! carries a monotonically increasing sequence number, so a dump makes the
+//! wraparound visible: if the first retained `seq` is not 0, that many
+//! earlier events were discarded.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One journaled event. `at_ms` is milliseconds since the journal was
+/// created (monotonic, not wall clock — the journal carries no epoch).
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub seq: u64,
+    pub at_ms: u64,
+    pub kind: &'static str,
+    pub detail: String,
+}
+
+pub struct Journal {
+    start: Instant,
+    seq: AtomicU64,
+    ring: Mutex<VecDeque<Event>>,
+    cap: usize,
+}
+
+impl Journal {
+    pub fn new(cap: usize) -> Journal {
+        Journal {
+            start: Instant::now(),
+            seq: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::with_capacity(cap.max(1))),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn push(&self, kind: &'static str, detail: String) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let at_ms = self.start.elapsed().as_millis() as u64;
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(Event { seq, at_ms, kind, detail });
+    }
+
+    /// Oldest-first copy of the retained events.
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Total events ever pushed (including ones the ring has dropped).
+    pub fn total(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_order_below_capacity() {
+        let j = Journal::new(8);
+        for i in 0..5 {
+            j.push("t", format!("e{i}"));
+        }
+        let snap = j.snapshot();
+        assert_eq!(snap.len(), 5);
+        assert_eq!(j.total(), 5);
+        for (i, ev) in snap.iter().enumerate() {
+            assert_eq!(ev.seq, i as u64);
+            assert_eq!(ev.detail, format!("e{i}"));
+        }
+    }
+
+    #[test]
+    fn wraparound_drops_oldest_and_keeps_seq() {
+        let j = Journal::new(4);
+        for i in 0..10 {
+            j.push("t", format!("e{i}"));
+        }
+        let snap = j.snapshot();
+        assert_eq!(snap.len(), 4, "bounded at capacity");
+        assert_eq!(j.total(), 10, "total counts dropped events too");
+        // retained events are the newest four, in order, seqs intact
+        let seqs: Vec<u64> = snap.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9]);
+        assert_eq!(snap[0].detail, "e6");
+        assert_eq!(snap[3].detail, "e9");
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let j = Journal::new(0);
+        j.push("a", "1".into());
+        j.push("b", "2".into());
+        let snap = j.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].kind, "b");
+    }
+}

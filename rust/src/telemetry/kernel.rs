@@ -1,0 +1,129 @@
+//! Sampled kernel timing, keyed by bit-width.
+//!
+//! The GEMM hot path cannot afford a clock read per call, let alone an
+//! `Arc` to thread through `packed_gemm`'s call graph — so kernel timing
+//! is a process-global, off by default, and *sampled*: when enabled, one
+//! call in [`SAMPLE`] reads the clock. The timing path never touches the
+//! math, so enabling it cannot perturb results (the bit-stability
+//! contract), only add a bounded measurement cost.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use super::hist::Histogram;
+
+/// 1-in-N sampling rate for kernel clock reads.
+pub const SAMPLE: u64 = 8;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static TICKET: AtomicU64 = AtomicU64::new(0);
+static STATS: OnceLock<KernelStats> = OnceLock::new();
+
+/// Per-bit-width GEMM histograms plus the vocab-head projection (the
+/// single most expensive per-token stage).
+pub struct KernelStats {
+    /// Indexed by [`bits_index`]: w2, w3, w4, w8, other.
+    pub gemm: [Histogram; 5],
+    pub head: Histogram,
+}
+
+pub const BITS_LABELS: [&str; 5] = ["2", "3", "4", "8", "other"];
+
+#[inline]
+pub fn bits_index(bits: u32) -> usize {
+    match bits {
+        2 => 0,
+        3 => 1,
+        4 => 2,
+        8 => 3,
+        _ => 4,
+    }
+}
+
+pub fn stats() -> &'static KernelStats {
+    STATS.get_or_init(|| KernelStats {
+        gemm: std::array::from_fn(|_| Histogram::new()),
+        head: Histogram::new(),
+    })
+}
+
+/// Turn sampled kernel timing on or off (process-global).
+pub fn enable(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// `Some(now)` if this call was sampled for timing; the common path is a
+/// single relaxed load and no clock read.
+#[inline]
+pub fn sample_start() -> Option<Instant> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    if TICKET.fetch_add(1, Ordering::Relaxed) % SAMPLE != 0 {
+        return None;
+    }
+    Some(Instant::now())
+}
+
+#[inline]
+pub fn record_gemm(bits: u32, t0: Option<Instant>) {
+    if let Some(t0) = t0 {
+        stats().gemm[bits_index(bits)].record(t0.elapsed());
+    }
+}
+
+#[inline]
+pub fn record_head(t0: Option<Instant>) {
+    if let Some(t0) = t0 {
+        stats().head.record(t0.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // One test owns the process-global enable flag: the unit-test binary
+    // runs tests on parallel threads, and other tests route through
+    // `sample_start` (via packed_gemm), so cadence assertions are tolerant
+    // of ticket draws racing with concurrent callers.
+    #[test]
+    fn sampling_gate_behaviour() {
+        enable(false);
+        // recording a None start is a no-op
+        let before = stats().head.count();
+        record_head(None);
+        assert_eq!(stats().head.count(), before);
+        assert!(!enabled());
+
+        enable(true);
+        let n = SAMPLE * 100;
+        let mut hits: u64 = 0;
+        for _ in 0..n {
+            if let Some(t0) = sample_start() {
+                hits += 1;
+                record_gemm(4, Some(t0));
+            }
+        }
+        enable(false);
+        assert!(hits >= 1, "enabled sampling must fire");
+        // concurrent callers share the ticket counter, so the exact cadence
+        // races; sampling every single call would still mean it is broken
+        assert!(hits < n, "sampling must thin the calls: {hits}/{n}");
+        assert!(stats().gemm[bits_index(4)].count() >= hits);
+    }
+
+    #[test]
+    fn bits_map_covers_packed_widths() {
+        assert_eq!(bits_index(2), 0);
+        assert_eq!(bits_index(3), 1);
+        assert_eq!(bits_index(4), 2);
+        assert_eq!(bits_index(8), 3);
+        assert_eq!(bits_index(16), 4);
+    }
+}

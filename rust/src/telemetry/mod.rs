@@ -1,0 +1,340 @@
+//! End-to-end telemetry: counters, latency histograms, request spans, an
+//! event journal, and Prometheus text exposition. Dependency-light by
+//! design — `std` only — because it is compiled into the
+//! `--no-default-features` deployment build.
+//!
+//! The whole subsystem hangs off [`Recorder`], a cloneable handle that is
+//! either *live* (wraps an `Arc<Telemetry>`) or *disabled* (`None`, the
+//! `Default`). Every recording method starts with an inline `None` check,
+//! so a disabled recorder costs one branch and — crucially — never reads
+//! the clock: the offline engine keeps its no-wall-clock property and the
+//! bit-stability contract is untouched either way (telemetry only ever
+//! observes, it cannot influence scheduling or math).
+//!
+//! Layout: [`hist`] (log-scale mergeable histograms), [`journal`] (bounded
+//! ring of events), [`trace`] (per-request spans), [`kernel`]
+//! (process-global sampled GEMM/head timing).
+
+pub mod hist;
+pub mod journal;
+pub mod kernel;
+pub mod trace;
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub use hist::{bucket_bound_ns, HistSnapshot, Histogram, BUCKETS};
+pub use journal::{Event, Journal};
+pub use trace::{Span, TraceStore};
+
+/// How many spans `/v1/trace/<id>` can look back over.
+pub const TRACE_CAP: usize = 256;
+/// Journal ring capacity.
+pub const JOURNAL_CAP: usize = 1024;
+
+/// The shared metric registry: request-level and engine-level histograms,
+/// row counters, the span store, and the event journal.
+pub struct Telemetry {
+    /// Submit → first generated token (the serving TTFT).
+    pub ttft: Histogram,
+    /// Gap between consecutive generated tokens of one sequence.
+    pub inter_token: Histogram,
+    /// Submit → admission into a KV slot.
+    pub queue_wait: Histogram,
+    /// Submit → finish (whole request).
+    pub request: Histogram,
+    /// One scheduler tick, wall time — total and split by phase.
+    pub tick: Histogram,
+    pub tick_prefill: Histogram,
+    pub tick_decode: Histogram,
+    pub tick_mixed: Histogram,
+    pub ticks: AtomicU64,
+    pub prefill_rows: AtomicU64,
+    pub decode_rows: AtomicU64,
+    pub traces: TraceStore,
+    pub journal: Journal,
+}
+
+impl Telemetry {
+    pub fn new() -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            ttft: Histogram::new(),
+            inter_token: Histogram::new(),
+            queue_wait: Histogram::new(),
+            request: Histogram::new(),
+            tick: Histogram::new(),
+            tick_prefill: Histogram::new(),
+            tick_decode: Histogram::new(),
+            tick_mixed: Histogram::new(),
+            ticks: AtomicU64::new(0),
+            prefill_rows: AtomicU64::new(0),
+            decode_rows: AtomicU64::new(0),
+            traces: TraceStore::new(TRACE_CAP),
+            journal: Journal::new(JOURNAL_CAP),
+        })
+    }
+}
+
+/// Cloneable recording handle; `Default` is disabled (all methods no-ops
+/// that never read the clock).
+#[derive(Clone, Default)]
+pub struct Recorder(Option<Arc<Telemetry>>);
+
+impl Recorder {
+    pub fn new_enabled() -> Recorder {
+        Recorder(Some(Telemetry::new()))
+    }
+
+    pub fn from_telemetry(t: Arc<Telemetry>) -> Recorder {
+        Recorder(Some(t))
+    }
+
+    pub fn disabled() -> Recorder {
+        Recorder(None)
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    pub fn telemetry(&self) -> Option<&Arc<Telemetry>> {
+        self.0.as_ref()
+    }
+
+    /// Clock read gated on the handle being live: `None` when disabled, so
+    /// callers hold `Option<Instant>` and pay nothing when telemetry is
+    /// off.
+    #[inline]
+    pub fn now(&self) -> Option<Instant> {
+        self.0.as_ref().map(|_| Instant::now())
+    }
+
+    #[inline]
+    pub fn queue_wait(&self, id: u64, d: Duration) {
+        if let Some(t) = &self.0 {
+            t.queue_wait.record(d);
+            t.traces.update(id, |s| s.queue_wait_ms = d.as_secs_f64() * 1e3);
+        }
+    }
+
+    #[inline]
+    pub fn ttft(&self, id: u64, d: Duration) {
+        if let Some(t) = &self.0 {
+            t.ttft.record(d);
+            t.traces.update(id, |s| s.ttft_ms = d.as_secs_f64() * 1e3);
+        }
+    }
+
+    #[inline]
+    pub fn gap(&self, id: u64, d: Duration) {
+        if let Some(t) = &self.0 {
+            t.inter_token.record(d);
+            let ms = d.as_secs_f64() * 1e3;
+            t.traces.update(id, |s| {
+                s.gap_count += 1;
+                s.gap_sum_ms += ms;
+                if ms > s.gap_max_ms {
+                    s.gap_max_ms = ms;
+                }
+            });
+        }
+    }
+
+    /// Request reached a terminal state inside the engine.
+    #[inline]
+    pub fn finished(&self, id: u64, outcome: &str, tokens: usize, total: Option<Duration>) {
+        if let Some(t) = &self.0 {
+            if let Some(d) = total {
+                t.request.record(d);
+            }
+            let outcome = outcome.to_string();
+            t.traces.update(id, |s| {
+                s.tokens = tokens;
+                s.outcome = outcome;
+                if let Some(d) = total {
+                    s.total_ms = d.as_secs_f64() * 1e3;
+                }
+            });
+        }
+    }
+
+    /// One scheduler tick completed; `t0` is the matching [`Recorder::now`]
+    /// from tick start. Rows classify the tick's phase: prefill-only,
+    /// decode-only, or mixed.
+    #[inline]
+    pub fn tick(&self, t0: Option<Instant>, prefill_rows: usize, decode_rows: usize) {
+        if let (Some(t), Some(t0)) = (&self.0, t0) {
+            let d = t0.elapsed();
+            t.tick.record(d);
+            match (prefill_rows > 0, decode_rows > 0) {
+                (true, false) => t.tick_prefill.record(d),
+                (false, true) => t.tick_decode.record(d),
+                (true, true) => t.tick_mixed.record(d),
+                (false, false) => {}
+            }
+            t.ticks.fetch_add(1, Ordering::Relaxed);
+            t.prefill_rows.fetch_add(prefill_rows as u64, Ordering::Relaxed);
+            t.decode_rows.fetch_add(decode_rows as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Mutate (creating if needed) the span for request `id`.
+    #[inline]
+    pub fn span(&self, id: u64, f: impl FnOnce(&mut Span)) {
+        if let Some(t) = &self.0 {
+            t.traces.update(id, f);
+        }
+    }
+
+    /// Append to the post-mortem journal.
+    #[inline]
+    pub fn event(&self, kind: &'static str, detail: impl FnOnce() -> String) {
+        if let Some(t) = &self.0 {
+            t.journal.push(kind, detail());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition (format version 0.0.4)
+
+/// Append one `# HELP`/`# TYPE` header + counter sample.
+pub fn prom_counter(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Append one gauge sample.
+pub fn prom_gauge(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Append the `# HELP`/`# TYPE` header for a histogram family. Call once
+/// per family, then [`prom_histogram_series`] once per label set.
+pub fn prom_histogram_header(out: &mut String, name: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+}
+
+/// Append the cumulative `_bucket`/`_sum`/`_count` series for one
+/// histogram, in **seconds** (the Prometheus base unit for durations).
+/// `labels` is either empty or `r#"phase="prefill""#`-style pairs without
+/// braces. `_count` and the `+Inf` bucket are derived from the same bucket
+/// sum, so the exposition is always self-consistent even while writers
+/// race.
+pub fn prom_histogram_series(out: &mut String, name: &str, labels: &str, snap: &HistSnapshot) {
+    let mut cum = 0u64;
+    for (i, &c) in snap.counts.iter().enumerate() {
+        cum += c;
+        let le = if i < BUCKETS {
+            format!("{}", bucket_bound_ns(i) as f64 / 1e9)
+        } else {
+            "+Inf".to_string()
+        };
+        let sep = if labels.is_empty() { String::new() } else { format!("{labels},") };
+        let _ = writeln!(out, "{name}_bucket{{{sep}le=\"{le}\"}} {cum}");
+    }
+    let brace = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
+    let _ = writeln!(out, "{name}_sum{brace} {}", snap.sum_ns as f64 / 1e9);
+    let _ = writeln!(out, "{name}_count{brace} {cum}");
+}
+
+/// Convenience: header + single unlabelled series.
+pub fn prom_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+    prom_histogram_header(out, name, help);
+    prom_histogram_series(out, name, "", &h.snapshot());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_inert_and_clockless() {
+        let r = Recorder::default();
+        assert!(!r.enabled());
+        assert!(r.now().is_none());
+        r.queue_wait(1, Duration::from_millis(1));
+        r.ttft(1, Duration::from_millis(1));
+        r.gap(1, Duration::from_millis(1));
+        r.finished(1, "eos", 3, Some(Duration::from_millis(1)));
+        r.tick(None, 1, 1);
+        r.span(1, |s| s.tokens = 9);
+        r.event("x", || unreachable!("detail closure must not run when disabled"));
+        assert!(r.telemetry().is_none());
+    }
+
+    #[test]
+    fn live_recorder_populates_registry_and_span() {
+        let r = Recorder::new_enabled();
+        let t0 = r.now();
+        assert!(t0.is_some());
+        r.span(42, |s| {
+            s.trace_id = "req-x".into();
+            s.prompt_len = 4;
+        });
+        r.queue_wait(42, Duration::from_micros(300));
+        r.ttft(42, Duration::from_millis(2));
+        r.gap(42, Duration::from_millis(1));
+        r.gap(42, Duration::from_millis(3));
+        r.finished(42, "eos", 3, Some(Duration::from_millis(6)));
+        r.tick(t0, 2, 1);
+        r.event("test", || "hello".into());
+
+        let t = r.telemetry().unwrap();
+        assert_eq!(t.ttft.count(), 1);
+        assert_eq!(t.inter_token.count(), 2);
+        assert_eq!(t.queue_wait.count(), 1);
+        assert_eq!(t.request.count(), 1);
+        assert_eq!(t.tick.count(), 1);
+        assert_eq!(t.tick_mixed.count(), 1);
+        assert_eq!(t.ticks.load(Ordering::Relaxed), 1);
+        assert_eq!(t.prefill_rows.load(Ordering::Relaxed), 2);
+        assert_eq!(t.decode_rows.load(Ordering::Relaxed), 1);
+        assert_eq!(t.journal.total(), 1);
+
+        let span = t.traces.lookup("req-x").unwrap();
+        assert_eq!(span.id, 42);
+        assert_eq!(span.tokens, 3);
+        assert_eq!(span.outcome, "eos");
+        assert_eq!(span.gap_count, 2);
+        assert!(span.ttft_ms > 0.0 && span.total_ms > 0.0);
+        assert!(span.gap_max_ms >= span.mean_gap_ms());
+    }
+
+    #[test]
+    fn prometheus_rendering_is_consistent() {
+        let h = Histogram::new();
+        h.record_ns(1500);
+        h.record_ns(3_000_000);
+        let mut out = String::new();
+        prom_histogram(&mut out, "aq_test_seconds", "test hist", &h);
+        prom_counter(&mut out, "aq_test_total", "test counter", 7);
+        prom_gauge(&mut out, "aq_test_active", "test gauge", 2);
+
+        assert!(out.contains("# TYPE aq_test_seconds histogram"));
+        assert!(out.contains("aq_test_seconds_count 2"));
+        assert!(out.contains("le=\"+Inf\"} 2"));
+        // cumulative: every bucket line is <= the +Inf value
+        let infv: u64 = 2;
+        for line in out.lines().filter(|l| l.starts_with("aq_test_seconds_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v <= infv);
+        }
+        assert!(out.contains("aq_test_total 7"));
+        assert!(out.contains("# TYPE aq_test_active gauge"));
+
+        // labelled series
+        let mut out2 = String::new();
+        prom_histogram_header(&mut out2, "aq_ph_seconds", "phases");
+        prom_histogram_series(&mut out2, "aq_ph_seconds", r#"phase="prefill""#, &h.snapshot());
+        assert!(out2.contains(r#"aq_ph_seconds_bucket{phase="prefill",le="+Inf"} 2"#));
+        assert!(out2.contains(r#"aq_ph_seconds_sum{phase="prefill"}"#));
+    }
+}

@@ -1,0 +1,172 @@
+//! Per-request span records, addressable by trace ID.
+//!
+//! Every accepted request gets a span keyed by the engine-side request id
+//! (`u64`) and an externally visible trace-ID string (the inbound
+//! `X-Request-Id` when the client sent one, else a generated `req-…`).
+//! Spans capture the request's life: admission → enqueue wait →
+//! time-to-first-token → inter-token gaps → finish reason. The store is
+//! bounded; the oldest span is evicted when full, so `/v1/trace/<id>` is a
+//! recent-history lookup, not an archive.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Mutex;
+
+/// Lifecycle record for one request. Duration fields are `f64`
+/// milliseconds and negative means "not reached" (rendered as absent).
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub id: u64,
+    pub trace_id: String,
+    pub client: String,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub queue_wait_ms: f64,
+    pub ttft_ms: f64,
+    pub gap_count: u64,
+    pub gap_sum_ms: f64,
+    pub gap_max_ms: f64,
+    pub tokens: usize,
+    /// Finish-reason label, or a server-side outcome ("shed", "bad_request",
+    /// "disconnect", …); empty while in flight.
+    pub outcome: String,
+    pub total_ms: f64,
+}
+
+impl Span {
+    fn new(id: u64) -> Span {
+        Span {
+            id,
+            trace_id: String::new(),
+            client: String::new(),
+            prompt_len: 0,
+            max_new: 0,
+            queue_wait_ms: -1.0,
+            ttft_ms: -1.0,
+            gap_count: 0,
+            gap_sum_ms: 0.0,
+            gap_max_ms: 0.0,
+            tokens: 0,
+            outcome: String::new(),
+            total_ms: -1.0,
+        }
+    }
+
+    pub fn mean_gap_ms(&self) -> f64 {
+        if self.gap_count == 0 {
+            0.0
+        } else {
+            self.gap_sum_ms / self.gap_count as f64
+        }
+    }
+}
+
+struct Inner {
+    map: HashMap<u64, Span>,
+    order: VecDeque<u64>,
+    by_tid: HashMap<String, u64>,
+}
+
+/// Bounded id → span store with upsert semantics: the engine and the
+/// server both touch spans and either may get there first.
+pub struct TraceStore {
+    inner: Mutex<Inner>,
+    cap: usize,
+}
+
+impl TraceStore {
+    pub fn new(cap: usize) -> TraceStore {
+        TraceStore {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                by_tid: HashMap::new(),
+            }),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Mutate (creating if absent) the span for `id`.
+    pub fn update(&self, id: u64, f: impl FnOnce(&mut Span)) {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.map.contains_key(&id) {
+            if inner.order.len() == self.cap {
+                if let Some(old) = inner.order.pop_front() {
+                    if let Some(s) = inner.map.remove(&old) {
+                        if !s.trace_id.is_empty() {
+                            inner.by_tid.remove(&s.trace_id);
+                        }
+                    }
+                }
+            }
+            inner.order.push_back(id);
+            inner.map.insert(id, Span::new(id));
+        }
+        let mut tid_add: Option<String> = None;
+        if let Some(span) = inner.map.get_mut(&id) {
+            let before = span.trace_id.clone();
+            f(span);
+            if span.trace_id != before && !span.trace_id.is_empty() {
+                tid_add = Some(span.trace_id.clone());
+            }
+        }
+        if let Some(tid) = tid_add {
+            inner.by_tid.insert(tid, id);
+        }
+    }
+
+    pub fn get(&self, id: u64) -> Option<Span> {
+        self.inner.lock().unwrap().map.get(&id).cloned()
+    }
+
+    /// Look up by the externally visible trace-ID string; falls back to
+    /// parsing `key` as a numeric engine id.
+    pub fn lookup(&self, key: &str) -> Option<Span> {
+        let inner = self.inner.lock().unwrap();
+        if let Some(&id) = inner.by_tid.get(key) {
+            return inner.map.get(&id).cloned();
+        }
+        key.parse::<u64>().ok().and_then(|id| inner.map.get(&id).cloned())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upsert_and_lookup_by_both_keys() {
+        let t = TraceStore::new(8);
+        t.update(7, |s| {
+            s.trace_id = "req-abc".into();
+            s.prompt_len = 3;
+        });
+        t.update(7, |s| s.tokens = 5);
+        let by_id = t.get(7).unwrap();
+        assert_eq!(by_id.prompt_len, 3);
+        assert_eq!(by_id.tokens, 5);
+        assert_eq!(t.lookup("req-abc").unwrap().id, 7);
+        assert_eq!(t.lookup("7").unwrap().trace_id, "req-abc");
+        assert!(t.lookup("nope").is_none());
+    }
+
+    #[test]
+    fn eviction_drops_oldest_span_and_its_tid() {
+        let t = TraceStore::new(2);
+        t.update(1, |s| s.trace_id = "a".into());
+        t.update(2, |s| s.trace_id = "b".into());
+        t.update(3, |s| s.trace_id = "c".into());
+        assert_eq!(t.len(), 2);
+        assert!(t.get(1).is_none());
+        assert!(t.lookup("a").is_none());
+        assert!(t.lookup("b").is_some());
+        assert!(t.lookup("c").is_some());
+    }
+}

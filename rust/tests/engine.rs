@@ -452,6 +452,54 @@ fn cancel_frees_slot_without_completion() {
     assert_eq!(done[0].tokens.len(), 3, "reclaimed slot decodes normally");
 }
 
+/// Telemetry is observation only: enabling the recorder (histograms,
+/// spans, journal) must leave greedy completions bit-identical and the
+/// scheduler counters unchanged — while actually populating the registry.
+#[test]
+fn telemetry_on_is_bit_identical_to_telemetry_off() {
+    use affinequant::telemetry::Recorder;
+
+    let ps = zoo::seeded_store("opt-s1", 42).unwrap();
+    let pm = PackedModel::from_store(&ps, QuantSpec::new(4, 128));
+    let reqs: Vec<Request> = (0..4)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: test_tokens(3 + 7 * i),
+            max_new: 5 + 2 * i,
+            eos: None,
+        })
+        .collect();
+    let sched = SchedConfig { prefill_chunk: 4, ..SchedConfig::default() };
+
+    let mut plain = Engine::with_config(pm.clone(), 2, sched);
+    let (base, base_stats) = plain.generate(reqs.clone(), Sampler::Greedy, 0).unwrap();
+
+    let mut instrumented = Engine::with_config(pm, 2, sched);
+    instrumented.recorder = Recorder::new_enabled();
+    let (got, got_stats) = instrumented.generate(reqs, Sampler::Greedy, 0).unwrap();
+
+    assert_eq!(base.len(), got.len());
+    for (a, b) in base.iter().zip(&got) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {}: telemetry changed the output", a.id);
+        assert_eq!(a.finish, b.finish);
+    }
+    assert_eq!(base_stats.tokens_generated, got_stats.tokens_generated);
+    assert_eq!(base_stats.scheduler_steps, got_stats.scheduler_steps);
+
+    // and the run actually left a trail behind
+    let t = instrumented.recorder.telemetry().unwrap();
+    assert_eq!(t.ttft.count(), 4, "one TTFT per request");
+    assert!(t.inter_token.count() > 0);
+    assert_eq!(t.request.count(), 4);
+    assert_eq!(t.queue_wait.count(), 4);
+    assert!(t.tick.count() as usize == got_stats.scheduler_steps);
+    let span = t.traces.get(3).expect("span for request 3");
+    assert_eq!(span.tokens, 11);
+    assert_eq!(span.outcome, "max_new");
+    assert!(span.ttft_ms >= 0.0 && span.total_ms >= span.ttft_ms);
+}
+
 /// The per-tick `emitted()` stream — what the HTTP server forwards —
 /// reassembles into exactly the completions' token lists.
 #[test]

@@ -59,9 +59,20 @@ impl Response {
 }
 
 fn send_request(stream: &mut TcpStream, method: &str, path: &str, body: &str) {
+    send_request_with(stream, method, path, body, &[]);
+}
+
+fn send_request_with(
+    stream: &mut TcpStream,
+    method: &str,
+    path: &str,
+    body: &str,
+    headers: &[(&str, &str)],
+) {
+    let extra: String = headers.iter().map(|(k, v)| format!("{k}: {v}\r\n")).collect();
     write!(
         stream,
-        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n{extra}\r\n{body}",
         body.len()
     )
     .expect("write request");
@@ -109,8 +120,18 @@ fn dechunk(mut raw: &[u8]) -> Vec<u8> {
 }
 
 fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> Response {
+    request_with(addr, method, path, body, &[])
+}
+
+fn request_with(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+    headers: &[(&str, &str)],
+) -> Response {
     let mut stream = TcpStream::connect(addr).expect("connect");
-    send_request(&mut stream, method, path, body);
+    send_request_with(&mut stream, method, path, body, headers);
     let mut raw = Vec::new();
     stream.read_to_end(&mut raw).expect("read response");
     parse_response(&raw)
@@ -329,6 +350,217 @@ fn mid_stream_disconnect_frees_the_slot() {
 
     let resp = request(addr, "POST", "/v1/completions", "{\"prompt\": \"hi\", \"max_tokens\": 2}");
     assert_eq!(resp.status, 200, "slot was not reclaimed: {}", resp.body_str());
+    handle.shutdown();
+    handle.join();
+}
+
+/// Minimal Prometheus 0.0.4 sanity check: every sample line is
+/// `name[{labels}] value` with a parseable float, every line belongs to a
+/// family that declared a `# TYPE`, and cumulative buckets never decrease.
+fn assert_prometheus_text(text: &str) {
+    let mut typed: Vec<String> = Vec::new();
+    let mut last_bucket: Option<(String, u64)> = None;
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            typed.push(rest.split_whitespace().next().expect("family name").to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line {line:?}"));
+        assert!(
+            value.parse::<f64>().is_ok() || value == "+Inf",
+            "unparseable value in {line:?}"
+        );
+        let name = series.split('{').next().unwrap();
+        let family = name
+            .trim_end_matches("_bucket")
+            .trim_end_matches("_sum")
+            .trim_end_matches("_count");
+        assert!(
+            typed.iter().any(|t| t == family || t == name),
+            "sample {name} has no # TYPE header"
+        );
+        // cumulative bucket monotonicity within one labelled series
+        if name.ends_with("_bucket") {
+            let key = series.split("le=").next().unwrap().to_string();
+            let v: u64 = value.parse().expect("bucket counts are integers");
+            if let Some((prev_key, prev_v)) = &last_bucket {
+                if *prev_key == key {
+                    assert!(v >= *prev_v, "bucket counts must be cumulative: {line:?}");
+                }
+            }
+            last_bucket = Some((key, v));
+        } else {
+            last_bucket = None;
+        }
+    }
+    assert!(!typed.is_empty(), "no metric families rendered");
+}
+
+/// One Prometheus sample value by exact series name (no labels).
+fn prom_value(text: &str, series: &str) -> f64 {
+    text.lines()
+        .find(|l| l.split(' ').next() == Some(series))
+        .unwrap_or_else(|| panic!("series {series} not found"))
+        .rsplit(' ')
+        .next()
+        .unwrap()
+        .parse()
+        .expect("sample value")
+}
+
+#[test]
+fn metrics_endpoint_serves_prometheus_after_completion() {
+    let handle = spawn(2, quiet_cfg());
+    let addr = handle.addr;
+
+    // before any completion the endpoint already serves valid text
+    let before = request(addr, "GET", "/metrics", "");
+    assert_eq!(before.status, 200);
+    assert!(
+        before.header("content-type").unwrap_or("").starts_with("text/plain"),
+        "prometheus scrapes expect text/plain"
+    );
+    assert_prometheus_text(&before.body_str());
+    let requests_before = prom_value(&before.body_str(), "aq_http_requests_total");
+
+    // a streamed completion populates TTFT and inter-token histograms
+    let body = "{\"prompt\": \"the bani \", \"max_tokens\": 12, \"stream\": true}";
+    let resp = request(addr, "POST", "/v1/completions", body);
+    assert_eq!(resp.status, 200);
+
+    let after = request(addr, "GET", "/metrics", "");
+    let text = after.body_str();
+    assert_prometheus_text(&text);
+    assert!(
+        prom_value(&text, "aq_http_requests_total") > requests_before,
+        "counters must move"
+    );
+    assert!(prom_value(&text, "aq_ttft_seconds_count") >= 1.0, "TTFT observed:\n{text}");
+    assert!(
+        prom_value(&text, "aq_inter_token_seconds_count") >= 1.0,
+        "inter-token gaps observed:\n{text}"
+    );
+    assert!(prom_value(&text, "aq_completed_total") >= 1.0);
+    assert!(text.contains("aq_tick_seconds_bucket{phase=\"all\","), "phase series:\n{text}");
+
+    // the journal endpoint is also live on a telemetry-on server
+    assert_eq!(request(addr, "GET", "/v1/journal", "").status, 200);
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn trace_endpoint_and_request_id_echo() {
+    let handle = spawn(2, quiet_cfg());
+    let addr = handle.addr;
+
+    // inbound X-Request-Id is honoured and echoed on the response
+    let body = "{\"prompt\": \"the bani \", \"max_tokens\": 6}";
+    let resp = request_with(addr, "POST", "/v1/completions", body, &[("X-Request-Id", "trace-me")]);
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("x-request-id"), Some("trace-me"));
+    let v = jsonx::parse(&resp.body_str()).expect("completion json");
+    assert_eq!(v.req("request_id"), &Value::Str("trace-me".into()));
+
+    // the span is addressable by that id and carries the request's life
+    let trace = request(addr, "GET", "/v1/trace/trace-me", "");
+    assert_eq!(trace.status, 200, "{}", trace.body_str());
+    let t = jsonx::parse(&trace.body_str()).expect("trace json");
+    assert_eq!(t.req("request_id"), &Value::Str("trace-me".into()));
+    assert_eq!(t.req("outcome"), &Value::Str("max_new".into()));
+    assert_eq!(t.req("tokens").as_f64(), 6.0);
+    assert!(t.req("ttft_ms").as_f64() > 0.0);
+    assert!(t.req("total_ms").as_f64() >= t.req("ttft_ms").as_f64());
+
+    // without an inbound id the server mints one (req-<hex>)
+    let resp = request(addr, "POST", "/v1/completions", body);
+    let minted = resp.header("x-request-id").expect("generated id").to_string();
+    assert!(minted.starts_with("req-"), "{minted}");
+    assert_eq!(request(addr, "GET", &format!("/v1/trace/{minted}"), "").status, 200);
+
+    assert_eq!(request(addr, "GET", "/v1/trace/no-such-trace", "").status, 404);
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn request_id_propagates_to_error_responses() {
+    // 400: malformed payload still carries the inbound id, header and body
+    let cfg = ServerConfig {
+        queue_cap: 1,
+        client_cap: 1,
+        // slow ticks keep alice's stream alive while the shed happens
+        fault: FaultConfig { tick_delay_ms: 20, ..FaultConfig::default() },
+        ..quiet_cfg()
+    };
+    let handle = spawn(1, cfg);
+    let addr = handle.addr;
+    let resp =
+        request_with(addr, "POST", "/v1/completions", "not json", &[("X-Request-Id", "bad-1")]);
+    assert_eq!(resp.status, 400);
+    assert_eq!(resp.header("x-request-id"), Some("bad-1"));
+    let v = jsonx::parse(&resp.body_str()).expect("error json");
+    assert_eq!(v.req("request_id"), &Value::Str("bad-1".into()));
+
+    // 429: hold the single per-client slot open, then get shed with the id
+    let slow = "{\"prompt\": \"abcdef\", \"max_tokens\": 400, \"stream\": true, \
+                \"client_id\": \"alice\"}";
+    let mut s1 = TcpStream::connect(addr).expect("connect");
+    send_request(&mut s1, "POST", "/v1/completions", slow);
+    wait_until("alice admitted", || handle.gauges.active.load(Ordering::Relaxed) >= 1);
+    let resp = request_with(addr, "POST", "/v1/completions", slow, &[("X-Request-Id", "shed-1")]);
+    assert_eq!(resp.status, 429, "{}", resp.body_str());
+    assert_eq!(resp.header("x-request-id"), Some("shed-1"));
+    assert!(resp.header("retry-after").is_some(), "429 keeps Retry-After");
+    let v = jsonx::parse(&resp.body_str()).expect("error json");
+    assert_eq!(v.req("request_id"), &Value::Str("shed-1".into()));
+
+    drop(s1);
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn telemetry_off_is_bit_identical_and_still_counts() {
+    let offline = {
+        let mut engine = test_engine(2);
+        let reqs = Engine::byte_requests(&["the bani "], 8);
+        let (c, _) = engine.generate(reqs, Sampler::Greedy, 0).expect("offline generate");
+        c.into_iter().next().expect("one completion").tokens
+    };
+
+    let handle = spawn(2, ServerConfig { telemetry: false, ..quiet_cfg() });
+    let addr = handle.addr;
+    assert!(handle.telemetry.is_none());
+
+    let body = "{\"prompt\": \"the bani \", \"max_tokens\": 8}";
+    let resp = request(addr, "POST", "/v1/completions", body);
+    assert_eq!(resp.status, 200);
+    let v = jsonx::parse(&resp.body_str()).expect("completion json");
+    let tokens: Vec<i32> = match v.req("tokens") {
+        Value::Arr(a) => a.iter().map(|t| t.as_f64() as i32).collect(),
+        other => panic!("tokens not an array: {other:?}"),
+    };
+    assert_eq!(tokens, offline, "telemetry off must not change sampled tokens");
+
+    // counters still serve; histogram families are simply absent
+    let m = request(addr, "GET", "/metrics", "");
+    assert_eq!(m.status, 200);
+    assert_prometheus_text(&m.body_str());
+    assert!(prom_value(&m.body_str(), "aq_http_requests_total") >= 1.0);
+    assert!(!m.body_str().contains("aq_ttft_seconds"), "no request histograms when off");
+    // span/journal surfaces 404 rather than serving empty lies
+    assert_eq!(request(addr, "GET", "/v1/trace/1", "").status, 404);
+    assert_eq!(request(addr, "GET", "/v1/journal", "").status, 404);
+    // stats JSON has no latency block
+    let stats = jsonx::parse(&request(addr, "GET", "/v1/stats", "").body_str()).expect("stats");
+    assert!(stats.get("latency").is_none());
     handle.shutdown();
     handle.join();
 }

@@ -33,6 +33,11 @@ cargo test -q --no-default-features
 echo "== server socket smoke (no-default-features)"
 cargo test -q --no-default-features --test server
 
+# observability gate: /metrics must serve parseable Prometheus text with
+# live TTFT/inter-token histograms after a streamed completion
+echo "== /metrics smoke (no-default-features)"
+cargo test -q --no-default-features --test server metrics_
+
 if [[ "${1:-}" == "--with-pjrt" ]]; then
     echo "== cargo build --release (default features)"
     cargo build --release
