@@ -16,8 +16,9 @@
 
 use affinequant::benchx::{bench, Table};
 use affinequant::engine::gemm::{packed_gemm, packed_matvec_grouped, PackedWeight};
+use affinequant::engine::kv::KvCache;
 use affinequant::engine::packed::PackedLinear;
-use affinequant::engine::{Engine, Request, Sampler, SchedConfig};
+use affinequant::engine::{Engine, KvConfig, Request, Sampler, SchedConfig, Scheduler};
 use affinequant::jsonx::{self, Value};
 use affinequant::model::zoo;
 use affinequant::quant::{quant_dequant, QuantSpec};
@@ -25,10 +26,10 @@ use affinequant::report::{save_json, save_table};
 use affinequant::rngx::Pcg32;
 use affinequant::tensor::Tensor;
 
-/// The perf-trajectory snapshot this bench persists (`BENCH_7.json`): the
+/// The perf-trajectory snapshot this bench persists (`BENCH_8.json`): the
 /// ROADMAP asks every PR to leave a machine-readable record so the next
 /// re-anchor can see regressions, not just today's stdout.
-const BENCH_JSON: &str = "BENCH_7.json";
+const BENCH_JSON: &str = "BENCH_8.json";
 
 fn main() -> anyhow::Result<()> {
     let mut json_gemm: Vec<Value> = Vec::new();
@@ -126,7 +127,7 @@ fn main() -> anyhow::Result<()> {
     // and telemetry on with sampled kernel timing — the on-run must stay
     // within a few % tokens/s AND produce identical greedy tokens, which
     // is the serving-overhead acceptance the telemetry layer signed up
-    // for. The ratio and the latency percentiles land in BENCH_7.json.
+    // for. The ratio and the latency percentiles land in BENCH_8.json.
     let mut dt = Table::new(
         "engine decode throughput (opt-s2, w4g128, greedy)",
         &["batch", "tok_s_off", "tok_s_on", "on_off_ratio", "ttft_p50_ms", "it_p50_ms", "it_p99_ms", "kv_mb"],
@@ -237,21 +238,122 @@ fn main() -> anyhow::Result<()> {
         ttft_chunk1 / ttft_chunk16.max(1e-12)
     );
 
+    // ------------------------------ paged KV: prefix-sharing memory sweep
+    // N clients share a P-token system prompt over 2-token pages: a donor
+    // request registers the prefix, then every follower attaches the shared
+    // pages instead of re-prefilling them. Acceptance (N=32, P=128): peak
+    // resident KV while all followers decode stays under 2x a single
+    // request's prompt footprint (vs ~Nx with sharing off), with greedy
+    // output bit-identical either way.
+    let mut sh = Table::new(
+        "kv prefix sharing (ll-s1, N clients x P-token shared prefix, w4g128)",
+        &["clients", "prefix", "share", "peak_kv_kb", "one_prompt_kb", "ratio", "hits", "cow", "tok_s"],
+    );
+    let mut json_share: Vec<Value> = Vec::new();
+    for (clients, plen) in [(8usize, 32usize), (8, 128), (32, 32), (32, 128)] {
+        let prefix: Vec<i32> = (0..plen).map(|i| ((i * 29 + 3) % 256) as i32).collect();
+        let req = |id: u64| {
+            let mut p = prefix.clone();
+            p.push(200 + id as i32); // unique tail token per client
+            Request { id, prompt: p, max_new: if id == 0 { 2 } else { 1 }, eos: None }
+        };
+        let mut per_share: Vec<Vec<(u64, Vec<i32>)>> = Vec::new();
+        for share in [true, false] {
+            let kv = KvConfig { page_tokens: 2, share, ..KvConfig::default() };
+            let mut cache =
+                KvCache::with_options(clients, pm_ll.cfg.n_layers, 256, pm_ll.cfg.d_model, kv);
+            let mut sched = Scheduler::with_config(
+                clients,
+                SchedConfig { prefill_chunk: 16, ..SchedConfig::default() },
+            );
+            let mut rng = Pcg32::seeded(0);
+            // donor: registers the prefix, then finishes and frees its slot
+            sched.submit(req(0)).map_err(|e| anyhow::anyhow!("donor: {e}"))?;
+            while sched.tick(&pm_ll, &mut cache, Sampler::Greedy, &mut rng) {}
+            let single_prompt_bytes = (plen + 1).div_ceil(2) * cache.page_bytes();
+
+            for id in 1..=clients as u64 {
+                sched.submit(req(id)).map_err(|e| anyhow::anyhow!("follower: {e}"))?;
+            }
+            let processed_before = sched.stats.tokens_processed;
+            let mut peak_bytes = 0usize;
+            let timer = affinequant::util::Timer::start();
+            loop {
+                let more = sched.tick(&pm_ll, &mut cache, Sampler::Greedy, &mut rng);
+                peak_bytes = peak_bytes.max(cache.stats().resident_bytes);
+                if !more {
+                    break;
+                }
+            }
+            let secs = timer.secs().max(1e-12);
+            let tok_s = (sched.stats.tokens_processed - processed_before) as f64 / secs;
+            let ratio = peak_bytes as f64 / single_prompt_bytes as f64;
+            let st = cache.stats();
+            let mut done: Vec<(u64, Vec<i32>)> =
+                sched.take_finished().into_iter().map(|c| (c.id, c.tokens)).collect();
+            done.sort_by_key(|(id, _)| *id);
+            assert_eq!(done.len(), clients + 1, "all requests must complete");
+            if share {
+                assert!(
+                    st.prefix_hits >= clients as u64,
+                    "every follower must attach the shared prefix"
+                );
+                if clients == 32 && plen == 128 {
+                    assert!(
+                        ratio < 2.0,
+                        "32 shared-prefix clients must stay under 2x one prompt \
+                         footprint (got {ratio:.2}x)"
+                    );
+                }
+            }
+            per_share.push(done);
+            json_share.push(jsonx::obj(vec![
+                ("clients", jsonx::num(clients as f64)),
+                ("shared_prefix_tokens", jsonx::num(plen as f64)),
+                ("share", jsonx::num(if share { 1.0 } else { 0.0 })),
+                ("peak_resident_bytes", jsonx::num(peak_bytes as f64)),
+                ("single_prompt_bytes", jsonx::num(single_prompt_bytes as f64)),
+                ("resident_over_single_prompt", jsonx::num(ratio)),
+                ("kv_pages_peak", jsonx::num(sched.stats.kv_pages_peak as f64)),
+                ("kv_shared_bytes_peak", jsonx::num(sched.stats.kv_shared_bytes_peak as f64)),
+                ("prefix_hits", jsonx::num(st.prefix_hits as f64)),
+                ("cow_faults", jsonx::num(st.cow_faults as f64)),
+                ("tok_s", jsonx::num(tok_s)),
+            ]));
+            sh.row(vec![
+                clients.to_string(),
+                plen.to_string(),
+                share.to_string(),
+                format!("{:.1}", peak_bytes as f64 / 1e3),
+                format!("{:.1}", single_prompt_bytes as f64 / 1e3),
+                format!("{ratio:.2}x"),
+                st.prefix_hits.to_string(),
+                st.cow_faults.to_string(),
+                format!("{tok_s:.0}"),
+            ]);
+            sh.print_last();
+        }
+        assert_eq!(per_share[0], per_share[1], "prefix sharing must not change greedy output");
+    }
+
     t.print();
     dt.print();
     tt.print();
+    sh.print();
     save_table(&t, "perf_engine_gemm")?;
     save_table(&dt, "perf_engine_decode")?;
     save_table(&tt, "perf_engine_ttft")?;
+    save_table(&sh, "perf_engine_sharing")?;
     save_json(
         BENCH_JSON,
         &jsonx::obj(vec![
-            ("pr", jsonx::num(7.0)),
+            ("pr", jsonx::num(8.0)),
             ("bench", jsonx::s("perf_engine")),
             ("threads", jsonx::num(std::thread::available_parallelism()?.get() as f64)),
             ("gemm_1024x1024", Value::Arr(json_gemm)),
             ("decode_opt_s2_w4g128", Value::Arr(json_decode)),
             ("ttft_ll_s1_256tok_w4g128", Value::Arr(json_ttft)),
+            ("kv_prefix_sharing_ll_s1", Value::Arr(json_share)),
             ("w4g128_b16_speedup_vs_fakequant", jsonx::num(w4b16_speedup)),
         ]),
     )?;

@@ -11,10 +11,12 @@
 //! attention accumulation order — so greedy decode is bit-identical to
 //! re-running the full forward after every token, for any prefill chunk
 //! size. Within a layer, each row writes its K/V and attends *before* the
-//! next row writes (see [`layer_forward`]'s row loop): a chunk that wraps
-//! the KV ring therefore sees exactly the cache states token-at-a-time
-//! stepping would have produced. Tests in `rust/tests/engine.rs` assert
-//! exact equality.
+//! next row writes (see [`layer_forward`]'s row loop): a chunk therefore
+//! sees exactly the cache states token-at-a-time stepping would have
+//! produced. The paged cache is append-only — out-of-window pages are
+//! released only at step start ([`KvCache::trim`]), never mid-chunk — so
+//! the interleave survives any page size, with or without prefix sharing.
+//! Tests in `rust/tests/engine.rs` assert exact equality.
 
 use crate::rngx::Pcg32;
 use crate::tensor::Tensor;
@@ -94,11 +96,12 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(&x, &y)| x * y).sum()
 }
 
-/// Causal multi-head attention for one query row against a window of
-/// `limit` cached K/V entries ending at the row's own ring index `ring`
-/// (the newest entry of the window is the row itself). Addressing is
-/// anchored at `ring` rather than the cache head, so the window is
-/// unaffected by later rows of the same step advancing the ring.
+/// Causal multi-head attention for one query row against the window of
+/// `limit` cached K/V entries ending at the row's own absolute position
+/// `pos` (the newest entry of the window is the row itself). Reads go
+/// through page-table translation at absolute token positions — pages are
+/// append-only, so later rows of the same step can never disturb an
+/// earlier row's window.
 #[allow(clippy::too_many_arguments)]
 pub fn attend(
     n_heads: usize,
@@ -107,24 +110,25 @@ pub fn attend(
     cache: &KvCache,
     slot: usize,
     layer: usize,
-    ring: usize,
+    pos: usize,
     limit: usize,
     out: &mut [f32],
 ) {
-    debug_assert!(limit >= 1 && limit <= cache.capacity);
+    debug_assert!(limit >= 1 && limit <= cache.window && limit <= pos + 1);
+    let base = pos + 1 - limit;
     let scale = 1.0 / (head_dim as f32).sqrt();
     let mut scores = vec![0.0f32; limit];
     for h in 0..n_heads {
         let hr = h * head_dim..(h + 1) * head_dim;
         let qh = &q[hr.clone()];
         for (t, s) in scores.iter_mut().enumerate() {
-            *s = dot(qh, &cache.k_row_at(slot, layer, ring, limit, t)[hr.clone()]) * scale;
+            *s = dot(qh, &cache.k_row(slot, layer, base + t)[hr.clone()]) * scale;
         }
         softmax(&mut scores);
         let oh = &mut out[hr.clone()];
         oh.fill(0.0);
         for (t, &p) in scores.iter().enumerate() {
-            let vh = &cache.v_row_at(slot, layer, ring, limit, t)[hr.clone()];
+            let vh = &cache.v_row(slot, layer, base + t)[hr.clone()];
             for (o, &vv) in oh.iter_mut().zip(vh) {
                 *o += p * vv;
             }
@@ -135,13 +139,12 @@ pub fn attend(
 // ----------------------------------------------------------- block layer
 
 /// Per-row decode context: which cache slot the row belongs to, its
-/// absolute position, the ring index claimed for this token, and how many
-/// cache entries (oldest-first) its attention may see.
+/// absolute position (also its KV page-table index), and how many cache
+/// entries (window ending at the row itself) its attention may see.
 #[derive(Clone, Copy, Debug)]
 pub struct RowCtx {
     pub slot: usize,
     pub pos: usize,
-    pub ring: usize,
     pub limit: usize,
 }
 
@@ -191,10 +194,10 @@ fn layer_forward(
     }
 
     // rope + cache write + attention, row by row. Write→attend is
-    // interleaved *per row*: a chunk row must attend before the next chunk
-    // row's write can evict the oldest entry of its window, which is
-    // exactly the order token-at-a-time stepping produces — this is what
-    // keeps chunked prefill bit-identical even when the ring wraps.
+    // interleaved *per row* — exactly the order token-at-a-time stepping
+    // produces. Pages are append-only, so no later write can disturb an
+    // earlier row's window; the interleave is kept because it is the
+    // contract chunked prefill's bit-identity is specified against.
     let mut ctx = vec![0.0f32; m * d];
     for (i, rc) in rows.iter().enumerate() {
         let qrow = &mut q[i * d..(i + 1) * d];
@@ -203,8 +206,8 @@ fn layer_forward(
             rope_row(qrow, cfg.n_heads, cfg.head_dim, rc.pos);
             rope_row(krow, cfg.n_heads, cfg.head_dim, rc.pos);
         }
-        cache.write_k(rc.slot, layer, rc.ring, krow);
-        cache.write_v(rc.slot, layer, rc.ring, &v[i * d..(i + 1) * d]);
+        cache.write_k(rc.slot, layer, rc.pos, krow);
+        cache.write_v(rc.slot, layer, rc.pos, &v[i * d..(i + 1) * d]);
         attend(
             cfg.n_heads,
             cfg.head_dim,
@@ -212,7 +215,7 @@ fn layer_forward(
             cache,
             rc.slot,
             layer,
-            rc.ring,
+            rc.pos,
             rc.limit,
             &mut ctx[i * d..(i + 1) * d],
         );
@@ -359,11 +362,22 @@ pub fn step_select(
     for (i, inp) in inputs.iter().enumerate() {
         embed_row(model, inp.token, inp.pos, &mut x[i * d..(i + 1) * d]);
     }
+    // release out-of-window pages at step start only: every row of this
+    // step still reads its own trailing window, and freeing mid-chunk
+    // could hand a page a not-yet-attended row needs to a later advance
+    let mut trimmed: Vec<usize> = Vec::new();
+    for inp in inputs {
+        if !trimmed.contains(&inp.slot) {
+            trimmed.push(inp.slot);
+            cache.trim(inp.slot);
+        }
+    }
     let rows: Vec<RowCtx> = inputs
         .iter()
         .map(|inp| {
-            let ring = cache.advance(inp.slot);
-            RowCtx { slot: inp.slot, pos: inp.pos, ring, limit: cache.len(inp.slot) }
+            let pos = cache.advance(inp.slot);
+            debug_assert_eq!(pos, inp.pos, "scheduler position desynced from the kv page table");
+            RowCtx { slot: inp.slot, pos, limit: cache.attn_len(inp.slot) }
         })
         .collect();
     for (layer, block) in model.blocks.iter().enumerate() {
@@ -385,8 +399,8 @@ pub fn hidden_full(model: &PackedModel, tokens: &[i32]) -> Tensor {
     let rows: Vec<RowCtx> = (0..s_len)
         .map(|i| {
             embed_row(model, tokens[i], i, &mut x[i * d..(i + 1) * d]);
-            let ring = cache.advance(0);
-            RowCtx { slot: 0, pos: i, ring, limit: i + 1 }
+            let pos = cache.advance(0);
+            RowCtx { slot: 0, pos, limit: i + 1 }
         })
         .collect();
     for (layer, block) in model.blocks.iter().enumerate() {
@@ -405,9 +419,10 @@ pub fn forward_full(model: &PackedModel, tokens: &[i32]) -> Tensor {
 
 /// Sliding-window reference forward: like [`forward_full`] but row `i`
 /// attends only to the last `min(i + 1, window)` tokens at every layer —
-/// the semantics a ring KV cache of capacity `window` converges to once it
-/// wraps. Uses a flat (non-wrapping) arena sized to the sequence, so it is
-/// an *independent* implementation of the eviction behaviour the ring
+/// the semantics a window-`window` KV cache converges to past capacity.
+/// Retains the whole sequence (its own cache window is `s_len`, so nothing
+/// is ever trimmed) and limits attention per row instead, making it an
+/// *independent* implementation of the eviction behaviour the paged cache
 /// produces; `rust/tests/engine.rs` pits the two against each other.
 pub fn forward_window(model: &PackedModel, tokens: &[i32], window: usize) -> Tensor {
     let s_len = tokens.len();
@@ -420,8 +435,8 @@ pub fn forward_window(model: &PackedModel, tokens: &[i32], window: usize) -> Ten
     let rows: Vec<RowCtx> = (0..s_len)
         .map(|i| {
             embed_row(model, tokens[i], i, &mut x[i * d..(i + 1) * d]);
-            let ring = cache.advance(0);
-            RowCtx { slot: 0, pos: i, ring, limit: (i + 1).min(window) }
+            let pos = cache.advance(0);
+            RowCtx { slot: 0, pos, limit: (i + 1).min(window) }
         })
         .collect();
     for (layer, block) in model.blocks.iter().enumerate() {

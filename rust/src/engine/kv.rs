@@ -1,160 +1,612 @@
-//! Ring-buffer KV cache with per-sequence slots.
+//! Paged KV cache with copy-on-write prefix sharing.
 //!
-//! One contiguous f32 arena holds `(slot, layer, ring_pos, d_model)` for K
-//! and V. A *slot* is a serving sequence; the scheduler assigns each
-//! admitted request a slot and resets it on eviction, so cache memory is
-//! bounded by `max_batch × n_layers × capacity × d` regardless of how many
-//! requests flow through. When a sequence outgrows `capacity` the ring
-//! overwrites the oldest entries (sliding-window attention) — valid for
-//! RoPE models; the decoder caps absolute positions for learned-positional
-//! models before that can happen.
+//! One global pool of fixed-size *pages* (default 16 tokens × `n_layers` ×
+//! `d` for K and V) backs every sequence. A slot holds a page table mapping
+//! the logical token position to `(page, offset)`; pages are refcounted, so
+//! sequences admitted with an identical prompt prefix attach the donor's
+//! pages read-only and share them until they diverge. Divergence inside a
+//! partially-filled shared page triggers exactly one copy-on-write: the
+//! attaching slot copies the rows below its divergence point into a fresh
+//! page it owns and appends there. Pages are append-only — a row, once
+//! written, is never overwritten — which is what makes sharing safe and
+//! keeps greedy decode bit-identical to the old ring for any page size.
 //!
-//! Write protocol per generated token: `advance(slot)` once (returns the
-//! ring index), then `write_k`/`write_v` at that index for every layer, so
-//! all layers stay aligned on the same ring position.
+//! Sliding-window semantics survive the refactor: attention over a slot
+//! reads the last `min(len, window)` tokens, and [`KvCache::trim`] (called
+//! at *step start*, never mid-chunk) releases whole pages that fell out of
+//! the window. Released pages whose content is still indexed by the prefix
+//! registry park in a reclaim queue (LRU by default) and are evicted only
+//! when the allocator runs dry, so a finished request's system prompt keeps
+//! accelerating the next one for free.
 //!
-//! Chunked prefill pushes several tokens of one slot through a single step,
-//! which means the ring head can move (and old entries can be overwritten)
-//! *between* two rows of the same batch. Attention therefore never reads
-//! through the live head: [`KvCache::k_row_at`]/[`v_row_at`] address a
-//! window of `limit` entries ending at an explicit anchor ring index — the
-//! snapshot the anchored row saw when it claimed its slot — so a row's
-//! attention window is independent of how many later rows share its step.
+//! Capacity is explicit: `max_pages == 0` grows the arena on demand (the
+//! offline path), a finite `max_pages` is a hard pool bound that the
+//! scheduler reserves against via [`KvCache::worst_case_pages`] — replacing
+//! the ring's silent sliding-window overwrite with up-front accounting.
+//!
+//! Write protocol per token: `advance(slot)` once (returns the absolute
+//! position and makes its page writable), then `write_k`/`write_v` at that
+//! position for every layer.
+
+use std::collections::{HashMap, VecDeque};
+
+/// Default tokens per page.
+pub const DEFAULT_PAGE_TOKENS: usize = 16;
+
+/// Order in which registry-cached (refcount-0) pages are reclaimed when the
+/// allocator runs dry. Reclamation affects only *which* prefixes stay
+/// shareable — never the bytes a live sequence reads — so greedy output is
+/// identical across orders (asserted in `rust/tests/engine.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Reclaim {
+    /// Evict the least-recently-freed cached page first.
+    Lru,
+    /// Evict the most-recently-freed cached page first.
+    Mru,
+}
+
+/// Pool tuning knobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvConfig {
+    /// Tokens per page (≥ 1).
+    pub page_tokens: usize,
+    /// Hard cap on allocated pages; `0` = grow on demand.
+    pub max_pages: usize,
+    /// Enable prompt-prefix sharing (registry + copy-on-write).
+    pub share: bool,
+    /// Reclamation order for registry-cached pages.
+    pub reclaim: Reclaim,
+}
+
+impl Default for KvConfig {
+    fn default() -> KvConfig {
+        KvConfig {
+            page_tokens: DEFAULT_PAGE_TOKENS,
+            max_pages: 0,
+            share: true,
+            reclaim: Reclaim::Lru,
+        }
+    }
+}
+
+/// Point-in-time pool occupancy + cumulative sharing counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvStats {
+    pub page_tokens: usize,
+    /// Pool bound (`0` = unbounded).
+    pub max_pages: usize,
+    /// Pages backed by arena memory.
+    pub pages_allocated: usize,
+    /// Pages referenced by at least one live sequence.
+    pub pages_resident: usize,
+    /// Refcount-0 pages kept alive by the prefix registry (reclaimable).
+    pub pages_cached: usize,
+    /// Immediately-allocatable pages (pool headroom when bounded).
+    pub pages_free: usize,
+    /// Pages referenced by two or more sequences right now.
+    pub pages_shared: usize,
+    /// Bytes sharing saves right now: Σ over pages of `(refs−1) ×
+    /// page_bytes` — what duplicate copies would have cost.
+    pub shared_bytes: usize,
+    /// Bytes of K+V held by live sequences.
+    pub resident_bytes: usize,
+    /// Cumulative prompt tokens served from shared pages.
+    pub shared_tokens_total: u64,
+    /// Cumulative admissions that attached a non-empty shared prefix.
+    pub prefix_hits: u64,
+    /// Cumulative copy-on-write page copies at divergence points.
+    pub cow_faults: u64,
+}
+
+/// One page-table entry: which pool page backs a block of
+/// `page_tokens` consecutive token positions, and whether this slot may
+/// append into it (`owned`) or holds it read-only (attached via sharing).
+#[derive(Clone, Copy, Debug)]
+struct PageRef {
+    page: usize,
+    owned: bool,
+}
+
+#[derive(Clone, Default)]
+struct SlotState {
+    /// Page table, front-trimmed: entry `i` backs block `trimmed + i`.
+    pages: VecDeque<PageRef>,
+    /// Whole pages released from the front by [`KvCache::trim`].
+    trimmed: usize,
+    /// Tokens ever appended (== the next absolute position).
+    len: usize,
+    /// Rolling prefix hash over the first `registered` prompt tokens.
+    hash: (u64, u64),
+    /// Prompt tokens already published to the prefix registry.
+    registered: usize,
+}
+
+/// [`KvCache::worst_case_pages`] without a pool in hand — the server's
+/// admission gate prices requests with the same formula the scheduler
+/// reserves by, so the two layers can never disagree about what fits.
+pub fn worst_case_pages_for(
+    window: usize,
+    page_tokens: usize,
+    prompt_len: usize,
+    max_new: usize,
+    prefill_chunk: usize,
+) -> usize {
+    let chunk = match prefill_chunk {
+        0 => prompt_len,
+        c => c.min(prompt_len),
+    };
+    let peak = (prompt_len + max_new).min(window.saturating_sub(1) + chunk.max(1));
+    peak.div_ceil(page_tokens) + 1
+}
+
+const H_SEED: (u64, u64) = (0xcbf2_9ce4_8422_2325, 0x6c62_272e_07bb_0142);
+
+/// Fold one token into a 128-bit rolling prefix hash (two independent
+/// multiply-xor chains; a collision needs both 64-bit halves to agree).
+#[inline]
+fn mix(h: (u64, u64), tok: i32) -> (u64, u64) {
+    let t = (tok as u32 as u64) ^ 0x9e37_79b9_7f4a_7c15;
+    let a = (h.0 ^ t).wrapping_mul(0x0000_0100_0000_01b3);
+    let b = (h.1 ^ t.rotate_left(21)).wrapping_mul(0xc6a4_a793_5bd1_e995);
+    (a.rotate_left(27), b.rotate_left(31))
+}
 
 #[derive(Clone)]
 pub struct KvCache {
     pub n_slots: usize,
     pub n_layers: usize,
-    pub capacity: usize,
+    /// Attention window: a slot's reads cover its last `min(len, window)`
+    /// tokens (the old ring capacity).
+    pub window: usize,
     pub d: usize,
+    pub page_tokens: usize,
+    max_pages: usize,
+    share: bool,
+    reclaim: Reclaim,
+    /// Arenas, `pages_allocated × page_tokens × n_layers × d` each, grown
+    /// lazily in page units. Layout:
+    /// `((page · n_layers + layer) · page_tokens + offset) · d`.
     k: Vec<f32>,
     v: Vec<f32>,
-    /// Valid entries per slot (≤ capacity).
-    len: Vec<usize>,
-    /// Next ring write index per slot.
-    head: Vec<usize>,
+    /// Live-sequence references per page.
+    refs: Vec<u32>,
+    /// Registry hashes published for each page; non-empty keeps a
+    /// refcount-0 page reclaimable-but-cached instead of free.
+    page_keys: Vec<Vec<(u64, u64)>>,
+    /// Pages with no references and no registry entries.
+    free: VecDeque<usize>,
+    /// Refcount-0 registry-cached pages in release order (lazily pruned:
+    /// entries whose page was re-attached or already drained are skipped).
+    parked: VecDeque<usize>,
+    /// `hash(prompt[..n]) → (page holding token n−1, n)`.
+    registry: HashMap<(u64, u64), (usize, usize)>,
+    slots: Vec<SlotState>,
+    shared_tokens: u64,
+    prefix_hits: u64,
+    cow_faults: u64,
 }
 
 impl KvCache {
-    pub fn new(n_slots: usize, n_layers: usize, capacity: usize, d: usize) -> KvCache {
-        assert!(n_slots > 0 && n_layers > 0 && capacity > 0 && d > 0);
-        let total = n_slots * n_layers * capacity * d;
+    /// Pool with default paging knobs (16-token pages, unbounded growth,
+    /// sharing on). `window` is the attention window the old ring called
+    /// `capacity`.
+    pub fn new(n_slots: usize, n_layers: usize, window: usize, d: usize) -> KvCache {
+        KvCache::with_options(n_slots, n_layers, window, d, KvConfig::default())
+    }
+
+    pub fn with_options(
+        n_slots: usize,
+        n_layers: usize,
+        window: usize,
+        d: usize,
+        cfg: KvConfig,
+    ) -> KvCache {
+        assert!(n_slots > 0 && n_layers > 0 && window > 0 && d > 0);
+        assert!(cfg.page_tokens > 0, "page_tokens must be at least 1");
         KvCache {
             n_slots,
             n_layers,
-            capacity,
+            window,
             d,
-            k: vec![0.0; total],
-            v: vec![0.0; total],
-            len: vec![0; n_slots],
-            head: vec![0; n_slots],
+            page_tokens: cfg.page_tokens,
+            max_pages: cfg.max_pages,
+            share: cfg.share,
+            reclaim: cfg.reclaim,
+            k: Vec::new(),
+            v: Vec::new(),
+            refs: Vec::new(),
+            page_keys: Vec::new(),
+            free: VecDeque::new(),
+            parked: VecDeque::new(),
+            registry: HashMap::new(),
+            slots: vec![SlotState::default(); n_slots],
+            shared_tokens: 0,
+            prefix_hits: 0,
+            cow_faults: 0,
         }
     }
 
+    /// Bytes currently backed by arena memory (grows lazily per page).
     pub fn mem_bytes(&self) -> usize {
         (self.k.len() + self.v.len()) * 4
     }
 
-    /// Number of retained entries for a slot.
+    /// K+V bytes of one page.
+    pub fn page_bytes(&self) -> usize {
+        self.page_tokens * self.n_layers * self.d * 4 * 2
+    }
+
+    /// Pool bound in pages (`0` = unbounded).
+    pub fn max_pages(&self) -> usize {
+        self.max_pages
+    }
+
+    /// Tokens ever appended to a slot (== the next absolute position; may
+    /// exceed `window` for sliding-window decode).
     pub fn len(&self, slot: usize) -> usize {
-        self.len[slot]
+        self.slots[slot].len
     }
 
-    pub fn is_empty(&self, slot: usize) -> bool {
-        self.len[slot] == 0
+    /// Entries a slot's attention may read: `min(len, window)`.
+    pub fn attn_len(&self, slot: usize) -> usize {
+        self.slots[slot].len.min(self.window)
     }
 
-    /// Drop a slot's history (sequence eviction / admission).
-    pub fn reset(&mut self, slot: usize) {
-        self.len[slot] = 0;
-        self.head[slot] = 0;
+    /// Upper bound on pages one request can hold at once, for admission
+    /// reservation. Peak residency is the lesser of the whole sequence
+    /// (`prompt + max_new`) and the trimmed window plus one in-flight
+    /// prefill chunk; `+ 1` covers the partially-trimmed front page.
+    pub fn worst_case_pages(
+        &self,
+        prompt_len: usize,
+        max_new: usize,
+        prefill_chunk: usize,
+    ) -> usize {
+        worst_case_pages_for(self.window, self.page_tokens, prompt_len, max_new, prefill_chunk)
     }
 
-    /// Claim the ring index for the next token of `slot`. Evicts the oldest
-    /// entry when full. Call exactly once per token, before the layer loop.
-    pub fn advance(&mut self, slot: usize) -> usize {
-        let idx = self.head[slot];
-        self.head[slot] = (idx + 1) % self.capacity;
-        if self.len[slot] < self.capacity {
-            self.len[slot] += 1;
+    // ------------------------------------------------------------ allocator
+
+    fn grow(&mut self) -> usize {
+        let page = self.refs.len();
+        assert!(
+            self.max_pages == 0 || page < self.max_pages,
+            "kv page pool exhausted ({} pages) — admission reservation must prevent this",
+            self.max_pages
+        );
+        let stride = self.page_tokens * self.n_layers * self.d;
+        self.k.resize((page + 1) * stride, 0.0);
+        self.v.resize((page + 1) * stride, 0.0);
+        self.refs.push(0);
+        self.page_keys.push(Vec::new());
+        page
+    }
+
+    /// Next reclaimable registry-cached page in the configured order,
+    /// skipping stale queue entries (re-attached or already drained pages).
+    fn pop_reclaimable(&mut self) -> Option<usize> {
+        loop {
+            let p = match self.reclaim {
+                Reclaim::Lru => self.parked.pop_front(),
+                Reclaim::Mru => self.parked.pop_back(),
+            }?;
+            if self.refs[p] == 0 && !self.page_keys[p].is_empty() {
+                return Some(p);
+            }
         }
-        idx
     }
 
-    fn base(&self, slot: usize, layer: usize, ring: usize) -> usize {
-        debug_assert!(slot < self.n_slots && layer < self.n_layers && ring < self.capacity);
-        ((slot * self.n_layers + layer) * self.capacity + ring) * self.d
+    /// Drop every registry entry published for `page` (pre-reclaim).
+    fn deregister(&mut self, page: usize) {
+        for h in std::mem::take(&mut self.page_keys[page]) {
+            if self.registry.get(&h).is_some_and(|e| e.0 == page) {
+                self.registry.remove(&h);
+            }
+        }
     }
 
-    pub fn write_k(&mut self, slot: usize, layer: usize, ring: usize, row: &[f32]) {
-        let b = self.base(slot, layer, ring);
+    /// Claim a page for a single owner: free list first, then reclaim a
+    /// cached page, then grow the arena (bounded by `max_pages`).
+    fn alloc_page(&mut self) -> usize {
+        let page = if let Some(p) = self.free.pop_front() {
+            p
+        } else if let Some(p) = self.pop_reclaimable() {
+            self.deregister(p);
+            p
+        } else {
+            self.grow()
+        };
+        debug_assert!(self.refs[page] == 0 && self.page_keys[page].is_empty());
+        self.refs[page] = 1;
+        page
+    }
+
+    /// Drop one reference; a drained page parks in the reclaim queue while
+    /// the registry still indexes it, otherwise returns to the free list.
+    fn release_page(&mut self, page: usize) {
+        assert!(self.refs[page] > 0, "double free of kv page {page}");
+        self.refs[page] -= 1;
+        if self.refs[page] == 0 {
+            if self.page_keys[page].is_empty() {
+                self.free.push_back(page);
+            } else {
+                self.parked.push_back(page);
+            }
+        }
+    }
+
+    // ------------------------------------------------------- slot lifecycle
+
+    /// Drop a slot's history (sequence eviction / admission). Registered
+    /// pages stay cached for future prefix hits until reclaimed.
+    pub fn reset(&mut self, slot: usize) {
+        let pages: Vec<PageRef> = self.slots[slot].pages.drain(..).collect();
+        for pr in pages {
+            self.release_page(pr.page);
+        }
+        self.slots[slot] = SlotState::default();
+    }
+
+    /// Release whole pages that fell out of the attention window. Must be
+    /// called only at *step start* (decode does): mid-chunk, earlier rows
+    /// of the same step still read the window anchored at their own
+    /// position, which trimming for a later row could free.
+    pub fn trim(&mut self, slot: usize) {
+        let start = (self.slots[slot].len + 1).saturating_sub(self.window);
+        while (self.slots[slot].trimmed + 1) * self.page_tokens <= start {
+            let pr = self.slots[slot].pages.pop_front().expect("page table under-run");
+            self.slots[slot].trimmed += 1;
+            self.release_page(pr.page);
+        }
+    }
+
+    /// Claim the next position for `slot` and make its page writable:
+    /// allocates a fresh page at block boundaries, copy-on-writes a shared
+    /// (non-owned) partial tail page at the divergence point. Returns the
+    /// absolute position. Call exactly once per token, before the layers.
+    pub fn advance(&mut self, slot: usize) -> usize {
+        let pos = self.slots[slot].len;
+        if pos % self.page_tokens == 0 {
+            let page = self.alloc_page();
+            self.slots[slot].pages.push_back(PageRef { page, owned: true });
+        } else {
+            let tail = *self.slots[slot].pages.back().expect("tail page");
+            if !tail.owned {
+                // diverging inside a shared page: copy the rows below the
+                // divergence point into a page this slot owns
+                let fresh = self.alloc_page();
+                let filled = (pos % self.page_tokens) * self.d;
+                for layer in 0..self.n_layers {
+                    let src = (tail.page * self.n_layers + layer) * self.page_tokens * self.d;
+                    let dst = (fresh * self.n_layers + layer) * self.page_tokens * self.d;
+                    self.k.copy_within(src..src + filled, dst);
+                    self.v.copy_within(src..src + filled, dst);
+                }
+                self.release_page(tail.page);
+                *self.slots[slot].pages.back_mut().expect("tail page") =
+                    PageRef { page: fresh, owned: true };
+                self.cow_faults += 1;
+            }
+        }
+        self.slots[slot].len = pos + 1;
+        pos
+    }
+
+    // ------------------------------------------------------------- indexing
+
+    #[inline]
+    fn row_base(&self, slot: usize, layer: usize, pos: usize) -> usize {
+        debug_assert!(slot < self.n_slots && layer < self.n_layers);
+        let st = &self.slots[slot];
+        debug_assert!(pos < st.len, "position {pos} not yet appended");
+        let block = pos / self.page_tokens;
+        debug_assert!(block >= st.trimmed, "position {pos} trimmed out of the window");
+        let page = st.pages[block - st.trimmed].page;
+        ((page * self.n_layers + layer) * self.page_tokens + pos % self.page_tokens) * self.d
+    }
+
+    pub fn write_k(&mut self, slot: usize, layer: usize, pos: usize, row: &[f32]) {
+        let b = self.row_base(slot, layer, pos);
+        debug_assert!(
+            self.slots[slot].pages[pos / self.page_tokens - self.slots[slot].trimmed].owned,
+            "write into a shared page (copy-on-write should have claimed it)"
+        );
         self.k[b..b + self.d].copy_from_slice(row);
     }
 
-    pub fn write_v(&mut self, slot: usize, layer: usize, ring: usize, row: &[f32]) {
-        let b = self.base(slot, layer, ring);
+    pub fn write_v(&mut self, slot: usize, layer: usize, pos: usize, row: &[f32]) {
+        let b = self.row_base(slot, layer, pos);
         self.v[b..b + self.d].copy_from_slice(row);
     }
 
-    /// Ring index of the `j`-th retained entry (temporal order, 0 = oldest).
+    /// K row at absolute token position `pos` (page-table translated).
     #[inline]
-    pub fn ring_at(&self, slot: usize, j: usize) -> usize {
-        debug_assert!(j < self.len[slot]);
-        (self.head[slot] + self.capacity - self.len[slot] + j) % self.capacity
-    }
-
-    /// Ring index of the `t`-th entry (0 = oldest) of a window of `limit`
-    /// entries ending at the anchor ring index `ring` — the cache snapshot
-    /// seen by the row that claimed `ring` via [`advance`](Self::advance).
-    /// Unlike [`ring_at`](Self::ring_at) this does not consult the live
-    /// head, so it stays correct when later rows of the same step have
-    /// advanced the ring past the anchor.
-    #[inline]
-    pub fn ring_in_window(&self, ring: usize, limit: usize, t: usize) -> usize {
-        debug_assert!(limit >= 1 && limit <= self.capacity && t < limit);
-        (ring + 1 + self.capacity - limit + t) % self.capacity
-    }
-
-    /// K row `t` (0 = oldest) of the window of `limit` entries ending at
-    /// anchor index `ring`.
-    #[inline]
-    pub fn k_row_at(
-        &self,
-        slot: usize,
-        layer: usize,
-        ring: usize,
-        limit: usize,
-        t: usize,
-    ) -> &[f32] {
-        let b = self.base(slot, layer, self.ring_in_window(ring, limit, t));
+    pub fn k_row(&self, slot: usize, layer: usize, pos: usize) -> &[f32] {
+        let b = self.row_base(slot, layer, pos);
         &self.k[b..b + self.d]
     }
 
-    /// V row `t` (0 = oldest) of the window of `limit` entries ending at
-    /// anchor index `ring`.
+    /// V row at absolute token position `pos` (page-table translated).
     #[inline]
-    pub fn v_row_at(
-        &self,
-        slot: usize,
-        layer: usize,
-        ring: usize,
-        limit: usize,
-        t: usize,
-    ) -> &[f32] {
-        let b = self.base(slot, layer, self.ring_in_window(ring, limit, t));
+    pub fn v_row(&self, slot: usize, layer: usize, pos: usize) -> &[f32] {
+        let b = self.row_base(slot, layer, pos);
         &self.v[b..b + self.d]
     }
 
-    #[inline]
-    pub fn k_row(&self, slot: usize, layer: usize, j: usize) -> &[f32] {
-        let b = self.base(slot, layer, self.ring_at(slot, j));
-        &self.k[b..b + self.d]
+    // ------------------------------------------------------- prefix sharing
+
+    /// Attach the longest registered prefix of `prompt` to an empty slot:
+    /// the matching pages are referenced read-only and their tokens skip
+    /// prefill entirely. Returns the shared token count `s` (the slot's
+    /// `len` afterwards), capped at `prompt.len() − 1` so the final prompt
+    /// token is always fed through the model to produce logits. The shared
+    /// K/V was computed from the identical token prefix by the same code,
+    /// so reads through it are bit-identical to recomputing.
+    pub fn attach_prefix(&mut self, slot: usize, prompt: &[i32]) -> usize {
+        debug_assert!(
+            self.slots[slot].len == 0 && self.slots[slot].pages.is_empty(),
+            "attach_prefix requires a freshly reset slot"
+        );
+        if !self.share || prompt.len() < 2 {
+            return 0;
+        }
+        let cap = prompt.len() - 1;
+        let mut h = H_SEED;
+        let mut matched = 0usize;
+        let mut hash_at_match = H_SEED;
+        // page per block covered by the match; a later entry in the same
+        // block supersedes an earlier one (its page holds all rows below
+        // its fill point, block-start included)
+        let mut table: Vec<usize> = Vec::new();
+        for (n, &tok) in prompt.iter().take(cap).enumerate() {
+            h = mix(h, tok);
+            let Some(&(page, _)) = self.registry.get(&h) else { break };
+            let block = n / self.page_tokens;
+            if block == table.len() {
+                table.push(page);
+            } else {
+                table[block] = page;
+            }
+            matched = n + 1;
+            hash_at_match = h;
+        }
+        if matched == 0 {
+            return 0;
+        }
+        debug_assert_eq!(table.len(), matched.div_ceil(self.page_tokens));
+        for &page in &table {
+            self.refs[page] += 1;
+            self.slots[slot].pages.push_back(PageRef { page, owned: false });
+        }
+        let st = &mut self.slots[slot];
+        st.len = matched;
+        st.registered = matched;
+        st.hash = hash_at_match;
+        self.prefix_hits += 1;
+        self.shared_tokens += matched as u64;
+        matched
     }
 
-    #[inline]
-    pub fn v_row(&self, slot: usize, layer: usize, j: usize) -> &[f32] {
-        let b = self.base(slot, layer, self.ring_at(slot, j));
-        &self.v[b..b + self.d]
+    /// Publish the first `prefix.len()` prompt tokens of `slot` to the
+    /// registry so later admissions can attach them. Call only *after* the
+    /// step that wrote those rows completed (content is then immutable —
+    /// pages are append-only). Incremental: tokens already registered are
+    /// skipped, existing entries are never overwritten.
+    pub fn register_prefix(&mut self, slot: usize, prefix: &[i32]) {
+        if !self.share {
+            return;
+        }
+        debug_assert!(prefix.len() <= self.slots[slot].len);
+        while self.slots[slot].registered < prefix.len() {
+            let st = &self.slots[slot];
+            let n = st.registered;
+            let h = mix(st.hash, prefix[n]);
+            let block = n / self.page_tokens;
+            // a long chunk can outrun the window before the next trim; its
+            // oldest pages are already released and cannot be published
+            let page = if block >= st.trimmed {
+                Some(st.pages[block - st.trimmed].page)
+            } else {
+                None
+            };
+            let st = &mut self.slots[slot];
+            st.hash = h;
+            st.registered = n + 1;
+            if let Some(page) = page {
+                if !self.registry.contains_key(&h) {
+                    self.registry.insert(h, (page, n + 1));
+                    self.page_keys[page].push(h);
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------- observability
+
+    pub fn stats(&self) -> KvStats {
+        let (mut resident, mut cached, mut shared, mut extra_refs) = (0usize, 0usize, 0usize, 0);
+        for (p, &r) in self.refs.iter().enumerate() {
+            if r > 0 {
+                resident += 1;
+                if r >= 2 {
+                    shared += 1;
+                    extra_refs += r as usize - 1;
+                }
+            } else if !self.page_keys[p].is_empty() {
+                cached += 1;
+            }
+        }
+        let pages_total = if self.max_pages > 0 { self.max_pages } else { self.refs.len() };
+        KvStats {
+            page_tokens: self.page_tokens,
+            max_pages: self.max_pages,
+            pages_allocated: self.refs.len(),
+            pages_resident: resident,
+            pages_cached: cached,
+            pages_free: pages_total - resident - cached,
+            pages_shared: shared,
+            shared_bytes: extra_refs * self.page_bytes(),
+            resident_bytes: resident * self.page_bytes(),
+            shared_tokens_total: self.shared_tokens,
+            prefix_hits: self.prefix_hits,
+            cow_faults: self.cow_faults,
+        }
+    }
+
+    /// Exhaustive bookkeeping check for the property suite: recomputes
+    /// refcounts from the page tables and verifies free-list/registry
+    /// consistency. Returns a description of the first violation.
+    pub fn debug_validate(&self) -> Result<(), String> {
+        let n = self.refs.len();
+        let mut expect = vec![0u32; n];
+        let mut owners = vec![0u32; n];
+        for (slot, st) in self.slots.iter().enumerate() {
+            for pr in &st.pages {
+                if pr.page >= n {
+                    return Err(format!("slot {slot} references unallocated page {}", pr.page));
+                }
+                expect[pr.page] += 1;
+                if pr.owned {
+                    owners[pr.page] += 1;
+                }
+            }
+            if st.len.div_ceil(self.page_tokens) != st.trimmed + st.pages.len() {
+                return Err(format!("slot {slot}: page table does not cover len {}", st.len));
+            }
+        }
+        for p in 0..n {
+            if self.refs[p] != expect[p] {
+                return Err(format!(
+                    "page {p}: refcount {} but {} table references",
+                    self.refs[p], expect[p]
+                ));
+            }
+            if owners[p] > 1 {
+                return Err(format!("page {p} owned by {} slots", owners[p]));
+            }
+        }
+        let mut in_free = vec![false; n];
+        for &p in &self.free {
+            if in_free[p] {
+                return Err(format!("page {p} on the free list twice"));
+            }
+            in_free[p] = true;
+            if self.refs[p] != 0 {
+                return Err(format!("page {p} free with refcount {}", self.refs[p]));
+            }
+            if !self.page_keys[p].is_empty() {
+                return Err(format!("page {p} free but still registered"));
+            }
+        }
+        for (h, &(page, _)) in &self.registry {
+            if page >= n || !self.page_keys[page].contains(h) {
+                return Err(format!("registry entry points at page {page} without a back-key"));
+            }
+            if in_free[page] {
+                return Err(format!("registry entry points at free page {page}"));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -162,76 +614,144 @@ impl KvCache {
 mod tests {
     use super::*;
 
-    #[test]
-    fn append_and_temporal_order() {
-        let mut c = KvCache::new(2, 1, 4, 2);
-        for t in 0..3 {
-            let idx = c.advance(0);
-            c.write_k(0, 0, idx, &[t as f32, 0.0]);
-            c.write_v(0, 0, idx, &[0.0, t as f32]);
+    fn pool(n_slots: usize, page_tokens: usize, window: usize) -> KvCache {
+        KvCache::with_options(
+            n_slots,
+            1,
+            window,
+            2,
+            KvConfig { page_tokens, ..KvConfig::default() },
+        )
+    }
+
+    fn feed(c: &mut KvCache, slot: usize, tokens: std::ops::Range<usize>) {
+        for t in tokens {
+            c.trim(slot);
+            let pos = c.advance(slot);
+            assert_eq!(pos, t);
+            c.write_k(slot, 0, pos, &[t as f32, 0.0]);
+            c.write_v(slot, 0, pos, &[0.0, t as f32]);
         }
-        assert_eq!(c.len(0), 3);
+    }
+
+    #[test]
+    fn append_and_read_across_page_boundaries() {
+        let mut c = pool(2, 2, 16);
+        feed(&mut c, 0, 0..5);
+        assert_eq!(c.len(0), 5);
         assert_eq!(c.len(1), 0);
-        for j in 0..3 {
-            assert_eq!(c.k_row(0, 0, j)[0], j as f32);
-            assert_eq!(c.v_row(0, 0, j)[1], j as f32);
+        for pos in 0..5 {
+            assert_eq!(c.k_row(0, 0, pos)[0], pos as f32);
+            assert_eq!(c.v_row(0, 0, pos)[1], pos as f32);
         }
+        // 5 tokens over 2-token pages → 3 pages resident
+        assert_eq!(c.stats().pages_resident, 3);
+        c.debug_validate().unwrap();
     }
 
     #[test]
-    fn ring_evicts_oldest() {
-        let mut c = KvCache::new(1, 1, 3, 1);
-        for t in 0..5 {
-            let idx = c.advance(0);
-            c.write_k(0, 0, idx, &[t as f32]);
-            c.write_v(0, 0, idx, &[t as f32]);
+    fn trim_releases_pages_outside_the_window() {
+        let mut c = pool(1, 1, 3);
+        feed(&mut c, 0, 0..7);
+        // window 3 over 1-token pages: at most window + 1 pages survive a
+        // trim/advance cycle, and the retained tail reads back exactly
+        assert!(c.stats().pages_resident <= 4, "{:?}", c.stats());
+        for pos in 4..7 {
+            assert_eq!(c.k_row(0, 0, pos)[0], pos as f32);
         }
-        assert_eq!(c.len(0), 3);
-        // retained window is the last 3 tokens, oldest first
-        let got: Vec<f32> = (0..3).map(|j| c.k_row(0, 0, j)[0]).collect();
-        assert_eq!(got, vec![2.0, 3.0, 4.0]);
+        assert_eq!(c.attn_len(0), 3);
+        assert_eq!(c.len(0), 7);
+        c.debug_validate().unwrap();
     }
 
     #[test]
-    fn anchored_window_is_independent_of_the_live_head() {
-        // cap-3 ring, tokens 0..5 → rings [0, 1, 2, 0, 1]. The window
-        // anchored at token 3 (ring 0, limit 3) addresses rings {1, 2, 0} =
-        // tokens {1, 2, 3} *at token 3's time*; it must keep resolving those
-        // ring indices after token 4 moved the head (ring 1 now holds token
-        // 4 — readers that must not see such overwrites order write→attend
-        // per row, as decode.rs does).
-        let mut c = KvCache::new(1, 1, 3, 1);
-        let mut rings = Vec::new();
-        for t in 0..5 {
-            let idx = c.advance(0);
-            rings.push(idx);
-            c.write_k(0, 0, idx, &[t as f32]);
-            c.write_v(0, 0, idx, &[10.0 + t as f32]);
+    fn prefix_attach_shares_pages_then_cow_isolates_divergence() {
+        let prompt: Vec<i32> = (0..7).map(|t| 100 + t).collect();
+        let mut c = pool(2, 2, 16);
+        feed(&mut c, 0, 0..7);
+        c.register_prefix(0, &prompt);
+
+        // same prompt on slot 1: shares min(7, len−1) = 6 tokens → 3 pages
+        let s = c.attach_prefix(1, &prompt);
+        assert_eq!(s, 6);
+        assert_eq!(c.stats().pages_shared, 3);
+        assert!(c.stats().shared_bytes > 0);
+        for pos in 0..6 {
+            assert_eq!(c.k_row(1, 0, pos)[0], pos as f32, "shared rows read the donor's bytes");
         }
-        assert_eq!(rings, vec![0, 1, 2, 0, 1]);
-        let anchor = rings[3];
-        assert_eq!(c.k_row_at(0, 0, anchor, 3, 0)[0], 4.0, "ring 1 was overwritten by token 4");
-        assert_eq!(c.k_row_at(0, 0, anchor, 3, 1)[0], 2.0);
-        assert_eq!(c.k_row_at(0, 0, anchor, 3, 2)[0], 3.0);
-        assert_eq!(c.v_row_at(0, 0, anchor, 3, 2)[0], 13.0);
-        // live-head addressing (ring_at) sees tokens {2, 3, 4}
-        let got: Vec<f32> = (0..3).map(|j| c.k_row(0, 0, j)[0]).collect();
-        assert_eq!(got, vec![2.0, 3.0, 4.0]);
+
+        // slot 1 appends its token 6: lands mid-page in a shared page →
+        // exactly one copy-on-write, and the donor's rows are untouched
+        let before = c.stats().cow_faults;
+        let pos = c.advance(1);
+        assert_eq!(pos, 6);
+        assert_eq!(c.stats().cow_faults, before + 1);
+        c.write_k(1, 0, pos, &[999.0, 0.0]);
+        assert_eq!(c.k_row(0, 0, 6)[0], 6.0, "donor must not see the writer's divergence");
+        assert_eq!(c.k_row(1, 0, 6)[0], 999.0);
+        assert_eq!(c.k_row(1, 0, 4)[0], 4.0, "CoW copies the rows below the divergence point");
+        assert_eq!(c.stats().pages_shared, 2);
+        c.debug_validate().unwrap();
     }
 
     #[test]
-    fn reset_clears_only_that_slot() {
-        let mut c = KvCache::new(2, 2, 4, 1);
-        for slot in 0..2 {
-            let idx = c.advance(slot);
-            for layer in 0..2 {
-                c.write_k(slot, layer, idx, &[7.0]);
-                c.write_v(slot, layer, idx, &[8.0]);
-            }
-        }
+    fn reset_parks_registered_pages_for_reuse_and_reclaims_them() {
+        let prompt: Vec<i32> = (0..4).map(|t| 7 * t + 1).collect();
+        let mut c = KvCache::with_options(
+            2,
+            1,
+            16,
+            2,
+            KvConfig { page_tokens: 2, max_pages: 4, ..KvConfig::default() },
+        );
+        feed(&mut c, 0, 0..4);
+        c.register_prefix(0, &prompt);
         c.reset(0);
-        assert_eq!(c.len(0), 0);
-        assert_eq!(c.len(1), 1);
-        assert_eq!(c.k_row(1, 1, 0)[0], 7.0);
+        let st = c.stats();
+        assert_eq!(st.pages_resident, 0);
+        assert_eq!(st.pages_cached, 2, "registered pages stay cached after reset");
+
+        // a same-prefix admission revives the cached pages
+        let s = c.attach_prefix(0, &prompt);
+        assert_eq!(s, 3);
+        assert_eq!(c.stats().pages_resident, 2);
+        c.reset(0);
+
+        // an unrelated workload fills the bounded pool: the cached pages
+        // are reclaimed (refcount 0) instead of growth past max_pages
+        feed(&mut c, 1, 0..8);
+        assert_eq!(c.stats().pages_allocated, 4);
+        assert_eq!(c.stats().pages_cached, 0, "cache evicted under pressure");
+        // and the evicted prefix no longer matches
+        assert_eq!(c.attach_prefix(0, &prompt), 0);
+        c.debug_validate().unwrap();
+    }
+
+    #[test]
+    fn worst_case_pages_bounds_actual_residency() {
+        let c = pool(1, 4, 16);
+        // short sequence: exact page count + straddle margin
+        assert_eq!(c.worst_case_pages(5, 3, 1), 3);
+        // long sequence: bounded by window + chunk, not prompt + max_new
+        assert!(c.worst_case_pages(1000, 1000, 8) <= (15 + 8usize).div_ceil(4) + 1);
+        // chunk 0 feeds the whole prompt in one step: the whole-sequence
+        // bound (104 tokens) is tighter than window − 1 + chunk (115)
+        assert_eq!(c.worst_case_pages(100, 4, 0), 104usize.div_ceil(4) + 1);
+    }
+
+    #[test]
+    fn share_disabled_never_attaches() {
+        let prompt: Vec<i32> = (0..6).collect();
+        let mut c = KvCache::with_options(
+            2,
+            1,
+            16,
+            2,
+            KvConfig { page_tokens: 2, share: false, ..KvConfig::default() },
+        );
+        feed(&mut c, 0, 0..6);
+        c.register_prefix(0, &prompt);
+        assert_eq!(c.attach_prefix(1, &prompt), 0);
+        assert_eq!(c.stats().prefix_hits, 0);
     }
 }

@@ -9,7 +9,8 @@
 //!   single-file serialization (jsonx header + raw blobs).
 //! * [`gemm`]   — fused unpack→dequant→matmul microkernels (w2/w3/w4/w8,
 //!   per-group and per-channel), column-striped `std::thread` workers.
-//! * [`kv`]     — ring-buffer KV cache with per-sequence slots.
+//! * [`kv`]     — paged KV cache: refcounted fixed-size pages, per-slot
+//!   page tables, copy-on-write prompt-prefix sharing, LRU reclamation.
 //! * [`decode`] — host transformer forward (both families) + sampling;
 //!   incremental steps are bit-identical to the full-context forward.
 //! * [`sched`]  — continuous-batching request queue (admit/evict
@@ -32,6 +33,7 @@ use crate::rngx::Pcg32;
 use crate::telemetry::Recorder;
 
 pub use decode::{forward_full, forward_window, hidden_full, Sampler};
+pub use kv::{worst_case_pages_for, KvConfig, KvStats, Reclaim, DEFAULT_PAGE_TOKENS};
 pub use packed::{PackedLinear, PackedModel};
 pub use sched::{
     Completion, FinishReason, Request, RunStats, SchedConfig, Scheduler, SubmitError,
@@ -39,7 +41,7 @@ pub use sched::{
 
 use kv::KvCache;
 
-/// The serving facade: a packed model + a slot-limited KV arena.
+/// The serving facade: a packed model + a paged KV pool.
 pub struct Engine {
     pub model: PackedModel,
     pub max_batch: usize,
@@ -56,22 +58,49 @@ pub struct Engine {
 
 impl Engine {
     /// Build around an existing packed model. `max_batch` bounds the number
-    /// of concurrently decoding sequences (KV memory is allocated up
-    /// front: `max_batch × n_layers × seq × d_model` per K and V).
+    /// of concurrently decoding sequences; KV memory grows lazily in pages
+    /// as tokens arrive (bounded per sequence by the attention window
+    /// `seq`, shared across sequences with identical prompt prefixes).
     pub fn new(model: PackedModel, max_batch: usize) -> Engine {
         Engine::with_config(model, max_batch, SchedConfig::default())
     }
 
     /// [`Engine::new`] with explicit scheduler tuning.
     pub fn with_config(model: PackedModel, max_batch: usize, sched: SchedConfig) -> Engine {
+        Engine::with_kv_config(model, max_batch, sched, KvConfig::default())
+    }
+
+    /// [`Engine::with_config`] with explicit KV paging knobs (page size,
+    /// pool bound, sharing, reclamation order). Greedy output is
+    /// bit-identical for every setting; only memory/admission change.
+    pub fn with_kv_config(
+        model: PackedModel,
+        max_batch: usize,
+        sched: SchedConfig,
+        kv: KvConfig,
+    ) -> Engine {
         assert!(max_batch > 0);
-        let cache = KvCache::new(
+        let cache = KvCache::with_options(
             max_batch,
             model.cfg.n_layers,
             model.cfg.seq.max(1),
             model.cfg.d_model,
+            kv,
         );
         Engine { model, max_batch, sched, recorder: Recorder::default(), cache }
+    }
+
+    /// Swap the KV paging configuration (drops all cached state). Intended
+    /// for construction-time tuning — e.g. the server bounding the pool —
+    /// not for mid-flight reconfiguration.
+    pub fn configure_kv(&mut self, kv: KvConfig) {
+        self.cache = KvCache::with_options(
+            self.max_batch,
+            self.model.cfg.n_layers,
+            self.model.cfg.seq.max(1),
+            self.model.cfg.d_model,
+            kv,
+        );
     }
 
     /// Quantize + pack a (merged) `ParamStore` and serve it.
@@ -84,9 +113,15 @@ impl Engine {
         Ok(Engine::new(PackedModel::load(path)?, max_batch))
     }
 
-    /// KV arena bytes (the serving memory floor besides the weights).
+    /// KV bytes currently backed by arena memory (pages are allocated
+    /// lazily, so this is live usage, not a preallocated ceiling).
     pub fn kv_bytes(&self) -> usize {
         self.cache.mem_bytes()
+    }
+
+    /// Page-pool occupancy and sharing counters.
+    pub fn kv_stats(&self) -> KvStats {
+        self.cache.stats()
     }
 
     /// Serve a batch of requests to completion with continuous batching.
@@ -155,18 +190,22 @@ impl Engine {
         Ok((completions.iter().map(Engine::completion_text).collect(), stats))
     }
 
-    /// One-line memory summary: packed vs fp16 linear bytes + KV arena.
+    /// One-line memory summary: packed vs fp16 linear bytes + KV pool.
     pub fn memory_report(&self) -> String {
         let packed = self.model.packed_bytes();
         let fp16 = self.model.fp16_linear_bytes();
+        let ks = self.kv_stats();
         format!(
-            "{}: linears {} packed ({}) vs {} fp16 — {:.2}x smaller; kv arena {}",
+            "{}: linears {} packed ({}) vs {} fp16 — {:.2}x smaller; \
+             kv pool {} ({} pages × {} tokens)",
             self.model.cfg.name,
             crate::util::human_count(packed as f64),
             self.model.spec.label(16),
             crate::util::human_count(fp16 as f64),
             fp16 as f64 / packed as f64,
             crate::util::human_count(self.kv_bytes() as f64),
+            ks.pages_allocated,
+            ks.page_tokens,
         )
     }
 }

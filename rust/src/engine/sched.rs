@@ -2,7 +2,11 @@
 //!
 //! Requests queue up, get admitted into free KV-cache slots *mid-decode*,
 //! and are evicted the step they finish — the batch composition changes
-//! every step, exactly like a multi-user serving loop. Prefill and decode
+//! every step, exactly like a multi-user serving loop. Admission reasons
+//! in KV *pages*, not just slots: a request enters only when its
+//! worst-case page count is reservable against the pool bound, and a
+//! prompt prefix already resident in shared pages skips prefill entirely
+//! (see `kv.rs`). Prefill and decode
 //! are unified: an admitted sequence first streams its prompt tokens
 //! through [`decode::step_select`] (outputs ignored) in chunks of up to
 //! [`SchedConfig::prefill_chunk`] tokens per scheduler tick, then switches
@@ -142,10 +146,14 @@ struct Pending {
 struct Active {
     req: Request,
     slot: usize,
-    /// Prompt tokens already fed.
+    /// Prompt tokens already fed (attached shared-prefix tokens count as
+    /// fed: their K/V already exists, so prefill skips them).
     fed: usize,
     /// Next absolute position.
     pos: usize,
+    /// KV pages reserved against the pool bound at admission
+    /// (worst case for prompt + max_new; released on finish).
+    pages_reserved: usize,
     generated: Vec<i32>,
     last_sampled: i32,
     steps: usize,
@@ -180,6 +188,17 @@ pub struct RunStats {
     /// disconnected mid-stream, so the slot was reclaimed with no
     /// completion to deliver.
     pub cancelled: usize,
+    /// Peak KV pages referenced by live sequences in any one tick.
+    pub kv_pages_peak: usize,
+    /// Peak bytes prefix sharing saved in any one tick (duplicate copies
+    /// the attached pages replaced).
+    pub kv_shared_bytes_peak: usize,
+    /// Copy-on-write page copies at prefix divergence points (cumulative
+    /// over the cache's lifetime).
+    pub kv_cow_faults: u64,
+    /// Admissions that attached a non-empty shared prompt prefix
+    /// (cumulative over the cache's lifetime).
+    pub kv_prefix_hits: u64,
 }
 
 pub struct Scheduler {
@@ -187,6 +206,8 @@ pub struct Scheduler {
     cfg: SchedConfig,
     pending: VecDeque<Pending>,
     active: Vec<Option<Active>>,
+    /// KV pages reserved by live sequences against a bounded pool.
+    reserved_pages: usize,
     finished: Vec<Completion>,
     /// `(request id, token)` pairs sampled by the most recent `tick` —
     /// the incremental stream a serving front-end forwards to clients.
@@ -211,6 +232,7 @@ impl Scheduler {
             cfg,
             pending: VecDeque::new(),
             active: (0..max_batch).map(|_| None).collect(),
+            reserved_pages: 0,
             finished: Vec::new(),
             emitted: Vec::new(),
             stats: RunStats::default(),
@@ -335,6 +357,7 @@ impl Scheduler {
         for slot in 0..self.max_batch {
             if self.active[slot].as_ref().is_some_and(|a| a.req.id == id) {
                 let a = self.active[slot].take().expect("checked is_some");
+                self.reserved_pages -= a.pages_reserved;
                 cache.reset(slot);
                 self.stats.cancelled += 1;
                 self.recorder.finished(
@@ -357,22 +380,65 @@ impl Scheduler {
         false
     }
 
-    /// Admit pending requests into free slots (resets their cache slots).
-    fn admit(&mut self, cache: &mut KvCache) {
+    /// Admit pending requests into free slots. A request is admissible iff
+    /// a slot is free *and* its worst-case KV pages (prompt + max_new) are
+    /// reservable against the pool bound — explicit capacity accounting
+    /// where the old ring silently overwrote its window. FIFO order is
+    /// kept: a page-blocked queue head waits rather than being bypassed.
+    /// Returns whether admission stopped because of page reservation (so
+    /// the starvation counter does not misread pool pressure as a bug).
+    fn admit(&mut self, cache: &mut KvCache) -> bool {
         for slot in 0..self.max_batch {
             if self.active[slot].is_some() {
                 continue;
             }
-            let Some(p) = self.pending.pop_front() else { break };
+            // a request that could never fit the pool even when idle must
+            // not deadlock the queue head: finish it as a capacity
+            // truncation (no tokens), mirroring the positional-table cap
+            while self.pending.front().is_some_and(|p| {
+                let need =
+                    cache.worst_case_pages(p.req.prompt.len(), p.req.max_new, self.cfg.prefill_chunk);
+                cache.max_pages() > 0 && need > cache.max_pages()
+            }) {
+                let p = self.pending.pop_front().expect("front checked");
+                let id = p.req.id;
+                self.recorder.finished(
+                    id,
+                    FinishReason::PosCapacity.label(),
+                    0,
+                    p.t_submit.map(|t| t.elapsed()),
+                );
+                self.recorder
+                    .event("shed", || format!("req {id}: needs more kv pages than the pool"));
+                self.finished.push(Completion {
+                    id,
+                    prompt_len: p.req.prompt.len(),
+                    tokens: Vec::new(),
+                    steps: 0,
+                    finish: FinishReason::PosCapacity,
+                });
+            }
+            let Some(p) = self.pending.front() else { return false };
+            let need =
+                cache.worst_case_pages(p.req.prompt.len(), p.req.max_new, self.cfg.prefill_chunk);
+            if cache.max_pages() > 0 && self.reserved_pages + need > cache.max_pages() {
+                return true;
+            }
+            let p = self.pending.pop_front().expect("front checked");
             cache.reset(slot);
+            // skip prefill for whatever prompt prefix is already resident
+            // in shared pages (bit-identical K/V by construction)
+            let shared = cache.attach_prefix(slot, &p.req.prompt);
             if let Some(t0) = p.t_submit {
                 self.recorder.queue_wait(p.req.id, t0.elapsed());
             }
+            self.reserved_pages += need;
             self.active[slot] = Some(Active {
                 req: p.req,
                 slot,
-                fed: 0,
-                pos: 0,
+                fed: shared,
+                pos: shared,
+                pages_reserved: need,
                 generated: Vec::new(),
                 last_sampled: 0,
                 steps: 0,
@@ -381,6 +447,7 @@ impl Scheduler {
                 t_last: None,
             });
         }
+        false
     }
 
     /// Longest sequence length a slot can hold: the learned positional
@@ -394,9 +461,11 @@ impl Scheduler {
         }
     }
 
-    /// Retire a live sequence into `finished` and free its slot.
+    /// Retire a live sequence into `finished` and free its slot (and its
+    /// page reservation).
     fn finish(&mut self, slot: usize, cache: &mut KvCache, finish: FinishReason) {
         let a = self.active[slot].take().expect("finish on empty slot");
+        self.reserved_pages -= a.pages_reserved;
         self.recorder.finished(
             a.req.id,
             finish.label(),
@@ -434,7 +503,7 @@ impl Scheduler {
         if any_deadline {
             self.evict_expired(Instant::now(), cache);
         }
-        self.admit(cache);
+        let mut page_blocked = self.admit(cache);
         let hard_cap = Self::max_len(model);
         // evict sequences that cannot be stepped further (positional table
         // exhausted mid-prompt or mid-decode)
@@ -448,9 +517,11 @@ impl Scheduler {
         // freed capacity must be usable the same tick — re-run admission
         // after the eviction sweep instead of letting slots idle a step
         if evicted {
-            self.admit(cache);
+            page_blocked = self.admit(cache);
         }
-        if !self.pending.is_empty() && self.active.iter().any(Option::is_none) {
+        // a queue head waiting on page reservation is deliberate capacity
+        // accounting, not admission failing to use freed slots
+        if !self.pending.is_empty() && self.active.iter().any(Option::is_none) && !page_blocked {
             self.stats.starved_ticks += 1;
         }
 
@@ -513,6 +584,11 @@ impl Scheduler {
             let prompt_rows = n.min(a.req.prompt.len() - a.fed);
             a.fed += prompt_rows;
             a.pos += n;
+            if prompt_rows > 0 {
+                // the chunk's rows are written and immutable now (pages are
+                // append-only), so the prefix is safe to share from
+                cache.register_prefix(slot, &a.req.prompt[..a.fed]);
+            }
             if !needs[last_row] {
                 // still prefilling; no logits were produced for this chunk
                 continue;
@@ -547,6 +623,11 @@ impl Scheduler {
                 self.finish(slot, cache, f);
             }
         }
+        let ks = cache.stats();
+        self.stats.kv_pages_peak = self.stats.kv_pages_peak.max(ks.pages_resident);
+        self.stats.kv_shared_bytes_peak = self.stats.kv_shared_bytes_peak.max(ks.shared_bytes);
+        self.stats.kv_cow_faults = ks.cow_faults;
+        self.stats.kv_prefix_hits = ks.prefix_hits;
         self.recorder.tick(t_tick, prefill_rows, decode_rows);
         self.has_work()
     }

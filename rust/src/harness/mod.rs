@@ -288,6 +288,8 @@ pub fn engine_table(
             "shed",
             "deadline_evict",
             "starved_ticks",
+            "kv_pages",
+            "kv_shared_bytes",
         ],
     );
 
@@ -366,6 +368,10 @@ pub fn engine_table(
             stats.shed_requests.to_string(),
             stats.deadline_evictions.to_string(),
             stats.starved_ticks.to_string(),
+            // paged-KV residency: peak pages live at once and peak bytes
+            // prefix sharing saved (0 here — no prompts repeat offline)
+            stats.kv_pages_peak.to_string(),
+            stats.kv_shared_bytes_peak.to_string(),
         ]);
         t.print_last();
     }

@@ -14,6 +14,7 @@
 //!             [--batch B] [--queue-cap N] [--client-cap N] [--workers N]
 //!             [--deadline-ms D] [--max-new N] [--prefill-chunk N]
 //!             [--token-budget N] [--ckpt DIR] [--load-packed PATH]
+//!             [--kv-pages N] [--kv-page-tokens N]
 //!             [--fault-tick-ms N] [--fault-admit-ms N]
 //!             [--fault-drop-after N] [--no-telemetry] [--log-requests]
 //!             — overload-safe HTTP serving over the packed engine:
@@ -23,7 +24,10 @@
 //!             POST /admin/shutdown.
 //!             Sheds load with 429 + Retry-After past the queue cap,
 //!             evicts expired requests (504/`deadline`), drains
-//!             gracefully on SIGTERM. Pure host, no artifacts.
+//!             gracefully on SIGTERM. `--kv-pages` bounds the paged KV
+//!             pool; requests are admitted only when their worst-case
+//!             page count is reservable (429 otherwise). Pure host, no
+//!             artifacts.
 //!   profile   --model NAME [--config C] [--batch B] [--max-new N]
 //!             [--n N] [--prefill-chunk N] [--token-budget N]
 //!             [--ckpt DIR] [--load-packed PATH]
@@ -169,6 +173,8 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         default_max_new: cli.usize_or("max-new", 64),
         default_deadline_ms: cli.usize_or("deadline-ms", 0) as u64,
         retry_after_s: cli.usize_or("retry-after", 1) as u64,
+        kv_pages: cli.usize_or("kv-pages", 0),
+        kv_page_tokens: cli.usize_or("kv-page-tokens", 0),
         sampler: if topk > 1 {
             Sampler::TopK { k: topk, temperature: cli.f32_or("temp", 1.0) }
         } else {

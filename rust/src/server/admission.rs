@@ -1,15 +1,20 @@
 //! Admission control: the front door that keeps overload out of the
-//! engine. Two gates, both answered with HTTP 429 + `Retry-After`:
+//! engine. Three gates, all answered with HTTP 429 + `Retry-After`:
 //!
 //! * a **global in-flight ceiling** (`max_batch + queue_cap`): beyond it a
 //!   request could only sit in the scheduler's pending deque past its cap,
 //!   so it is shed here — cheaply, before the engine thread is touched;
 //! * a **per-client concurrency cap**: one client opening hundreds of
 //!   streams cannot monopolize the slots (backpressure is per-client, not
-//!   just global).
+//!   just global);
+//! * a **KV page budget**: each request is priced at its worst-case page
+//!   count ([`crate::engine::worst_case_pages_for`] — the same formula the
+//!   scheduler reserves by); when the priced total would exceed the pool,
+//!   the request is shed instead of parking in the queue behind memory it
+//!   may wait on indefinitely.
 //!
 //! Admission is a [`Permit`] (RAII): dropping it — on completion, client
-//! disconnect, or any error path — releases both counts, so leaks are
+//! disconnect, or any error path — releases all three counts, so leaks are
 //! impossible by construction.
 
 use std::collections::HashMap;
@@ -18,13 +23,15 @@ use std::sync::{Arc, Mutex};
 
 use crate::telemetry::Recorder;
 
-/// Why admission refused a request (both are 429s upstream).
+/// Why admission refused a request (all are 429s upstream).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AdmitError {
     /// The box is full: active slots + bounded queue all taken.
     Capacity { in_flight: usize, cap: usize },
     /// This client is at its concurrent-request cap.
     ClientCap { cap: usize },
+    /// The KV page pool cannot cover this request's worst case.
+    Pages { need: usize, free: usize },
 }
 
 impl std::fmt::Display for AdmitError {
@@ -36,6 +43,9 @@ impl std::fmt::Display for AdmitError {
             AdmitError::ClientCap { cap } => {
                 write!(f, "client at its concurrency cap ({cap})")
             }
+            AdmitError::Pages { need, free } => {
+                write!(f, "kv page pool exhausted (request needs {need} pages, {free} free)")
+            }
         }
     }
 }
@@ -45,36 +55,55 @@ pub struct Admission {
     max_in_flight: usize,
     /// Per-client concurrent request cap; 0 = unlimited.
     client_cap: usize,
+    /// KV pool size in pages backing the priced reservations; 0 = gate off.
+    page_budget: usize,
     in_flight: AtomicUsize,
+    pages_reserved: AtomicUsize,
     clients: Mutex<HashMap<String, usize>>,
     // counters for /v1/stats
     pub admitted: AtomicU64,
     pub shed_capacity: AtomicU64,
     pub shed_client: AtomicU64,
+    pub shed_pages: AtomicU64,
     /// Journals shed decisions for post-mortems; disabled by default.
     recorder: Recorder,
 }
 
 impl Admission {
     pub fn new(max_in_flight: usize, client_cap: usize) -> Arc<Admission> {
-        Admission::with_recorder(max_in_flight, client_cap, Recorder::default())
+        Admission::with_pages(max_in_flight, client_cap, 0, Recorder::default())
     }
 
     /// [`new`](Admission::new) with a telemetry handle: every shed —
-    /// global ceiling or per-client cap — lands in the event journal.
+    /// global ceiling, per-client cap, or page budget — lands in the
+    /// event journal.
     pub fn with_recorder(
         max_in_flight: usize,
         client_cap: usize,
         recorder: Recorder,
     ) -> Arc<Admission> {
+        Admission::with_pages(max_in_flight, client_cap, 0, recorder)
+    }
+
+    /// [`with_recorder`](Admission::with_recorder) plus a KV page budget
+    /// (`0` disables the page gate — offline-style unbounded pools).
+    pub fn with_pages(
+        max_in_flight: usize,
+        client_cap: usize,
+        page_budget: usize,
+        recorder: Recorder,
+    ) -> Arc<Admission> {
         Arc::new(Admission {
             max_in_flight,
             client_cap,
+            page_budget,
             in_flight: AtomicUsize::new(0),
+            pages_reserved: AtomicUsize::new(0),
             clients: Mutex::new(HashMap::new()),
             admitted: AtomicU64::new(0),
             shed_capacity: AtomicU64::new(0),
             shed_client: AtomicU64::new(0),
+            shed_pages: AtomicU64::new(0),
             recorder,
         })
     }
@@ -83,9 +112,24 @@ impl Admission {
         self.in_flight.load(Ordering::Relaxed)
     }
 
-    /// Try to admit one request for `client`; the permit must be held for
-    /// the request's whole lifetime (queue wait + decode + streaming).
-    pub fn try_admit(self: &Arc<Admission>, client: &str) -> Result<Permit, AdmitError> {
+    /// Worst-case KV pages currently reserved by held permits.
+    pub fn pages_reserved(&self) -> usize {
+        self.pages_reserved.load(Ordering::Relaxed)
+    }
+
+    /// Page budget the gate enforces (`0` = gate off).
+    pub fn page_budget(&self) -> usize {
+        self.page_budget
+    }
+
+    /// Try to admit one request for `client`, priced at `pages` worst-case
+    /// KV pages (`0` = exempt from the page gate); the permit must be held
+    /// for the request's whole lifetime (queue wait + decode + streaming).
+    pub fn try_admit(
+        self: &Arc<Admission>,
+        client: &str,
+        pages: usize,
+    ) -> Result<Permit, AdmitError> {
         // per-client first: a greedy client is told so even when the box
         // also happens to be full
         if self.client_cap > 0 {
@@ -129,8 +173,35 @@ impl Admission {
         } else {
             self.in_flight.fetch_add(1, Ordering::AcqRel);
         }
+        let pages = if self.page_budget > 0 { pages } else { 0 };
+        if pages > 0 {
+            // CAS loop mirrors the in-flight ceiling: workers racing here
+            // cannot over-commit the pool
+            let mut cur = self.pages_reserved.load(Ordering::Relaxed);
+            loop {
+                if cur + pages > self.page_budget {
+                    self.in_flight.fetch_sub(1, Ordering::AcqRel);
+                    self.release_client(client);
+                    self.shed_pages.fetch_add(1, Ordering::Relaxed);
+                    let free = self.page_budget - cur;
+                    self.recorder.event("shed_pages", || {
+                        format!("client {client}: kv page pool exhausted (need {pages}, {free} free)")
+                    });
+                    return Err(AdmitError::Pages { need: pages, free });
+                }
+                match self.pages_reserved.compare_exchange_weak(
+                    cur,
+                    cur + pages,
+                    Ordering::AcqRel,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            }
+        }
         self.admitted.fetch_add(1, Ordering::Relaxed);
-        Ok(Permit { adm: Arc::clone(self), client: client.to_string() })
+        Ok(Permit { adm: Arc::clone(self), client: client.to_string(), pages })
     }
 
     fn release_client(&self, client: &str) {
@@ -147,16 +218,21 @@ impl Admission {
     }
 }
 
-/// A live admission; dropping it releases the global and per-client slots.
+/// A live admission; dropping it releases the global slot, the per-client
+/// slot, and the request's KV page reservation.
 pub struct Permit {
     adm: Arc<Admission>,
     client: String,
+    pages: usize,
 }
 
 impl Drop for Permit {
     fn drop(&mut self) {
         self.adm.in_flight.fetch_sub(1, Ordering::AcqRel);
         self.adm.release_client(&self.client);
+        if self.pages > 0 {
+            self.adm.pages_reserved.fetch_sub(self.pages, Ordering::AcqRel);
+        }
     }
 }
 
@@ -167,25 +243,25 @@ mod tests {
     #[test]
     fn global_ceiling_sheds_and_releases() {
         let adm = Admission::new(2, 0);
-        let p1 = adm.try_admit("a").unwrap();
-        let _p2 = adm.try_admit("b").unwrap();
-        let err = adm.try_admit("c").unwrap_err();
+        let p1 = adm.try_admit("a", 0).unwrap();
+        let _p2 = adm.try_admit("b", 0).unwrap();
+        let err = adm.try_admit("c", 0).unwrap_err();
         assert!(matches!(err, AdmitError::Capacity { cap: 2, .. }));
         assert_eq!(adm.shed_capacity.load(Ordering::Relaxed), 1);
         drop(p1);
-        assert!(adm.try_admit("c").is_ok());
+        assert!(adm.try_admit("c", 0).is_ok());
     }
 
     #[test]
     fn per_client_cap_is_isolated() {
         let adm = Admission::new(0, 1);
-        let _p = adm.try_admit("alice").unwrap();
+        let _p = adm.try_admit("alice", 0).unwrap();
         assert!(matches!(
-            adm.try_admit("alice").unwrap_err(),
+            adm.try_admit("alice", 0).unwrap_err(),
             AdmitError::ClientCap { cap: 1 }
         ));
         // a different client is unaffected by alice's backlog
-        assert!(adm.try_admit("bob").is_ok());
+        assert!(adm.try_admit("bob", 0).is_ok());
         assert_eq!(adm.shed_client.load(Ordering::Relaxed), 1);
     }
 
@@ -193,40 +269,65 @@ mod tests {
     fn client_count_survives_capacity_rejection() {
         // a capacity shed must roll back the per-client increment
         let adm = Admission::new(1, 5);
-        let _p = adm.try_admit("a").unwrap();
-        let _ = adm.try_admit("b").unwrap_err();
+        let _p = adm.try_admit("a", 0).unwrap();
+        let _ = adm.try_admit("b", 0).unwrap_err();
         drop(_p);
         for _ in 0..5 {
             // b's failed attempt must not have consumed a client slot
-            let p = adm.try_admit("b").unwrap();
+            let p = adm.try_admit("b", 0).unwrap();
             drop(p);
         }
     }
 
     #[test]
+    fn page_budget_sheds_and_releases() {
+        let adm = Admission::with_pages(0, 0, 10, Recorder::default());
+        let p1 = adm.try_admit("a", 6).unwrap();
+        assert_eq!(adm.pages_reserved(), 6);
+        // 6 + 5 > 10: shed, and the in-flight/client increments roll back
+        let err = adm.try_admit("b", 5).unwrap_err();
+        assert_eq!(err, AdmitError::Pages { need: 5, free: 4 });
+        assert_eq!(adm.shed_pages.load(Ordering::Relaxed), 1);
+        assert_eq!(adm.in_flight(), 1);
+        // page-exempt requests still pass while the pool is tight
+        let p2 = adm.try_admit("b", 0).unwrap();
+        drop(p1);
+        assert_eq!(adm.pages_reserved(), 0);
+        let p3 = adm.try_admit("b", 10).unwrap();
+        drop(p2);
+        drop(p3);
+        assert_eq!(adm.pages_reserved(), 0);
+        assert_eq!(adm.in_flight(), 0);
+    }
+
+    #[test]
     fn sheds_are_journaled() {
         let rec = Recorder::new_enabled();
-        let adm = Admission::with_recorder(1, 1, rec.clone());
-        let _p = adm.try_admit("a").unwrap();
-        let _ = adm.try_admit("a").unwrap_err(); // per-client cap
-        let _ = adm.try_admit("b").unwrap_err(); // global ceiling
+        let adm = Admission::with_pages(2, 1, 4, rec.clone());
+        let _p = adm.try_admit("a", 2).unwrap();
+        let _ = adm.try_admit("a", 1).unwrap_err(); // per-client cap
+        let p2 = adm.try_admit("b", 1).unwrap();
+        let _ = adm.try_admit("c", 1).unwrap_err(); // global ceiling
+        drop(p2);
+        let _ = adm.try_admit("c", 3).unwrap_err(); // page budget (2 + 3 > 4)
         let t = rec.telemetry().unwrap();
         let kinds: Vec<&str> = t.journal.snapshot().iter().map(|e| e.kind).collect();
-        assert_eq!(kinds, vec!["shed_client", "shed_capacity"]);
+        assert_eq!(kinds, vec!["shed_client", "shed_capacity", "shed_pages"]);
     }
 
     #[test]
     fn concurrent_admission_never_overshoots() {
-        let adm = Admission::new(8, 0);
+        let adm = Admission::with_pages(8, 0, 16, Recorder::default());
         let mut handles = Vec::new();
         for t in 0..4 {
             let adm = Arc::clone(&adm);
             handles.push(std::thread::spawn(move || {
                 let mut got = 0usize;
                 for i in 0..64 {
-                    if let Ok(p) = adm.try_admit(&format!("c{t}")) {
+                    if let Ok(p) = adm.try_admit(&format!("c{t}"), 2) {
                         got += 1;
                         assert!(adm.in_flight() <= 8, "ceiling overshoot");
+                        assert!(adm.pages_reserved() <= 16, "page budget overshoot");
                         if i % 3 == 0 {
                             drop(p);
                         } else {
@@ -243,5 +344,6 @@ mod tests {
             h.join().unwrap();
         }
         assert!(adm.in_flight() <= 8);
+        assert!(adm.pages_reserved() <= 16);
     }
 }

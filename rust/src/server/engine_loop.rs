@@ -23,9 +23,10 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::time::{Duration, Instant};
 
+use crate::engine::kv::KvCache;
 use crate::engine::{Completion, Engine, Request, Sampler, Scheduler, SubmitError};
 use crate::rngx::Pcg32;
-use crate::telemetry::Recorder;
+use crate::telemetry::{KvPoolGauges, Recorder};
 
 use super::fault::FaultConfig;
 
@@ -59,6 +60,8 @@ pub struct EngineGauges {
     pub deadline_evictions: AtomicU64,
     pub cancelled: AtomicU64,
     pub starved_ticks: AtomicU64,
+    /// KV page-pool occupancy, republished from the cache every tick.
+    pub kv: KvPoolGauges,
 }
 
 /// How long the loop blocks for a job when idle before re-checking drain.
@@ -103,7 +106,7 @@ pub fn run(
             }
         }
         if !sched.has_work() {
-            publish(&sched, gauges);
+            publish(&sched, cache, gauges);
             if closed {
                 break; // drained: nothing in flight, no more submitters
             }
@@ -137,7 +140,7 @@ pub fn run(
         if fault.tick_delay_ms > 0 {
             std::thread::sleep(Duration::from_millis(fault.tick_delay_ms));
         }
-        publish(&sched, gauges);
+        publish(&sched, cache, gauges);
     }
 }
 
@@ -153,7 +156,7 @@ fn accept(sched: &mut Scheduler, streams: &mut HashMap<u64, Sender<StreamEvent>>
     }
 }
 
-fn publish(sched: &Scheduler, gauges: &EngineGauges) {
+fn publish(sched: &Scheduler, cache: &KvCache, gauges: &EngineGauges) {
     let pending = sched.pending_len();
     gauges.pending.store(pending, Ordering::Relaxed);
     gauges.peak_pending.fetch_max(pending, Ordering::Relaxed);
@@ -164,4 +167,17 @@ fn publish(sched: &Scheduler, gauges: &EngineGauges) {
     gauges.deadline_evictions.store(s.deadline_evictions as u64, Ordering::Relaxed);
     gauges.cancelled.store(s.cancelled as u64, Ordering::Relaxed);
     gauges.starved_ticks.store(s.starved_ticks as u64, Ordering::Relaxed);
+    let ks = cache.stats();
+    let total = if ks.max_pages > 0 { ks.max_pages } else { ks.pages_allocated };
+    let kv = &gauges.kv;
+    kv.pages_total.store(total as u64, Ordering::Relaxed);
+    kv.pages_free.store(ks.pages_free as u64, Ordering::Relaxed);
+    kv.pages_resident.store(ks.pages_resident as u64, Ordering::Relaxed);
+    kv.pages_cached.store(ks.pages_cached as u64, Ordering::Relaxed);
+    kv.pages_shared.store(ks.pages_shared as u64, Ordering::Relaxed);
+    kv.shared_bytes.store(ks.shared_bytes as u64, Ordering::Relaxed);
+    kv.resident_bytes.store(ks.resident_bytes as u64, Ordering::Relaxed);
+    kv.cow_faults.store(ks.cow_faults, Ordering::Relaxed);
+    kv.prefix_hits.store(ks.prefix_hits, Ordering::Relaxed);
+    kv.shared_tokens.store(ks.shared_tokens_total, Ordering::Relaxed);
 }

@@ -25,9 +25,11 @@
 //! ## Degradation ladder
 //!
 //! 1. queue has room → admit; tokens stream as the scheduler ticks;
-//! 2. in-flight ceiling (`max_batch + queue_cap`) or per-client cap hit →
-//!    **429** + `Retry-After` (the scheduler's pending deque is bounded by
-//!    construction — overload sheds, it never queues unboundedly);
+//! 2. in-flight ceiling (`max_batch + queue_cap`), per-client cap, or —
+//!    when `kv_pages` bounds the pool — the KV page budget hit → **429** +
+//!    `Retry-After` (the scheduler's pending deque is bounded by
+//!    construction — overload sheds, it never queues unboundedly, and a
+//!    request is only admitted once its worst-case KV pages are reserved);
 //! 3. per-request deadline passes (queued or mid-decode) → evicted with
 //!    [`FinishReason::Deadline`](crate::engine::FinishReason) → **504**
 //!    (non-stream) or a `"finish_reason":"deadline"` terminator (stream);
@@ -55,7 +57,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::engine::{Completion, Engine, FinishReason, Request, Sampler, SubmitError};
+use crate::engine::{
+    worst_case_pages_for, Completion, Engine, FinishReason, KvConfig, Request, Sampler,
+    SubmitError, DEFAULT_PAGE_TOKENS,
+};
 use crate::jsonx::{self, Value};
 use crate::telemetry::{self, Histogram, Recorder, Span, Telemetry};
 
@@ -83,6 +88,12 @@ pub struct ServerConfig {
     pub default_deadline_ms: u64,
     /// `Retry-After` seconds on 429/503.
     pub retry_after_s: u64,
+    /// Bound the KV page pool to this many pages and admit a request only
+    /// when its worst-case page count is reservable (429 otherwise); `0`
+    /// leaves the pool growing on demand and the page gate off.
+    pub kv_pages: usize,
+    /// Tokens per KV page; `0` keeps the engine's default.
+    pub kv_page_tokens: usize,
     /// Sampler for every request (per-request sampling params are not
     /// honoured: one scheduler session shares one sampler + RNG).
     pub sampler: Sampler,
@@ -109,6 +120,8 @@ impl Default for ServerConfig {
             default_max_new: 64,
             default_deadline_ms: 0,
             retry_after_s: 1,
+            kv_pages: 0,
+            kv_page_tokens: 0,
             sampler: Sampler::Greedy,
             seed: 0,
             fault: FaultConfig::default(),
@@ -136,6 +149,12 @@ struct Ctx {
     cfg: ServerConfig,
     model_name: String,
     max_batch: usize,
+    /// Inputs to the per-request worst-case page pricing (the attention
+    /// window, the pool's page size, and the scheduler's prefill chunk) —
+    /// the same numbers the engine-side reservation uses.
+    kv_window: usize,
+    kv_page_tokens: usize,
+    prefill_chunk: usize,
     admission: Arc<Admission>,
     job_tx: Sender<Job>,
     next_id: AtomicU64,
@@ -214,6 +233,21 @@ impl Server {
 
         engine.sched.queue_cap = cfg.queue_cap;
         let max_batch = engine.max_batch;
+        // bound the KV pool when asked: the admission gate prices every
+        // request with the same worst-case formula the scheduler reserves
+        // by, over the same (window, page size, prefill chunk) inputs
+        let kv_window = engine.model.cfg.seq.max(1);
+        let kv_page_tokens = match cfg.kv_page_tokens {
+            0 => DEFAULT_PAGE_TOKENS,
+            t => t,
+        };
+        if cfg.kv_pages > 0 || cfg.kv_page_tokens > 0 {
+            engine.configure_kv(KvConfig {
+                page_tokens: kv_page_tokens,
+                max_pages: cfg.kv_pages,
+                ..KvConfig::default()
+            });
+        }
         let fault = cfg.fault.with_env();
         let draining = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(Metrics::default());
@@ -228,8 +262,12 @@ impl Server {
             // server leaves whatever another enabled alone
             telemetry::kernel::enable(true);
         }
-        let admission =
-            Admission::with_recorder(max_batch + cfg.queue_cap, cfg.client_cap, recorder.clone());
+        let admission = Admission::with_pages(
+            max_batch + cfg.queue_cap,
+            cfg.client_cap,
+            cfg.kv_pages,
+            recorder.clone(),
+        );
         let (job_tx, job_rx) = channel::<Job>();
         let (conn_tx, conn_rx) = channel::<TcpStream>();
         let conn_rx = Arc::new(Mutex::new(conn_rx));
@@ -237,6 +275,9 @@ impl Server {
         let ctx = Arc::new(Ctx {
             model_name: engine.model.cfg.name.clone(),
             max_batch,
+            kv_window,
+            kv_page_tokens,
+            prefill_chunk: engine.sched.prefill_chunk,
             admission,
             job_tx,
             next_id: AtomicU64::new(1),
@@ -483,8 +524,17 @@ fn handle_completions(req: &http::HttpRequest, writer: &mut TcpStream, ctx: &Ctx
         s.client = params.client.clone();
     });
 
-    // admission: cheap shed before the engine thread is involved
-    let _permit = match ctx.admission.try_admit(&params.client) {
+    // admission: cheap shed before the engine thread is involved; the
+    // page price is this request's worst-case KV residency (ignored by
+    // the gate unless the pool is bounded)
+    let pages = worst_case_pages_for(
+        ctx.kv_window,
+        ctx.kv_page_tokens,
+        params.prompt.len(),
+        params.max_new,
+        ctx.prefill_chunk,
+    );
+    let _permit = match ctx.admission.try_admit(&params.client, pages) {
         Ok(p) => p,
         Err(e) => {
             ctx.metrics.shed_429.fetch_add(1, Ordering::Relaxed);
@@ -719,6 +769,7 @@ fn stats_json(ctx: &Ctx) -> String {
     let g = &ctx.gauges;
     let m = &ctx.metrics;
     let a = &ctx.admission;
+    let k = &ctx.gauges.kv;
     let n = |v: u64| jsonx::num(v as f64);
     let mut fields = vec![
         ("draining", Value::Bool(ctx.draining.load(Ordering::SeqCst))),
@@ -734,6 +785,25 @@ fn stats_json(ctx: &Ctx) -> String {
                 ("admitted", n(a.admitted.load(Ordering::Relaxed))),
                 ("shed_capacity", n(a.shed_capacity.load(Ordering::Relaxed))),
                 ("shed_client", n(a.shed_client.load(Ordering::Relaxed))),
+                ("shed_pages", n(a.shed_pages.load(Ordering::Relaxed))),
+            ]),
+        ),
+        (
+            "kv",
+            jsonx::obj(vec![
+                ("kv_page_tokens", jsonx::num(ctx.kv_page_tokens as f64)),
+                ("kv_page_budget", jsonx::num(a.page_budget() as f64)),
+                ("kv_pages_reserved", jsonx::num(a.pages_reserved() as f64)),
+                ("kv_pages_total", n(k.pages_total.load(Ordering::Relaxed))),
+                ("kv_pages_free", n(k.pages_free.load(Ordering::Relaxed))),
+                ("kv_pages_resident", n(k.pages_resident.load(Ordering::Relaxed))),
+                ("kv_pages_cached", n(k.pages_cached.load(Ordering::Relaxed))),
+                ("kv_pages_shared", n(k.pages_shared.load(Ordering::Relaxed))),
+                ("kv_shared_bytes", n(k.shared_bytes.load(Ordering::Relaxed))),
+                ("kv_resident_bytes", n(k.resident_bytes.load(Ordering::Relaxed))),
+                ("kv_cow_faults", n(k.cow_faults.load(Ordering::Relaxed))),
+                ("kv_prefix_hits", n(k.prefix_hits.load(Ordering::Relaxed))),
+                ("kv_shared_tokens", n(k.shared_tokens.load(Ordering::Relaxed))),
             ]),
         ),
         (
@@ -877,6 +947,21 @@ fn metrics_text(ctx: &Ctx) -> String {
     prom_counter(&mut out, "aq_admitted_total", "requests past admission", ld(&a.admitted));
     prom_counter(&mut out, "aq_shed_capacity_total", "sheds at the in-flight ceiling", ld(&a.shed_capacity));
     prom_counter(&mut out, "aq_shed_client_total", "sheds at a per-client cap", ld(&a.shed_client));
+    prom_counter(&mut out, "aq_shed_pages_total", "sheds at the KV page budget", ld(&a.shed_pages));
+
+    // KV page pool (republished from the cache every scheduler tick)
+    let k = &g.kv;
+    prom_gauge(&mut out, "aq_kv_pool_pages", "KV pool size in pages (allocated when unbounded)", k.pages_total.load(Ordering::Relaxed));
+    prom_gauge(&mut out, "aq_kv_pages_free", "KV pages immediately allocatable", k.pages_free.load(Ordering::Relaxed));
+    prom_gauge(&mut out, "aq_kv_pages_resident", "KV pages referenced by live sequences", k.pages_resident.load(Ordering::Relaxed));
+    prom_gauge(&mut out, "aq_kv_pages_cached", "refcount-0 KV pages kept for prefix reuse", k.pages_cached.load(Ordering::Relaxed));
+    prom_gauge(&mut out, "aq_kv_pages_shared", "KV pages referenced by two or more sequences", k.pages_shared.load(Ordering::Relaxed));
+    prom_gauge(&mut out, "aq_kv_pages_reserved", "worst-case KV pages reserved by admission", a.pages_reserved() as u64);
+    prom_gauge(&mut out, "aq_kv_shared_bytes", "KV bytes saved right now by prefix sharing", k.shared_bytes.load(Ordering::Relaxed));
+    prom_gauge(&mut out, "aq_kv_resident_bytes", "KV bytes held by live sequences", k.resident_bytes.load(Ordering::Relaxed));
+    prom_counter(&mut out, "aq_kv_cow_faults_total", "copy-on-write page copies at divergence points", k.cow_faults.load(Ordering::Relaxed));
+    prom_counter(&mut out, "aq_kv_prefix_hits_total", "admissions that attached a shared prompt prefix", k.prefix_hits.load(Ordering::Relaxed));
+    prom_counter(&mut out, "aq_kv_shared_tokens_total", "prompt tokens served from shared pages", k.shared_tokens.load(Ordering::Relaxed));
 
     // engine/scheduler
     prom_gauge(&mut out, "aq_pending", "requests queued for a KV slot", g.pending.load(Ordering::Relaxed) as u64);

@@ -77,6 +77,34 @@ impl Telemetry {
     }
 }
 
+/// KV page-pool occupancy gauges + sharing counters. The engine loop
+/// republishes them from `KvCache::stats()` after every tick; `/v1/stats`
+/// and `/metrics` read them without touching the engine thread. Plain
+/// always-on atomics like the scheduler gauges — observation only, no
+/// clock reads, no influence on allocation.
+#[derive(Default)]
+pub struct KvPoolGauges {
+    /// Pool bound in pages (allocated count when unbounded).
+    pub pages_total: AtomicU64,
+    pub pages_free: AtomicU64,
+    /// Pages referenced by at least one live sequence.
+    pub pages_resident: AtomicU64,
+    /// Refcount-0 pages the prefix registry keeps reclaimable.
+    pub pages_cached: AtomicU64,
+    /// Pages referenced by two or more sequences right now.
+    pub pages_shared: AtomicU64,
+    /// Bytes sharing saves right now (duplicate copies avoided).
+    pub shared_bytes: AtomicU64,
+    /// K+V bytes held by live sequences.
+    pub resident_bytes: AtomicU64,
+    /// Cumulative copy-on-write page copies at divergence points.
+    pub cow_faults: AtomicU64,
+    /// Cumulative admissions that attached a shared prompt prefix.
+    pub prefix_hits: AtomicU64,
+    /// Cumulative prompt tokens served from shared pages (prefill skipped).
+    pub shared_tokens: AtomicU64,
+}
+
 /// Cloneable recording handle; `Default` is disabled (all methods no-ops
 /// that never read the clock).
 #[derive(Clone, Default)]

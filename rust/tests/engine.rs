@@ -312,6 +312,75 @@ fn ring_eviction_matches_sliding_window_reference() {
     assert!(seq.len() > window + prompt.len(), "test must actually wrap the ring");
 }
 
+/// The tentpole acceptance check for paged KV: greedy completions are
+/// byte-identical to the pre-refactor reference trace (the ring was proven
+/// bit-identical to a sliding-window forward, so that forward *is* the
+/// reference) for every page size in {1, 4, 16, 64}, with and without
+/// prefix sharing, across both reclamation orders, and with the pool both
+/// unbounded and tightly bounded. Prompts share nested prefixes so the
+/// sharing + copy-on-write path actually fires, and the longest prompt
+/// overruns the attention window so trimming fires too.
+#[test]
+fn paged_kv_bit_stable_across_page_size_sharing_and_reclaim() {
+    use affinequant::engine::{worst_case_pages_for, KvConfig, Reclaim};
+
+    let ps = zoo::seeded_store("ll-s1", 42).unwrap();
+    let pm = PackedModel::from_store(&ps, QuantSpec::new(4, 128));
+    let window = pm.cfg.seq;
+
+    let shapes: [(usize, usize); 3] = [(24, 6), (26, 5), (140, 4)];
+    let reqs: Vec<Request> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(plen, max_new))| Request {
+            id: i as u64,
+            prompt: test_tokens(plen),
+            max_new,
+            eos: None,
+        })
+        .collect();
+
+    // reference trace: re-run the sliding-window forward after every token
+    let reference: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|r| {
+            let mut seq = r.prompt.clone();
+            let mut out = Vec::new();
+            for _ in 0..r.max_new {
+                let logits = decode::forward_window(&pm, &seq, window);
+                let tok = argmax(logits.row(seq.len() - 1));
+                out.push(tok);
+                seq.push(tok);
+            }
+            out
+        })
+        .collect();
+
+    let sched = SchedConfig { prefill_chunk: 4, ..SchedConfig::default() };
+    for page_tokens in [1usize, 4, 16, 64] {
+        for share in [true, false] {
+            for reclaim in [Reclaim::Lru, Reclaim::Mru] {
+                // tight enough that parked prefix pages must be reclaimed,
+                // roomy enough that every request is admissible
+                let worst = worst_case_pages_for(window, page_tokens, 140, 6, 4);
+                for max_pages in [0, 2 * worst + 2] {
+                    let kv = KvConfig { page_tokens, max_pages, share, reclaim };
+                    let mut e = Engine::with_kv_config(pm.clone(), 2, sched, kv);
+                    let (got, _) = e.generate(reqs.clone(), Sampler::Greedy, 0).unwrap();
+                    assert_eq!(got.len(), reqs.len());
+                    for (c, want) in got.iter().zip(&reference) {
+                        assert_eq!(
+                            &c.tokens, want,
+                            "{kv:?}: paged engine diverged from the pre-refactor reference"
+                        );
+                        assert_eq!(c.finish, FinishReason::MaxNew, "{kv:?}");
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// RoPE models keep decoding past the cache capacity via the sliding ring.
 #[test]
 fn ring_slides_past_capacity_for_rope_models() {

@@ -3,6 +3,7 @@
 
 use affinequant::coordinator::mask::MaskSchedule;
 use affinequant::coordinator::stability;
+use affinequant::engine::kv::{KvCache, KvConfig};
 use affinequant::linalg::{gj_inverse_nopivot, inverse, inverse_residual, sdd_margin};
 use affinequant::prop_assert;
 use affinequant::proptestx::Runner;
@@ -175,6 +176,207 @@ fn prop_quant_roundtrips() {
                     "pack/unpack mismatch at {bits} bits"
                 );
             }
+            Ok(())
+        },
+    );
+}
+
+/// A sequence's token at `pos`: its prompt, then a slot-salted tail
+/// standing in for sampled tokens (never registered for sharing).
+fn token_at(prompt: &[i32], salt: i32, pos: usize) -> i32 {
+    if pos < prompt.len() {
+        prompt[pos]
+    } else {
+        1000 + salt + pos as i32
+    }
+}
+
+/// Paged-KV bookkeeping survives random admit / chunked-advance / cancel
+/// interleavings over a family of prefix-sharing prompts: no double free
+/// (every page's refcount matches its table references, validated after
+/// every op), shared rows always read back the donor's bytes, and
+/// resetting every slot at the end drains all refcounts to zero.
+#[test]
+fn prop_paged_kv_interleavings_never_corrupt() {
+    Runner { cases: 60, ..Default::default() }.run(
+        "paged kv random interleavings",
+        |rng| rng.below(1 << 30),
+        |&seed| {
+            let mut rng = Pcg32::seeded(seed as u64 ^ 0x9e37_79b9);
+            let page_tokens = 1 + rng.below(4);
+            let window = 2 + rng.below(7);
+            let n_slots = 3usize;
+            let mut c = KvCache::with_options(
+                n_slots,
+                2,
+                window,
+                2,
+                KvConfig { page_tokens, ..KvConfig::default() },
+            );
+            // family of prompts sharing a common base prefix
+            let base: Vec<i32> = (0..10).map(|_| rng.below(5) as i32 + 1).collect();
+            let mut prompts: Vec<Vec<i32>> = Vec::new();
+            for _ in 0..n_slots {
+                let keep = 2 + rng.below(base.len() - 1);
+                let mut p = base[..keep].to_vec();
+                for _ in 0..rng.below(4) {
+                    p.push(rng.below(5) as i32 + 1);
+                }
+                prompts.push(p);
+            }
+            // per-slot live state: (prompt index, tokens appended, tail salt)
+            let mut live: Vec<Option<(usize, usize, i32)>> = vec![None; n_slots];
+            for _op in 0..48 {
+                let slot = rng.below(n_slots);
+                let cancel_roll = rng.below(4) == 0;
+                match live[slot] {
+                    None => {
+                        // admit: attach whatever prefix is already shared
+                        c.reset(slot);
+                        let pi = rng.below(prompts.len());
+                        let shared = c.attach_prefix(slot, &prompts[pi]);
+                        prop_assert!(
+                            shared < prompts[pi].len(),
+                            "attach returned {shared} for a {}-token prompt",
+                            prompts[pi].len()
+                        );
+                        let salt = rng.below(100) as i32;
+                        live[slot] = Some((pi, shared, salt));
+                    }
+                    Some(_) if cancel_roll => {
+                        // cancel / evict mid-flight
+                        c.reset(slot);
+                        live[slot] = None;
+                    }
+                    Some((pi, fed, salt)) => {
+                        // one scheduler step: trim once, then a chunk of rows
+                        let chunk = 1 + rng.below(3);
+                        c.trim(slot);
+                        for t in 0..chunk {
+                            let pos = c.advance(slot);
+                            prop_assert!(
+                                pos == fed + t,
+                                "advance returned {pos}, expected {}",
+                                fed + t
+                            );
+                            let tok = token_at(&prompts[pi], salt, pos);
+                            for layer in 0..c.n_layers {
+                                c.write_k(slot, layer, pos, &[tok as f32, pos as f32]);
+                                c.write_v(slot, layer, pos, &[pos as f32, tok as f32]);
+                            }
+                        }
+                        let fed = fed + chunk;
+                        let reg = fed.min(prompts[pi].len());
+                        c.register_prefix(slot, &prompts[pi][..reg]);
+                        live[slot] = Some((pi, fed, salt));
+                        // the attention window must read back exactly this
+                        // sequence's tokens — including rows served from
+                        // shared pages
+                        let len = c.len(slot);
+                        for pos in len - c.attn_len(slot)..len {
+                            let want = token_at(&prompts[pi], salt, pos) as f32;
+                            let got = c.k_row(slot, 0, pos)[0];
+                            prop_assert!(got == want, "slot {slot} pos {pos}: k {got} != {want}");
+                        }
+                    }
+                }
+                c.debug_validate()?;
+            }
+            // drain: resetting every slot returns all refcounts to zero
+            for slot in 0..n_slots {
+                c.reset(slot);
+            }
+            c.debug_validate()?;
+            let st = c.stats();
+            prop_assert!(st.pages_resident == 0, "{} pages resident after drain", st.pages_resident);
+            prop_assert!(st.pages_shared == 0 && st.shared_bytes == 0, "sharing after drain");
+            Ok(())
+        },
+    );
+}
+
+/// Attaching a prompt that diverges from a registered donor prefix at a
+/// fuzzed position costs exactly one copy-on-write when the divergence
+/// lands mid-page (zero at a page boundary), never touches the donor's
+/// rows, and never fires again for subsequent appends into the owned tail.
+#[test]
+fn prop_fuzzed_divergence_is_exactly_one_cow() {
+    Runner { cases: 80, ..Default::default() }.run(
+        "divergence => exactly one CoW",
+        |rng| rng.below(1 << 30),
+        |&seed| {
+            let mut rng = Pcg32::seeded(seed as u64 ^ 0x517c_c1b7);
+            let page_tokens = 1 + rng.below(4);
+            let mut c = KvCache::with_options(
+                2,
+                2,
+                64,
+                2,
+                KvConfig { page_tokens, ..KvConfig::default() },
+            );
+            let len = 2 + rng.below(15);
+            let donor: Vec<i32> = (0..len).map(|_| rng.below(6) as i32 + 1).collect();
+            for (pos, &tok) in donor.iter().enumerate() {
+                c.trim(0);
+                let p = c.advance(0);
+                prop_assert!(p == pos, "donor advance desync at {pos}");
+                for layer in 0..c.n_layers {
+                    c.write_k(0, layer, pos, &[tok as f32, pos as f32]);
+                    c.write_v(0, layer, pos, &[pos as f32, tok as f32]);
+                }
+            }
+            c.register_prefix(0, &donor);
+
+            // the attacher shares j tokens, then diverges
+            let j = 1 + rng.below(len);
+            let mut attacher = donor[..j].to_vec();
+            let diff = donor.get(j).map_or(7, |&t| t + 1); // != donor[j]
+            attacher.push(diff);
+            let shared = c.attach_prefix(1, &attacher);
+            prop_assert!(shared == j, "shared {shared}, expected {j}");
+
+            let before = c.stats().cow_faults;
+            let pos = c.advance(1);
+            prop_assert!(pos == j, "attacher position {pos}, expected {j}");
+            for layer in 0..c.n_layers {
+                c.write_k(1, layer, pos, &[diff as f32, pos as f32]);
+                c.write_v(1, layer, pos, &[pos as f32, diff as f32]);
+            }
+            let expected: u64 = if j % page_tokens == 0 { 0 } else { 1 };
+            let delta = c.stats().cow_faults - before;
+            prop_assert!(
+                delta == expected,
+                "divergence at {j} over {page_tokens}-token pages cost {delta} CoW, expected {expected}"
+            );
+            // donor rows untouched; CoW carried the rows below the
+            // divergence point over to the attacher
+            for p in 0..j {
+                prop_assert!(c.k_row(0, 0, p)[0] == donor[p] as f32, "donor row {p} corrupted");
+                prop_assert!(
+                    c.k_row(1, 0, p)[0] == donor[p] as f32,
+                    "attacher lost shared row {p}"
+                );
+            }
+            if j < donor.len() {
+                prop_assert!(
+                    c.k_row(0, 0, j)[0] == donor[j] as f32,
+                    "donor divergence row corrupted"
+                );
+            }
+            prop_assert!(c.k_row(1, 0, j)[0] == diff as f32, "attacher divergence row missing");
+            // appending into the now-owned tail never CoWs again
+            for _ in 0..page_tokens {
+                let p = c.advance(1);
+                for layer in 0..c.n_layers {
+                    c.write_k(1, layer, p, &[0.0, 0.0]);
+                    c.write_v(1, layer, p, &[0.0, 0.0]);
+                }
+            }
+            prop_assert!(
+                c.stats().cow_faults - before == expected,
+                "extra CoW on owned-tail appends"
+            );
+            c.debug_validate()?;
             Ok(())
         },
     );

@@ -144,6 +144,34 @@ fn sse_events(body: &str) -> Vec<String> {
         .collect()
 }
 
+/// Read from an open stream until `needle` shows up in the bytes so far
+/// (e.g. the first SSE `data:` frame proves the request is decoding).
+fn read_streamed_until(s: &mut TcpStream, needle: &str) -> Vec<u8> {
+    let mut acc = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        let n = s.read(&mut buf).expect("stream read");
+        assert!(n > 0, "stream closed before {needle:?} arrived");
+        acc.extend_from_slice(&buf[..n]);
+        if String::from_utf8_lossy(&acc).contains(needle) {
+            return acc;
+        }
+    }
+}
+
+/// Drain an SSE stream to completion and return its token events.
+fn stream_tokens(mut s: TcpStream, mut raw: Vec<u8>) -> Vec<i32> {
+    s.read_to_end(&mut raw).expect("drain stream");
+    let resp = parse_response(&raw);
+    assert_eq!(resp.status, 200);
+    let events = sse_events(&resp.body_str());
+    assert_eq!(events.last().map(String::as_str), Some("[DONE]"));
+    events[..events.len() - 2]
+        .iter()
+        .map(|e| jsonx::parse(e).expect("token event json").req("token").as_f64() as i32)
+        .collect()
+}
+
 fn wait_until(what: &str, mut ok: impl FnMut() -> bool) {
     let t0 = Instant::now();
     while !ok() {
@@ -561,6 +589,100 @@ fn telemetry_off_is_bit_identical_and_still_counts() {
     // stats JSON has no latency block
     let stats = jsonx::parse(&request(addr, "GET", "/v1/stats", "").body_str()).expect("stats");
     assert!(stats.get("latency").is_none());
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn kv_page_pool_exhaustion_sheds_429_with_retry_after_and_recovers() {
+    // opt-s1 window 128, 16-token pages, prefill chunk 16: a 100-token
+    // prompt with max_tokens 150 prices at min(250, 127 + 16) = 143 peak
+    // tokens -> ceil(143/16) + 1 = 10 pages. An 11-page budget leaves one
+    // free, so any follow-up (2 pages minimum) must shed — 429 with
+    // Retry-After, no panic, no queue growth.
+    let cfg = ServerConfig {
+        kv_pages: 11,
+        kv_page_tokens: 16,
+        queue_cap: 4,
+        retry_after_s: 3,
+        fault: FaultConfig { tick_delay_ms: 20, ..FaultConfig::default() },
+        ..quiet_cfg()
+    };
+    let handle = spawn(2, cfg);
+    let addr = handle.addr;
+    let long_prompt = "x".repeat(100);
+    let slow = format!("{{\"prompt\": \"{long_prompt}\", \"max_tokens\": 150, \"stream\": true}}");
+    let mut s1 = TcpStream::connect(addr).expect("connect");
+    send_request(&mut s1, "POST", "/v1/completions", &slow);
+    let _ = read_streamed_until(&mut s1, "data: ");
+
+    let small = "{\"prompt\": \"abcdef\", \"max_tokens\": 8}";
+    let resp = request(addr, "POST", "/v1/completions", small);
+    assert_eq!(resp.status, 429, "{}", resp.body_str());
+    assert!(resp.header("retry-after").is_some(), "page shed must carry Retry-After");
+    assert!(resp.body_str().contains("page"), "error names the page pool: {}", resp.body_str());
+
+    let stats = jsonx::parse(&request(addr, "GET", "/v1/stats", "").body_str()).expect("stats");
+    assert!(stats.req("admission").req("shed_pages").as_f64() >= 1.0);
+    assert_eq!(stats.req("kv").req("kv_page_budget").as_f64(), 11.0);
+
+    // dropping the hog releases its reservation and the pool recovers
+    drop(s1);
+    wait_until("page reservation released", || {
+        let body = request(addr, "GET", "/v1/stats", "").body_str();
+        jsonx::parse(&body).expect("stats").req("kv").req("kv_pages_reserved").as_f64() == 0.0
+    });
+    let resp = request(addr, "POST", "/v1/completions", small);
+    assert_eq!(resp.status, 200, "pool must recover after release: {}", resp.body_str());
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn shared_prompt_two_clients_share_pages_and_match_greedy() {
+    let prompt = "system: you are a terse assistant. user: say hi. ";
+    let offline = {
+        let mut engine = test_engine(2);
+        let reqs = Engine::byte_requests(&[prompt], 12);
+        let (c, _) = engine.generate(reqs, Sampler::Greedy, 0).expect("offline generate");
+        c.into_iter().next().expect("one completion").tokens
+    };
+
+    let cfg = ServerConfig {
+        kv_page_tokens: 4,
+        fault: FaultConfig { tick_delay_ms: 10, ..FaultConfig::default() },
+        ..quiet_cfg()
+    };
+    let handle = spawn(2, cfg);
+    let addr = handle.addr;
+
+    // first client streams long enough to stay live throughout
+    let a_body = format!("{{\"prompt\": \"{prompt}\", \"max_tokens\": 40, \"stream\": true}}");
+    let mut a = TcpStream::connect(addr).expect("connect");
+    send_request(&mut a, "POST", "/v1/completions", &a_body);
+    let a_head = read_streamed_until(&mut a, "data: ");
+
+    // second client, same prompt: admission attaches the prefix pages the
+    // first client's prefill registered instead of recomputing them
+    let b_body = format!("{{\"prompt\": \"{prompt}\", \"max_tokens\": 12, \"stream\": true}}");
+    let mut b = TcpStream::connect(addr).expect("connect");
+    send_request(&mut b, "POST", "/v1/completions", &b_body);
+    let b_head = read_streamed_until(&mut b, "data: ");
+
+    // while both sequences are live they reference the same prompt pages
+    wait_until("shared kv pages visible in /v1/stats", || {
+        let body = request(addr, "GET", "/v1/stats", "").body_str();
+        let stats = jsonx::parse(&body).expect("stats json");
+        stats.req("kv").req("kv_pages_shared").as_f64() > 0.0
+    });
+
+    let a_tokens = stream_tokens(a, a_head);
+    let b_tokens = stream_tokens(b, b_head);
+    assert_eq!(b_tokens, offline, "shared-prefix client must stay bit-identical to offline");
+    assert_eq!(&a_tokens[..12], &offline[..], "donor's greedy prefix must match offline");
+
+    let stats = jsonx::parse(&request(addr, "GET", "/v1/stats", "").body_str()).expect("stats");
+    assert!(stats.req("kv").req("kv_prefix_hits").as_f64() >= 1.0, "attach must be counted");
     handle.shutdown();
     handle.join();
 }

@@ -38,6 +38,12 @@ cargo test -q --no-default-features --test server
 echo "== /metrics smoke (no-default-features)"
 cargo test -q --no-default-features --test server metrics_
 
+# paged-KV sharing gate: two clients streaming the same prompt must share
+# KV pages (/v1/stats reports kv_pages_shared > 0) while their greedy
+# token prefixes stay identical to offline generate
+echo "== shared-prompt KV paging smoke (no-default-features)"
+cargo test -q --no-default-features --test server shared_
+
 if [[ "${1:-}" == "--with-pjrt" ]]; then
     echo "== cargo build --release (default features)"
     cargo build --release
