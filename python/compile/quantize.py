@@ -71,6 +71,26 @@ def fake_quant_act(x, qmax):
     return (q - zp) * scale
 
 
+def weight_quant_error(w, qmax, group):
+    """Per-matrix quantization error of plain RTN (identity LWC) fake quant.
+
+    Returns ``(mse, max_abs)`` of ``fake_quant(w) - w`` — the calibration
+    artifact the serving engine bakes per layer at pack time
+    (``LayerCalib.weight_mse`` / ``weight_max_abs`` in
+    ``rust/src/engine/packed.rs``), computed here on the AOT side so a
+    transform's effect on quant error can be inspected *before* packing.
+    Identity clipping (gamma/beta -> +inf ≈ sigmoid 1) matches the packed
+    path, which is plain per-group RTN on the merged weights.
+    """
+    din, dout = w.shape
+    wg, wmin, wmax = group_minmax(w, group)
+    scale = jnp.maximum((wmax - wmin) / qmax, EPS)
+    zp = jnp.round(-wmin / scale)
+    q = jnp.clip(jnp.round(wg / scale) + zp, 0.0, qmax)
+    err = ((q - zp) * scale).reshape(din, dout) - w
+    return jnp.mean(err * err), jnp.max(jnp.abs(err))
+
+
 def lwc_shapes(cfg, group):
     """(name, shape) for the LWC gamma/beta of each quantized weight."""
     shapes = []

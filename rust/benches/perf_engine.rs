@@ -26,10 +26,11 @@ use affinequant::report::{save_json, save_table};
 use affinequant::rngx::Pcg32;
 use affinequant::tensor::Tensor;
 
-/// The perf-trajectory snapshot this bench persists (`BENCH_8.json`): the
+/// The perf-trajectory snapshot this bench persists (`BENCH_9.json`): the
 /// ROADMAP asks every PR to leave a machine-readable record so the next
-/// re-anchor can see regressions, not just today's stdout.
-const BENCH_JSON: &str = "BENCH_8.json";
+/// re-anchor can see regressions, not just today's stdout. Anchored to the
+/// manifest dir (the repo root) so it lands there regardless of cwd.
+const BENCH_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_9.json");
 
 fn main() -> anyhow::Result<()> {
     let mut json_gemm: Vec<Value> = Vec::new();
@@ -127,7 +128,7 @@ fn main() -> anyhow::Result<()> {
     // and telemetry on with sampled kernel timing — the on-run must stay
     // within a few % tokens/s AND produce identical greedy tokens, which
     // is the serving-overhead acceptance the telemetry layer signed up
-    // for. The ratio and the latency percentiles land in BENCH_8.json.
+    // for. The ratio and the latency percentiles land in BENCH_9.json.
     let mut dt = Table::new(
         "engine decode throughput (opt-s2, w4g128, greedy)",
         &["batch", "tok_s_off", "tok_s_on", "on_off_ratio", "ttft_p50_ms", "it_p50_ms", "it_p99_ms", "kv_mb"],
@@ -336,24 +337,112 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(per_share[0], per_share[1], "prefix sharing must not change greedy output");
     }
 
+    // -------------------------- numeric-health sampling: overhead + parity
+    // Three identical greedy workloads: recorder off, recorder on (numeric
+    // sampling live at 1-in-16 decode rows), and recorder on + the w2
+    // divergence sampler. Acceptance: numeric sampling costs <= 2% tok/s
+    // and never changes a greedy token; both land in BENCH_9.json.
+    let mut nt = Table::new(
+        "numeric-health sampling overhead (opt-s2, w4g128, batch 8, greedy)",
+        &["mode", "tok_s", "vs_off", "sampled_rows", "probes", "w2_agree_pct"],
+    );
+    let json_numeric = {
+        let reqs = |n: usize| -> Vec<Request> {
+            (0..n)
+                .map(|i| Request {
+                    id: i as u64,
+                    prompt: vec![(i * 17 % 256) as i32, 5, 9],
+                    max_new: 64,
+                    eos: None,
+                })
+                .collect()
+        };
+        affinequant::telemetry::kernel::enable(false);
+        let mut e_off = Engine::from_store(&ps, QuantSpec::new(4, 128), 8);
+        let timer = affinequant::util::Timer::start();
+        let (base, stats_off) = e_off.generate(reqs(8), Sampler::Greedy, 0)?;
+        let tok_s_off = stats_off.tokens_processed as f64 / timer.secs();
+
+        let mut e_num = Engine::from_store(&ps, QuantSpec::new(4, 128), 8);
+        e_num.recorder = affinequant::telemetry::Recorder::new_enabled();
+        let timer = affinequant::util::Timer::start();
+        let (got_num, stats_num) = e_num.generate(reqs(8), Sampler::Greedy, 0)?;
+        let tok_s_num = stats_num.tokens_processed as f64 / timer.secs();
+
+        let mut e_div = Engine::from_store(&ps, QuantSpec::new(4, 128), 8);
+        e_div.recorder = affinequant::telemetry::Recorder::new_enabled();
+        e_div.enable_draft(QuantSpec::new(2, 64));
+        let timer = affinequant::util::Timer::start();
+        let (got_div, stats_div) = e_div.generate(reqs(8), Sampler::Greedy, 0)?;
+        let tok_s_div = stats_div.tokens_processed as f64 / timer.secs();
+
+        for (mode, got) in [("numeric sampling", &got_num), ("divergence probes", &got_div)] {
+            for (a, b) in base.iter().zip(got) {
+                assert_eq!(a.tokens, b.tokens, "{mode} changed greedy output");
+            }
+        }
+        let snap = |e: &Engine| e.recorder.telemetry().expect("enabled").numeric.snapshot();
+        let s_num = snap(&e_num);
+        let s_div = snap(&e_div);
+        let rows_num: u64 = s_num.layers.iter().map(|l| l.rows).sum();
+        let rows_div: u64 = s_div.layers.iter().map(|l| l.rows).sum();
+        assert!(rows_num > 0, "numeric sampling must observe rows when the recorder is on");
+        assert!(s_div.div.probes > 0, "the divergence sampler must fire on a 64-token decode");
+        let overhead = tok_s_num / tok_s_off.max(1e-12);
+        println!(
+            "\nnumeric sampling on/off tok/s ratio: {overhead:.3} (target: >=0.98); \
+             w2 top-1 agree {:.1}% over {} probes",
+            s_div.div.agree_pct(),
+            s_div.div.probes,
+        );
+        for (mode, tok_s, rows, probes, agree) in [
+            ("off", tok_s_off, 0u64, 0u64, f64::NAN),
+            ("numeric", tok_s_num, rows_num, 0, f64::NAN),
+            ("numeric+w2", tok_s_div, rows_div, s_div.div.probes, s_div.div.agree_pct()),
+        ] {
+            nt.row(vec![
+                mode.to_string(),
+                format!("{tok_s:.0}"),
+                format!("{:.3}", tok_s / tok_s_off.max(1e-12)),
+                rows.to_string(),
+                probes.to_string(),
+                if agree.is_nan() { "-".to_string() } else { format!("{agree:.1}") },
+            ]);
+            nt.print_last();
+        }
+        jsonx::obj(vec![
+            ("tok_s_off", jsonx::num(tok_s_off)),
+            ("tok_s_numeric_on", jsonx::num(tok_s_num)),
+            ("tok_s_numeric_divergence_on", jsonx::num(tok_s_div)),
+            ("numeric_on_off_ratio", jsonx::num(overhead)),
+            ("sampled_rows", jsonx::num(rows_num as f64)),
+            ("divergence_probes", jsonx::num(s_div.div.probes as f64)),
+            ("w2_top1_agree_pct", jsonx::num(s_div.div.agree_pct())),
+            ("w2_max_logit_delta", jsonx::num(s_div.div.max_logit_delta as f64)),
+        ])
+    };
+
     t.print();
     dt.print();
     tt.print();
     sh.print();
+    nt.print();
     save_table(&t, "perf_engine_gemm")?;
     save_table(&dt, "perf_engine_decode")?;
     save_table(&tt, "perf_engine_ttft")?;
     save_table(&sh, "perf_engine_sharing")?;
+    save_table(&nt, "perf_engine_numeric")?;
     save_json(
         BENCH_JSON,
         &jsonx::obj(vec![
-            ("pr", jsonx::num(8.0)),
+            ("pr", jsonx::num(9.0)),
             ("bench", jsonx::s("perf_engine")),
             ("threads", jsonx::num(std::thread::available_parallelism()?.get() as f64)),
             ("gemm_1024x1024", Value::Arr(json_gemm)),
             ("decode_opt_s2_w4g128", Value::Arr(json_decode)),
             ("ttft_ll_s1_256tok_w4g128", Value::Arr(json_ttft)),
             ("kv_prefix_sharing_ll_s1", Value::Arr(json_share)),
+            ("numeric_sampling_opt_s2_w4g128_b8", json_numeric),
             ("w4g128_b16_speedup_vs_fakequant", jsonx::num(w4b16_speedup)),
         ]),
     )?;

@@ -19,6 +19,7 @@
 //! Tests in `rust/tests/engine.rs` assert exact equality.
 
 use crate::rngx::Pcg32;
+use crate::telemetry::numeric::{NumericHealth, Welford};
 use crate::tensor::Tensor;
 
 use super::kv::KvCache;
@@ -158,6 +159,11 @@ fn add_bias(x: &mut [f32], bias: &[f32], m: usize) {
 }
 
 /// One transformer block over `m` rows (shared by incremental + full paths).
+/// `obs` is the numeric-health observation hook: `(handle, sampled row
+/// indices)` — the listed rows' residual-stream input (`x` before the
+/// pre-attention norm, the quantity the calibration probe enveloped) is
+/// folded into the per-layer live stats. Pure observation: `x` is read
+/// before any mutation, so the math below is untouched.
 fn layer_forward(
     model: &PackedModel,
     block: &PackedBlock,
@@ -165,11 +171,15 @@ fn layer_forward(
     x: &mut [f32],
     rows: &[RowCtx],
     cache: &mut KvCache,
+    obs: Option<(&NumericHealth, &[usize])>,
 ) {
     let cfg = &model.cfg;
     let m = rows.len();
     let d = cfg.d_model;
     let opt = cfg.family == "opt";
+    if let Some((nh, sampled)) = obs {
+        nh.record_rows(layer, x, d, sampled);
+    }
 
     // pre-attention norm
     let mut xn = vec![0.0f32; m * d];
@@ -342,6 +352,21 @@ pub fn step_select(
     cache: &mut KvCache,
     need_logits: Option<&[bool]>,
 ) -> Tensor {
+    step_observed(model, inputs, cache, need_logits, None)
+}
+
+/// [`step_select`] with the numeric-health observation hook: when `numeric`
+/// is live, 1-in-N rows (the handle's sampling ticket) have their per-layer
+/// input activations folded into the live drift statistics. Observation
+/// only — the computed logits are bit-identical with the hook on or off
+/// (asserted by parity tests).
+pub fn step_observed(
+    model: &PackedModel,
+    inputs: &[StepInput],
+    cache: &mut KvCache,
+    need_logits: Option<&[bool]>,
+    numeric: Option<&NumericHealth>,
+) -> Tensor {
     let m = inputs.len();
     assert!(m > 0, "empty step");
     // a slot's rows must form one contiguous run with consecutive
@@ -380,8 +405,15 @@ pub fn step_select(
             RowCtx { slot: inp.slot, pos, limit: cache.attn_len(inp.slot) }
         })
         .collect();
+    // decide the sampled rows once per step so every layer observes the
+    // same rows (keeps per-layer stats aligned); one ticket pull per row
+    let sampled: Vec<usize> = match numeric {
+        Some(nh) => (0..m).filter(|_| nh.sample()).collect(),
+        None => Vec::new(),
+    };
+    let obs = numeric.filter(|_| !sampled.is_empty()).map(|nh| (nh, sampled.as_slice()));
     for (layer, block) in model.blocks.iter().enumerate() {
-        layer_forward(model, block, layer, &mut x, &rows, cache);
+        layer_forward(model, block, layer, &mut x, &rows, cache, obs);
     }
     head_logits(model, &x, m, need_logits)
 }
@@ -404,9 +436,39 @@ pub fn hidden_full(model: &PackedModel, tokens: &[i32]) -> Tensor {
         })
         .collect();
     for (layer, block) in model.blocks.iter().enumerate() {
-        layer_forward(model, block, layer, &mut x, &rows, &mut cache);
+        layer_forward(model, block, layer, &mut x, &rows, &mut cache, None);
     }
     Tensor::new(vec![s_len, d], x)
+}
+
+/// Per-layer streaming stats of the residual-stream *input* of every block
+/// over a whole-context forward of `tokens` — the pack-time calibration
+/// pass (`PackedModel::bake_calibration`). Same quantity the serving-time
+/// observation hook samples, so envelope and live stats are comparable.
+pub fn layer_input_stats(model: &PackedModel, tokens: &[i32]) -> Vec<Welford> {
+    let s_len = tokens.len();
+    assert!(s_len > 0, "empty calibration probe");
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    let mut cache = KvCache::new(1, cfg.n_layers, s_len, d);
+    let mut x = vec![0.0f32; s_len * d];
+    let rows: Vec<RowCtx> = (0..s_len)
+        .map(|i| {
+            embed_row(model, tokens[i], i, &mut x[i * d..(i + 1) * d]);
+            let pos = cache.advance(0);
+            RowCtx { slot: 0, pos, limit: i + 1 }
+        })
+        .collect();
+    let mut stats = vec![Welford::default(); model.blocks.len()];
+    for (layer, block) in model.blocks.iter().enumerate() {
+        // x holds the input to `layer` right here (layer_forward mutates it
+        // into the layer's output in place)
+        for &v in x.iter() {
+            stats[layer].push(v);
+        }
+        layer_forward(model, block, layer, &mut x, &rows, &mut cache, None);
+    }
+    stats
 }
 
 /// Whole-context reference forward for one sequence: `(S, vocab)` logits
@@ -440,9 +502,94 @@ pub fn forward_window(model: &PackedModel, tokens: &[i32], window: usize) -> Ten
         })
         .collect();
     for (layer, block) in model.blocks.iter().enumerate() {
-        layer_forward(model, block, layer, &mut x, &rows, &mut cache);
+        layer_forward(model, block, layer, &mut x, &rows, &mut cache, None);
     }
     head_logits(model, &x, s_len, None)
+}
+
+// ----------------------------------------------------- divergence probing
+
+/// Result of one cross-bit-width divergence probe: how far a lower-bit
+/// draft variant diverges from the serving model on the same token window.
+#[derive(Clone, Debug)]
+pub struct DivergenceProbe {
+    /// Greedy top-1 tokens of each variant for the window's last position.
+    pub top1_serve: i32,
+    pub top1_draft: i32,
+    /// `top1_serve == top1_draft` — the speculative-decoding acceptance
+    /// proxy for this probe.
+    pub agree: bool,
+    /// Max |logit delta| over the vocab at the last position.
+    pub max_logit_delta: f32,
+    /// Max hidden-state |delta| of the last position's per-layer outputs,
+    /// folded into `groups` consecutive layer groups.
+    pub group_delta: Vec<f32>,
+}
+
+/// Run `tokens` through both models with self-contained scratch KV caches
+/// and compare the last position: per-layer hidden deltas (grouped) and
+/// final logits. Pure observation for the serving stack — touches no
+/// serving cache, consumes no RNG; both models must share a config.
+pub fn probe_divergence(
+    serve: &PackedModel,
+    draft: &PackedModel,
+    tokens: &[i32],
+    groups: usize,
+) -> DivergenceProbe {
+    assert_eq!(serve.cfg.n_layers, draft.cfg.n_layers, "probe needs same-depth variants");
+    assert_eq!(serve.cfg.d_model, draft.cfg.d_model, "probe needs same-width variants");
+    let (h_s, logit_s) = trace_last(serve, tokens);
+    let (h_d, logit_d) = trace_last(draft, tokens);
+    let n_layers = serve.cfg.n_layers;
+    let g = groups.clamp(1, n_layers);
+    let mut group_delta = vec![0f32; g];
+    for l in 0..n_layers {
+        let gi = l * g / n_layers;
+        let delta = h_s[l]
+            .iter()
+            .zip(&h_d[l])
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        group_delta[gi] = group_delta[gi].max(delta);
+    }
+    let top1_serve = argmax(&logit_s);
+    let top1_draft = argmax(&logit_d);
+    let max_logit_delta =
+        logit_s.iter().zip(&logit_d).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    DivergenceProbe {
+        top1_serve,
+        top1_draft,
+        agree: top1_serve == top1_draft,
+        max_logit_delta,
+        group_delta,
+    }
+}
+
+/// Whole-window forward capturing the last row's hidden state after every
+/// layer, plus its final logits (vocab head on that row only).
+fn trace_last(model: &PackedModel, tokens: &[i32]) -> (Vec<Vec<f32>>, Vec<f32>) {
+    let s_len = tokens.len();
+    assert!(s_len > 0, "empty probe window");
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    let mut cache = KvCache::new(1, cfg.n_layers, s_len, d);
+    let mut x = vec![0.0f32; s_len * d];
+    let rows: Vec<RowCtx> = (0..s_len)
+        .map(|i| {
+            embed_row(model, tokens[i], i, &mut x[i * d..(i + 1) * d]);
+            let pos = cache.advance(0);
+            RowCtx { slot: 0, pos, limit: i + 1 }
+        })
+        .collect();
+    let mut trace = Vec::with_capacity(model.blocks.len());
+    for (layer, block) in model.blocks.iter().enumerate() {
+        layer_forward(model, block, layer, &mut x, &rows, &mut cache, None);
+        trace.push(x[(s_len - 1) * d..s_len * d].to_vec());
+    }
+    let mut select = vec![false; s_len];
+    select[s_len - 1] = true;
+    let logits = head_logits(model, &x, s_len, Some(&select));
+    (trace, logits.row(s_len - 1).to_vec())
 }
 
 // -------------------------------------------------------------- sampling

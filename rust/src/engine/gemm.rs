@@ -308,6 +308,35 @@ pub fn packed_matvec_grouped(w: &PackedWeight, x: &[f32], y: &mut [f32]) {
     crate::telemetry::kernel::record_gemm(w.bits, t0);
 }
 
+/// Streaming quantization error of a packed weight against its pre-quant
+/// f32 reference: `(sum of squared error, max absolute error)` over all
+/// `din × dout` elements, computed row-at-a-time without materializing the
+/// dense dequant. Pack time only (calibration baking) — never on the serve
+/// path.
+pub fn weight_error(w: &PackedWeight, reference: &[f32]) -> (f64, f32) {
+    w.check();
+    assert_eq!(reference.len(), w.din * w.dout);
+    let mut crow = vec![0u8; w.dout];
+    let mut sum_sq = 0f64;
+    let mut max_abs = 0f32;
+    for k in 0..w.din {
+        unpack_seg(w.packed, w.bits, k * w.dout, &mut crow);
+        let gi = k / w.group_len;
+        let sc = &w.scales[gi * w.dout..(gi + 1) * w.dout];
+        let zp = &w.zps[gi * w.dout..(gi + 1) * w.dout];
+        let rr = &reference[k * w.dout..(k + 1) * w.dout];
+        for j in 0..w.dout {
+            let dq = (crow[j] as f32 - zp[j]) * sc[j];
+            let e = (dq - rr[j]).abs();
+            sum_sq += (e as f64) * (e as f64);
+            if e > max_abs {
+                max_abs = e;
+            }
+        }
+    }
+    (sum_sq, max_abs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -32,9 +32,11 @@ use crate::quant::QuantSpec;
 use crate::rngx::Pcg32;
 use crate::telemetry::Recorder;
 
-pub use decode::{forward_full, forward_window, hidden_full, Sampler};
+pub use decode::{
+    forward_full, forward_window, hidden_full, probe_divergence, DivergenceProbe, Sampler,
+};
 pub use kv::{worst_case_pages_for, KvConfig, KvStats, Reclaim, DEFAULT_PAGE_TOKENS};
-pub use packed::{PackedLinear, PackedModel};
+pub use packed::{default_probe, LayerCalib, PackedLinear, PackedModel};
 pub use sched::{
     Completion, FinishReason, Request, RunStats, SchedConfig, Scheduler, SubmitError,
 };
@@ -54,6 +56,9 @@ pub struct Engine {
     /// outputs (observation only — asserted by a parity test).
     pub recorder: Recorder,
     cache: KvCache,
+    /// Lower-bit draft variant for cross-bit-width divergence probing
+    /// (None = probing off). See [`Engine::enable_draft`].
+    draft: Option<PackedModel>,
 }
 
 impl Engine {
@@ -87,7 +92,21 @@ impl Engine {
             model.cfg.d_model,
             kv,
         );
-        Engine { model, max_batch, sched, recorder: Recorder::default(), cache }
+        Engine { model, max_batch, sched, recorder: Recorder::default(), cache, draft: None }
+    }
+
+    /// Derive a lower-bit draft variant of the serving model (double
+    /// quantization of the packed weights — no original f32 store needed)
+    /// and turn on cross-bit-width divergence probing for sessions with a
+    /// live recorder. Greedy outputs are bit-identical either way (the
+    /// probe only observes); memory grows by the draft's packed bytes.
+    pub fn enable_draft(&mut self, spec: QuantSpec) {
+        self.draft = Some(self.model.requantized(spec));
+    }
+
+    /// The divergence-probe draft variant, when enabled.
+    pub fn draft(&self) -> Option<&PackedModel> {
+        self.draft.as_ref()
     }
 
     /// Swap the KV paging configuration (drops all cached state). Intended
@@ -138,20 +157,27 @@ impl Engine {
     ) -> Result<(Vec<Completion>, RunStats)> {
         let mut sched = Scheduler::with_config(self.max_batch, self.sched);
         sched.recorder = self.recorder.clone();
+        self.recorder.numeric_install(
+            self.model.envelopes(),
+            self.model.spec.bits,
+            self.draft.as_ref().map(|d| d.spec.bits),
+        );
         for r in requests {
             let id = r.id;
             sched.submit(r).map_err(|e| anyhow::anyhow!("request {id}: {e}"))?;
         }
         let mut rng = Pcg32::seeded(seed);
-        let out = sched.run(&self.model, &mut self.cache, sampler, &mut rng);
+        let out =
+            sched.run_drafted(&self.model, self.draft.as_ref(), &mut self.cache, sampler, &mut rng);
         Ok((out, sched.stats))
     }
 
-    /// Split-borrow the model and KV arena — the serving loop drives its
-    /// own long-lived [`Scheduler`] session over them (streaming tokens
-    /// between ticks) instead of the run-to-completion `generate` path.
-    pub fn parts(&mut self) -> (&PackedModel, &mut KvCache) {
-        (&self.model, &mut self.cache)
+    /// Split-borrow the model, the divergence draft, and the KV arena — the
+    /// serving loop drives its own long-lived [`Scheduler`] session over
+    /// them (streaming tokens between ticks) instead of the
+    /// run-to-completion `generate` path.
+    pub fn parts(&mut self) -> (&PackedModel, Option<&PackedModel>, &mut KvCache) {
+        (&self.model, self.draft.as_ref(), &mut self.cache)
     }
 
     /// Byte-level requests, one per prompt, ids in prompt order — the

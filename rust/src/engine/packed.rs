@@ -189,6 +189,13 @@ impl PackedLinear {
         packed_gemm(&self.weight(), x, y, m);
     }
 
+    /// Quantization error vs the pre-quant reference weights: `(sum of
+    /// squared error, max absolute error)` over all elements, streamed
+    /// through the packed codes (pack-time calibration; not a serve path).
+    pub fn quant_error(&self, reference: &[f32]) -> (f64, f32) {
+        super::gemm::weight_error(&self.weight(), reference)
+    }
+
     /// Dense f32 dequantization (reference/tests; never on the serve path).
     pub fn dequantize(&self) -> Tensor {
         let g = self.spec.group_len(self.din);
@@ -241,6 +248,28 @@ impl PackedBlock {
     }
 }
 
+/// Per-layer calibration artifact baked into the AQPM header at pack time:
+/// activation envelopes from a deterministic probe forward (the
+/// residual-stream input of the block) plus the layer's aggregate weight
+/// quantization error. The serving-time drift detector
+/// (`telemetry/numeric.rs`) compares live sampled stats against these.
+/// `act_count == 0` marks a missing envelope (e.g. a pre-calibration AQPM
+/// file) — such layers report `no_data` rather than drift.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerCalib {
+    /// Max |x| over the layer's input activations during calibration.
+    pub act_absmax: f32,
+    pub act_mean: f32,
+    pub act_var: f32,
+    /// Activation elements the calibration probe observed.
+    pub act_count: u64,
+    /// Mean squared dequant-vs-reference error over the layer's quantized
+    /// linears (all elements pooled).
+    pub weight_mse: f32,
+    /// Max absolute dequant-vs-reference weight error in the layer.
+    pub weight_max_abs: f32,
+}
+
 /// A whole model in deployment form: f32 globals (embeddings + final norm)
 /// plus per-block packed linears. Built from a (merged) `ParamStore`.
 #[derive(Clone)]
@@ -249,6 +278,17 @@ pub struct PackedModel {
     pub spec: QuantSpec,
     pub globals: Vec<(String, Tensor)>,
     pub blocks: Vec<PackedBlock>,
+    /// One [`LayerCalib`] per block (may be empty for legacy AQPM files).
+    pub calib: Vec<LayerCalib>,
+}
+
+/// Deterministic calibration probe: a fixed short pseudo-sequence inside
+/// the vocab (and the positional table, for the opt family). Every pack of
+/// the same weights bakes identical envelopes.
+pub fn default_probe(cfg: &ModelConfig) -> Vec<i32> {
+    let v = cfg.vocab.min(256);
+    let n = 48usize.min(cfg.seq.saturating_sub(1)).max(8);
+    (0..n).map(|i| ((i * 37 + 11) % v) as i32).collect()
 }
 
 impl PackedModel {
@@ -266,20 +306,99 @@ impl PackedModel {
             .map(|(name, _, _)| (name.clone(), ps.globals_layout.tensor(ps.globals(), name)))
             .collect();
         let mut blocks = Vec::with_capacity(cfg.n_layers);
+        let mut calib = Vec::with_capacity(cfg.n_layers);
         for bi in 0..cfg.n_layers {
             let mut linears = Vec::new();
             let mut f32s = Vec::new();
+            let (mut sum_sq, mut n_elems, mut max_abs) = (0f64, 0u64, 0f32);
             for (name, _, _) in &ps.block_layout.entries {
                 let t = ps.block_tensor(bi, name);
                 if qnames.contains(&name.as_str()) {
-                    linears.push(PackedLinear::pack(name, &t, spec));
+                    let pl = PackedLinear::pack(name, &t, spec);
+                    let (sq, ma) = pl.quant_error(&t.data);
+                    sum_sq += sq;
+                    n_elems += t.data.len() as u64;
+                    max_abs = max_abs.max(ma);
+                    linears.push(pl);
                 } else {
                     f32s.push((name.clone(), t.data));
                 }
             }
+            calib.push(LayerCalib {
+                weight_mse: if n_elems > 0 { (sum_sq / n_elems as f64) as f32 } else { 0.0 },
+                weight_max_abs: max_abs,
+                ..Default::default()
+            });
             blocks.push(PackedBlock::new(linears, f32s));
         }
-        PackedModel { cfg, spec, globals, blocks }
+        let mut pm = PackedModel { cfg, spec, globals, blocks, calib };
+        let probe = default_probe(&pm.cfg);
+        pm.bake_calibration(&probe);
+        pm
+    }
+
+    /// Fill the activation-envelope half of [`PackedModel::calib`] by
+    /// running a forward over `probe` and folding the residual-stream input
+    /// of every layer into a streaming accumulator. Deterministic for a
+    /// fixed probe; allocates its own scratch KV cache (no serving state).
+    pub fn bake_calibration(&mut self, probe: &[i32]) {
+        let stats = super::decode::layer_input_stats(self, probe);
+        self.calib.resize(stats.len().max(self.calib.len()), LayerCalib::default());
+        for (c, w) in self.calib.iter_mut().zip(&stats) {
+            c.act_absmax = w.absmax();
+            c.act_mean = w.mean() as f32;
+            c.act_var = w.var() as f32;
+            c.act_count = w.count();
+        }
+    }
+
+    /// The baked calibration as telemetry envelopes (empty for legacy
+    /// files) — what `Recorder::numeric_install` consumes at session start.
+    pub fn envelopes(&self) -> Vec<crate::telemetry::numeric::Envelope> {
+        self.calib
+            .iter()
+            .map(|c| crate::telemetry::numeric::Envelope {
+                absmax: c.act_absmax,
+                mean: c.act_mean,
+                var: c.act_var,
+                count: c.act_count,
+                weight_mse: c.weight_mse,
+                weight_max_abs: c.weight_max_abs,
+            })
+            .collect()
+    }
+
+    /// Re-quantize every packed linear at another spec from its
+    /// *dequantized* weights (double quantization) — the self-contained way
+    /// to derive a lower-bit draft variant from a deployed model, with no
+    /// access to the original f32 store (works on loaded AQPM files too).
+    /// Weight-error calib is recomputed against the serving dequant (i.e.
+    /// it measures the *additional* error of the draft bit-width);
+    /// activation envelopes are inherited.
+    pub fn requantized(&self, spec: QuantSpec) -> PackedModel {
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        let mut calib = Vec::with_capacity(self.blocks.len());
+        for (bi, b) in self.blocks.iter().enumerate() {
+            let mut linears = Vec::with_capacity(b.linears.len());
+            let (mut sum_sq, mut n_elems, mut max_abs) = (0f64, 0u64, 0f32);
+            for l in &b.linears {
+                let dq = l.dequantize();
+                let pl = PackedLinear::pack(&l.name, &dq, spec);
+                let (sq, ma) = pl.quant_error(&dq.data);
+                sum_sq += sq;
+                n_elems += dq.data.len() as u64;
+                max_abs = max_abs.max(ma);
+                linears.push(pl);
+            }
+            let base = self.calib.get(bi).copied().unwrap_or_default();
+            calib.push(LayerCalib {
+                weight_mse: if n_elems > 0 { (sum_sq / n_elems as f64) as f32 } else { 0.0 },
+                weight_max_abs: max_abs,
+                ..base
+            });
+            blocks.push(PackedBlock::new(linears, b.f32s.clone()));
+        }
+        PackedModel { cfg: self.cfg.clone(), spec, globals: self.globals.clone(), blocks, calib }
     }
 
     pub fn global(&self, name: &str) -> &Tensor {
@@ -391,6 +510,24 @@ impl PackedModel {
             ("params", jsonx::num(cfg.params as f64)),
             ("bits", jsonx::num(self.spec.bits as f64)),
             ("group", jsonx::num(self.spec.group as f64)),
+            (
+                "calib",
+                Value::Arr(
+                    self.calib
+                        .iter()
+                        .map(|c| {
+                            jsonx::obj(vec![
+                                ("act_absmax", jsonx::num(c.act_absmax as f64)),
+                                ("act_mean", jsonx::num(c.act_mean as f64)),
+                                ("act_var", jsonx::num(c.act_var as f64)),
+                                ("act_count", jsonx::num(c.act_count as f64)),
+                                ("weight_mse", jsonx::num(c.weight_mse as f64)),
+                                ("weight_max_abs", jsonx::num(c.weight_max_abs as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("tensors", Value::Arr(entries)),
         ]);
         let htext = jsonx::emit(&header);
@@ -436,6 +573,23 @@ impl PackedModel {
             params: g("params"),
         };
         let spec = QuantSpec::new(g("bits") as u32, g("group"));
+        // pre-calibration AQPM files have no "calib" array; load them with
+        // empty calib (every layer reports no_data, never drift)
+        let calib: Vec<LayerCalib> = match header.get("calib") {
+            Some(arr) => arr
+                .as_arr()
+                .iter()
+                .map(|c| LayerCalib {
+                    act_absmax: c.req("act_absmax").as_f64() as f32,
+                    act_mean: c.req("act_mean").as_f64() as f32,
+                    act_var: c.req("act_var").as_f64() as f32,
+                    act_count: c.req("act_count").as_f64() as u64,
+                    weight_mse: c.req("weight_mse").as_f64() as f32,
+                    weight_max_abs: c.req("weight_max_abs").as_f64() as f32,
+                })
+                .collect(),
+            None => Vec::new(),
+        };
         fn blob<'a>(blobs: &'a [u8], path: &str, off: usize, len: usize) -> Result<&'a [u8]> {
             let end = off.checked_add(len).filter(|&e| e <= blobs.len());
             match end {
@@ -518,7 +672,7 @@ impl PackedModel {
             .zip(block_f32s)
             .map(|(l, f)| PackedBlock::new(l, f))
             .collect();
-        Ok(PackedModel { cfg, spec, globals, blocks })
+        Ok(PackedModel { cfg, spec, globals, blocks, calib })
     }
 }
 
@@ -593,6 +747,21 @@ mod tests {
         std::fs::remove_file(path).ok();
         assert_eq!(pm2.cfg.name, "ll-s1");
         assert_eq!(pm2.spec, pm.spec);
+        // baked calibration roundtrips (floats travel through jsonx text,
+        // so compare with a relative tolerance; counts are exact)
+        assert_eq!(pm2.calib.len(), pm.calib.len());
+        assert!(!pm.calib.is_empty(), "from_store must bake calibration");
+        let close = |a: f32, b: f32| (a - b).abs() <= 1e-4 * a.abs().max(1.0);
+        for (c1, c2) in pm.calib.iter().zip(&pm2.calib) {
+            assert!(c1.act_count > 0, "probe forward must observe activations");
+            assert_eq!(c1.act_count, c2.act_count);
+            assert!(close(c1.act_absmax, c2.act_absmax));
+            assert!(close(c1.act_mean, c2.act_mean));
+            assert!(close(c1.act_var, c2.act_var));
+            assert!(close(c1.weight_mse, c2.weight_mse));
+            assert!(close(c1.weight_max_abs, c2.weight_max_abs));
+            assert!(c1.weight_mse > 0.0, "3-bit quantization has nonzero weight error");
+        }
         assert_eq!(pm2.globals.len(), pm.globals.len());
         for ((n1, t1), (n2, t2)) in pm.globals.iter().zip(&pm2.globals) {
             assert_eq!(n1, n2);

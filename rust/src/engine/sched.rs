@@ -26,6 +26,7 @@ use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::rngx::Pcg32;
+use crate::telemetry::numeric::{PROBE_EVERY, PROBE_GROUPS, PROBE_WARMUP, PROBE_WINDOW};
 use crate::telemetry::Recorder;
 
 use super::decode::{self, sample_row, Sampler, StepInput};
@@ -213,6 +214,9 @@ pub struct Scheduler {
     /// the incremental stream a serving front-end forwards to clients.
     /// Cleared at the start of every tick.
     emitted: Vec<(u64, i32)>,
+    /// Decode-bearing ticks so far — the divergence-probe cadence clock
+    /// (deterministic: counts ticks, never wall time).
+    decode_ticks: u64,
     pub stats: RunStats,
     /// Telemetry handle; `Default` is disabled, in which case every
     /// recording call is an inline no-op and no clock is ever read — the
@@ -235,6 +239,7 @@ impl Scheduler {
             reserved_pages: 0,
             finished: Vec::new(),
             emitted: Vec::new(),
+            decode_ticks: 0,
             stats: RunStats::default(),
             recorder: Recorder::default(),
         }
@@ -492,6 +497,25 @@ impl Scheduler {
         sampler: Sampler,
         rng: &mut Pcg32,
     ) -> bool {
+        self.tick_drafted(model, None, cache, sampler, rng)
+    }
+
+    /// [`tick`](Scheduler::tick) with an optional lower-bit `draft` variant
+    /// of `model`: when the recorder is live, one live decode sequence is
+    /// periodically re-run through the draft ([`PROBE_WARMUP`] /
+    /// [`PROBE_EVERY`] cadence in decode-bearing ticks) and the top-1
+    /// agreement + logit/hidden deltas are recorded as cross-bit-width
+    /// divergence. The probe uses scratch KV caches and no RNG, so
+    /// scheduling, serving state, and sampled outputs are untouched —
+    /// greedy streams are bit-identical with or without a draft.
+    pub fn tick_drafted(
+        &mut self,
+        model: &PackedModel,
+        draft: Option<&PackedModel>,
+        cache: &mut KvCache,
+        sampler: Sampler,
+        rng: &mut Pcg32,
+    ) -> bool {
         self.emitted.clear();
         // telemetry tick clock: one read at tick start (None when disabled)
         let t_tick = self.recorder.now();
@@ -574,7 +598,8 @@ impl Scheduler {
         self.stats.tokens_processed += batch.len();
         self.stats.peak_batch = self.stats.peak_batch.max(batch.len());
 
-        let logits = decode::step_select(model, &batch, cache, Some(&needs));
+        let logits =
+            decode::step_observed(model, &batch, cache, Some(&needs), self.recorder.numeric());
         // one clock read per tick covers every TTFT/gap sample below
         let t_now = self.recorder.now();
 
@@ -628,8 +653,52 @@ impl Scheduler {
         self.stats.kv_shared_bytes_peak = self.stats.kv_shared_bytes_peak.max(ks.shared_bytes);
         self.stats.kv_cow_faults = ks.cow_faults;
         self.stats.kv_prefix_hits = ks.prefix_hits;
+        if decode_rows > 0 {
+            self.decode_ticks += 1;
+            self.maybe_probe_divergence(model, draft, cache);
+        }
         self.recorder.tick(t_tick, prefill_rows, decode_rows);
         self.has_work()
+    }
+
+    /// Cross-bit-width divergence sampling: on cadence, pick the live
+    /// fully-prefilled sequence with the longest history (deterministic
+    /// tie-break: lowest slot) and re-run its trailing token window through
+    /// both the serving model and the draft. Observation only — scratch KV,
+    /// no RNG, nothing of the serving state touched.
+    fn maybe_probe_divergence(
+        &self,
+        model: &PackedModel,
+        draft: Option<&PackedModel>,
+        cache: &KvCache,
+    ) {
+        let Some(draft) = draft else { return };
+        if self.recorder.numeric().is_none() {
+            return;
+        }
+        let due = self.decode_ticks == PROBE_WARMUP
+            || (self.decode_ticks > PROBE_WARMUP
+                && (self.decode_ticks - PROBE_WARMUP) % PROBE_EVERY == 0);
+        if !due {
+            return;
+        }
+        let cand = self
+            .active
+            .iter()
+            .flatten()
+            .filter(|a| !a.generated.is_empty() && a.fed == a.req.prompt.len())
+            .max_by_key(|a| (a.fed + a.generated.len(), std::cmp::Reverse(a.slot)));
+        let Some(a) = cand else { return };
+        let mut toks: Vec<i32> = Vec::with_capacity(a.fed + a.generated.len());
+        toks.extend_from_slice(&a.req.prompt[..a.fed]);
+        toks.extend_from_slice(&a.generated);
+        let window = PROBE_WINDOW.min(cache.window).min(toks.len());
+        if window == 0 {
+            return;
+        }
+        let tail = &toks[toks.len() - window..];
+        let probe = decode::probe_divergence(model, draft, tail, PROBE_GROUPS);
+        self.recorder.numeric_divergence(probe.agree, probe.max_logit_delta, &probe.group_delta);
     }
 
     /// Drive to completion; returns completions sorted by request id.
@@ -640,7 +709,20 @@ impl Scheduler {
         sampler: Sampler,
         rng: &mut Pcg32,
     ) -> Vec<Completion> {
-        while self.tick(model, cache, sampler, rng) {}
+        self.run_drafted(model, None, cache, sampler, rng)
+    }
+
+    /// [`run`](Scheduler::run) with an optional divergence-probe draft
+    /// variant (see [`tick_drafted`](Scheduler::tick_drafted)).
+    pub fn run_drafted(
+        &mut self,
+        model: &PackedModel,
+        draft: Option<&PackedModel>,
+        cache: &mut KvCache,
+        sampler: Sampler,
+        rng: &mut Pcg32,
+    ) -> Vec<Completion> {
+        while self.tick_drafted(model, draft, cache, sampler, rng) {}
         let mut out = std::mem::take(&mut self.finished);
         out.sort_by_key(|c| c.id);
         out

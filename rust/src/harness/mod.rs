@@ -290,6 +290,8 @@ pub fn engine_table(
             "starved_ticks",
             "kv_pages",
             "kv_shared_bytes",
+            "drift_layers",
+            "w2_agree_pct",
         ],
     );
 
@@ -328,6 +330,12 @@ pub fn engine_table(
         // gap percentiles (telemetry never changes the sampled tokens)
         let mut engine = Engine::with_config(pm, 16, sched);
         engine.recorder = Recorder::new_enabled();
+        // numeric health rides along: drift verdicts vs the baked
+        // envelopes, and (when the config is above 2 bits) the w2
+        // divergence sampler's top-1 agreement
+        if spec.bits > 2 {
+            engine.enable_draft(crate::quant::QuantSpec::new(2, spec.group));
+        }
         let reqs: Vec<Request> = (0..16)
             .map(|i| Request {
                 id: i as u64,
@@ -353,6 +361,20 @@ pub fn engine_table(
         let _ = engine.generate(ttft_req, Sampler::Greedy, 0)?;
         let ttft_ms = timer.secs() * 1e3;
 
+        let (drift_layers, w2_agree) = engine
+            .recorder
+            .telemetry()
+            .map(|tele| {
+                let snap = tele.numeric.snapshot();
+                let agree = if snap.div.probes == 0 {
+                    "-".to_string()
+                } else {
+                    format!("{:.1}", snap.div.agree_pct())
+                };
+                (tele.numeric.drift_layers().to_string(), agree)
+            })
+            .unwrap_or_else(|| ("-".to_string(), "-".to_string()));
+
         t.row(vec![
             config.clone(),
             format!("{max_diff:.2e}"),
@@ -372,6 +394,8 @@ pub fn engine_table(
             // prefix sharing saved (0 here — no prompts repeat offline)
             stats.kv_pages_peak.to_string(),
             stats.kv_shared_bytes_peak.to_string(),
+            drift_layers,
+            w2_agree,
         ]);
         t.print_last();
     }

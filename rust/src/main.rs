@@ -17,11 +17,15 @@
 //!             [--kv-pages N] [--kv-page-tokens N]
 //!             [--fault-tick-ms N] [--fault-admit-ms N]
 //!             [--fault-drop-after N] [--no-telemetry] [--log-requests]
+//!             [--draft-bits B]
 //!             — overload-safe HTTP serving over the packed engine:
 //!             POST /v1/completions (OpenAI-style, `"stream": true` for
 //!             SSE), GET /healthz, GET /v1/stats, GET /metrics
 //!             (Prometheus), GET /v1/trace/<id>, GET /v1/journal,
-//!             POST /admin/shutdown.
+//!             GET /v1/health/numeric, POST /admin/shutdown.
+//!             `--draft-bits` (default 2, 0 = off) double-quantizes a
+//!             lower-bit draft variant for the cross-bit-width divergence
+//!             sampler behind /v1/health/numeric.
 //!             Sheds load with 429 + Retry-After past the queue cap,
 //!             evicts expired requests (504/`deadline`), drains
 //!             gracefully on SIGTERM. `--kv-pages` bounds the paged KV
@@ -35,6 +39,13 @@
 //!             and sampled kernel timing enabled, then print the latency
 //!             breakdown (queue wait / TTFT / inter-token / tick phases /
 //!             kernels) and save it to results/profile_latency.{md,csv}.
+//!             Pure host, no artifacts.
+//!   doctor    --model NAME [--config C] [--batch B] [--max-new N]
+//!             [--n N] [--draft-bits B] [--ckpt DIR] [--load-packed PATH]
+//!             — numeric-health exhibit: canned workload with sampled
+//!             activation stats, per-layer drift verdicts against the
+//!             baked calibration envelopes, and the w-serve vs w-draft
+//!             divergence summary; saves results/numeric_health.{md,csv}.
 //!             Pure host, no artifacts.
 //!   train     --model NAME | --all  [--steps N] [--out DIR]      (pjrt)
 //!   quantize  --model NAME --method M --config w3a16g128 [--alpha A]
@@ -53,7 +64,8 @@ fn main() -> Result<()> {
         Ok(c) => c,
         Err(_) => {
             eprintln!(
-                "usage: affinequant <generate|serve|profile|train|quantize|eval|info> [--options]"
+                "usage: affinequant <generate|serve|profile|doctor|train|quantize|eval|info> \
+                 [--options]"
             );
             std::process::exit(2);
         }
@@ -66,6 +78,9 @@ fn main() -> Result<()> {
     }
     if cli.cmd == "profile" {
         return cmd_profile(&cli);
+    }
+    if cli.cmd == "doctor" {
+        return cmd_doctor(&cli);
     }
     pjrt_main(cli)
 }
@@ -163,7 +178,22 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     use affinequant::engine::Sampler;
     use affinequant::server::{fault::FaultConfig, install_signal_handlers, Server, ServerConfig};
 
-    let engine = build_engine(cli, "serve")?;
+    let mut engine = build_engine(cli, "serve")?;
+    let telemetry = !cli.flag("no-telemetry");
+    // the cross-bit-width divergence sampler needs a lower-bit draft
+    // variant; double-quantized from the serving weights so it also works
+    // for --load-packed (no ParamStore around). 0 disables.
+    let draft_bits = cli.usize_or("draft-bits", 2) as u32;
+    if telemetry && draft_bits > 0 && draft_bits < engine.model.spec.bits {
+        engine.enable_draft(affinequant::quant::QuantSpec::new(
+            draft_bits,
+            engine.model.spec.group,
+        ));
+        eprintln!(
+            "[serve] divergence sampler on: w{} serve vs w{draft_bits} draft",
+            engine.model.spec.bits
+        );
+    }
     let topk = cli.usize_or("topk", 0);
     let cfg = ServerConfig {
         addr: format!("{}:{}", cli.str_or("addr", "127.0.0.1"), cli.usize_or("port", 8080)),
@@ -186,7 +216,7 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
             admit_delay_ms: cli.usize_or("fault-admit-ms", 0) as u64,
             drop_after_tokens: cli.usize_or("fault-drop-after", 0),
         },
-        telemetry: !cli.flag("no-telemetry"),
+        telemetry,
         log_requests: cli.flag("log-requests"),
     };
     eprintln!("[serve] {}", engine.memory_report());
@@ -282,11 +312,105 @@ fn cmd_profile(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// Numeric-health exhibit: run the canned workload with the recorder and
+/// the cross-bit-width divergence sampler on, then print (and save to
+/// `results/numeric_health.{md,csv}`) the per-layer drift verdicts against
+/// the baked calibration envelopes.
+fn cmd_doctor(cli: &Cli) -> Result<()> {
+    use affinequant::benchx::Table;
+    use affinequant::engine::{Request, Sampler};
+    use affinequant::quant::QuantSpec;
+    use affinequant::telemetry::{kernel, Recorder};
+    use affinequant::util::{human_secs, Timer};
+
+    let mut engine = build_engine(cli, "doctor")?;
+    engine.recorder = Recorder::new_enabled();
+    kernel::enable(true);
+    let serve_bits = engine.model.spec.bits;
+    let draft_bits = cli.usize_or("draft-bits", 2) as u32;
+    if draft_bits > 0 && draft_bits < serve_bits {
+        engine.enable_draft(QuantSpec::new(draft_bits, engine.model.spec.group));
+        eprintln!("[doctor] divergence sampler: w{serve_bits} serve vs w{draft_bits} draft");
+    }
+    eprintln!("[doctor] {}", engine.memory_report());
+
+    // same canned mixed-length workload as `profile`; decode tails are long
+    // enough that the divergence sampler fires (first probe at decode tick
+    // 4) and every layer clears the drift detector's minimum window
+    let n = cli.usize_or("n", 6).max(1);
+    let max_new = cli.usize_or("max-new", 48);
+    let seq = engine.model.cfg.seq;
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| {
+            let plen = (seq * (1 + i % 3) / 4).saturating_sub(max_new).max(1);
+            Request {
+                id: i as u64 + 1,
+                prompt: (0..plen).map(|j| (j % 251) as i32).collect(),
+                max_new,
+                eos: None,
+            }
+        })
+        .collect();
+    let t = Timer::start();
+    let (_completions, stats) = engine.generate(reqs, Sampler::Greedy, 1)?;
+    let secs = t.secs();
+    eprintln!(
+        "[doctor] {} tokens generated in {} — {:.1} tok/s",
+        stats.tokens_generated,
+        human_secs(secs),
+        stats.tokens_processed as f64 / secs.max(1e-9),
+    );
+
+    let tele = engine.recorder.telemetry().expect("recorder was enabled above");
+    let snap = tele.numeric.snapshot();
+    let mut table = Table::new(
+        "numeric health (doctor workload)",
+        &[
+            "layer",
+            "verdict",
+            "baked absmax",
+            "live absmax",
+            "sampled rows",
+            "outlier %",
+            "weight mse",
+            "weight max|e|",
+        ],
+    );
+    for l in &snap.layers {
+        table.row(vec![
+            l.layer.to_string(),
+            l.verdict().to_string(),
+            format!("{:.4}", l.env.absmax),
+            format!("{:.4}", l.absmax),
+            l.rows.to_string(),
+            format!("{:.1}", 100.0 * l.outlier_frac),
+            format!("{:.3e}", l.env.weight_mse),
+            format!("{:.4}", l.env.weight_max_abs),
+        ]);
+    }
+    table.print();
+    let drift_layers = snap.layers.iter().filter(|l| l.drifting).count();
+    let d = &snap.div;
+    eprintln!(
+        "[doctor] drift layers: {drift_layers}/{}; divergence: {} probes, \
+         top-1 agree {:.1}% (w{} vs w{}), max |logit delta| {:.4}",
+        snap.layers.len(),
+        d.probes,
+        d.agree_pct(),
+        d.serve_bits,
+        d.draft_bits,
+        d.max_logit_delta,
+    );
+    affinequant::report::save_table(&table, "numeric_health")?;
+    Ok(())
+}
+
 #[cfg(not(feature = "pjrt"))]
 fn pjrt_main(cli: Cli) -> Result<()> {
     anyhow::bail!(
         "subcommand {:?} needs the PJRT runtime; this binary was built with \
-         --no-default-features (only `generate` and `serve` are available)",
+         --no-default-features (only `generate`, `serve`, `profile`, and \
+         `doctor` are available)",
         cli.cmd
     )
 }

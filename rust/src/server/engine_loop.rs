@@ -79,7 +79,13 @@ pub fn run(
 ) {
     let sched_cfg = engine.sched;
     let max_batch = engine.max_batch;
-    let (model, cache) = engine.parts();
+    let (model, draft, cache) = engine.parts();
+    // baked calibration envelopes ground the numeric-health drift verdicts
+    recorder.numeric_install(
+        model.envelopes(),
+        model.spec.bits,
+        draft.map(|d| d.spec.bits),
+    );
     let mut sched = Scheduler::with_config(max_batch, sched_cfg);
     sched.recorder = recorder.clone();
     let mut rng = Pcg32::seeded(seed);
@@ -114,7 +120,7 @@ pub fn run(
         }
 
         // ---- one model step (deadline sweep happens inside tick)
-        sched.tick(model, cache, sampler, &mut rng);
+        sched.tick_drafted(model, draft, cache, sampler, &mut rng);
 
         // ---- stream this tick's tokens; a dead receiver = disconnected
         // client, so reclaim the slot instead of decoding to nobody

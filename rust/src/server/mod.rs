@@ -20,6 +20,7 @@
 //! | `POST /v1/completions` | OpenAI-style; `"stream": true` = SSE over chunked transfer |
 //! | `GET /healthz`         | liveness + drain state                          |
 //! | `GET /v1/stats`        | admission/scheduler/HTTP counters (JSON)        |
+//! | `GET /v1/health/numeric` | per-layer drift verdicts + divergence summary (404 when telemetry off) |
 //! | `POST /admin/shutdown` | begin graceful drain (what SIGTERM also does)   |
 //!
 //! ## Degradation ladder
@@ -406,6 +407,14 @@ fn handle_connection(stream: TcpStream, ctx: &Ctx) {
         ("GET", "/v1/journal") => match ctx.recorder.telemetry() {
             Some(t) => {
                 let _ = http::write_json(&mut writer, 200, &[], &journal_json(t));
+            }
+            None => {
+                let _ = http::write_json(&mut writer, 404, &[], &err_json("telemetry disabled"));
+            }
+        },
+        ("GET", "/v1/health/numeric") => match ctx.recorder.telemetry() {
+            Some(t) => {
+                let _ = http::write_json(&mut writer, 200, &[], &numeric_health_json(t));
             }
             None => {
                 let _ = http::write_json(&mut writer, 404, &[], &err_json("telemetry disabled"));
@@ -918,13 +927,85 @@ fn journal_json(t: &Telemetry) -> String {
     ]))
 }
 
+/// `GET /v1/health/numeric` — per-layer numeric-health verdicts: the baked
+/// calibration envelope, the live sampled activation stats, the drift
+/// verdict (`ok` / `no_data` / `drifting`), and the cross-bit-width
+/// divergence summary. `status` is the worst per-layer verdict.
+fn numeric_health_json(t: &Telemetry) -> String {
+    let snap = t.numeric.snapshot();
+    let drift_layers = snap.layers.iter().filter(|l| l.drifting).count();
+    let status = if drift_layers > 0 {
+        "drifting"
+    } else if !t.numeric.installed() || snap.layers.is_empty() {
+        "no_data"
+    } else {
+        "ok"
+    };
+    let layers: Vec<Value> = snap
+        .layers
+        .iter()
+        .map(|l| {
+            jsonx::obj(vec![
+                ("layer", jsonx::num(l.layer as f64)),
+                ("verdict", jsonx::s(l.verdict())),
+                (
+                    "baked",
+                    jsonx::obj(vec![
+                        ("absmax", jsonx::num(l.env.absmax as f64)),
+                        ("mean", jsonx::num(l.env.mean as f64)),
+                        ("var", jsonx::num(l.env.var as f64)),
+                        ("count", jsonx::num(l.env.count as f64)),
+                        ("weight_mse", jsonx::num(l.env.weight_mse as f64)),
+                        ("weight_max_abs", jsonx::num(l.env.weight_max_abs as f64)),
+                    ]),
+                ),
+                (
+                    "live",
+                    jsonx::obj(vec![
+                        ("rows", jsonx::num(l.rows as f64)),
+                        ("count", jsonx::num(l.count as f64)),
+                        ("mean", jsonx::num(l.mean)),
+                        ("var", jsonx::num(l.var)),
+                        ("absmax", jsonx::num(l.absmax as f64)),
+                        ("outliers", jsonx::num(l.outliers as f64)),
+                        ("outlier_frac", jsonx::num(l.outlier_frac)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    let d = &snap.div;
+    jsonx::emit(&jsonx::obj(vec![
+        ("status", jsonx::s(status)),
+        ("drift_layers", jsonx::num(drift_layers as f64)),
+        ("layers", Value::Arr(layers)),
+        (
+            "divergence",
+            jsonx::obj(vec![
+                ("serve_bits", jsonx::num(d.serve_bits as f64)),
+                ("draft_bits", jsonx::num(d.draft_bits as f64)),
+                ("probes", jsonx::num(d.probes as f64)),
+                ("agree", jsonx::num(d.agree as f64)),
+                ("agree_pct", jsonx::num(d.agree_pct())),
+                ("max_logit_delta", jsonx::num(d.max_logit_delta as f64)),
+                ("mean_logit_delta", jsonx::num(d.mean_logit_delta())),
+                (
+                    "group_max_delta",
+                    Value::Arr(d.group_delta.iter().map(|&g| jsonx::num(g as f64)).collect()),
+                ),
+            ]),
+        ),
+    ]))
+}
+
 /// `GET /metrics` — Prometheus text exposition 0.0.4. Counters and gauges
 /// are always present (they are plain atomics); the histogram families
 /// appear only when telemetry is on, and the sampled kernel families
 /// whenever the process-global kernel timer has observations.
 fn metrics_text(ctx: &Ctx) -> String {
     use telemetry::{
-        prom_counter, prom_gauge, prom_histogram, prom_histogram_header, prom_histogram_series,
+        prom_counter, prom_gauge, prom_gauge_f64, prom_histogram, prom_histogram_header,
+        prom_histogram_series,
     };
     let m = &ctx.metrics;
     let g = &ctx.gauges;
@@ -990,6 +1071,39 @@ fn metrics_text(ctx: &Ctx) -> String {
         prom_histogram_series(&mut out, "aq_tick_seconds", r#"phase="prefill""#, &t.tick_prefill.snapshot());
         prom_histogram_series(&mut out, "aq_tick_seconds", r#"phase="decode""#, &t.tick_decode.snapshot());
         prom_histogram_series(&mut out, "aq_tick_seconds", r#"phase="mixed""#, &t.tick_mixed.snapshot());
+
+        // numeric health: sampled activation stats vs the baked calibration
+        // envelopes, plus the cross-bit-width divergence sampler
+        let ns = t.numeric.snapshot();
+        let sampled_rows: u64 = ns.layers.iter().map(|l| l.rows).sum();
+        let outliers: u64 = ns.layers.iter().map(|l| l.outliers).sum();
+        let drift_layers = ns.layers.iter().filter(|l| l.drifting).count();
+        prom_counter(&mut out, "aq_numeric_sampled_rows_total", "decode rows sampled for numeric health", sampled_rows);
+        prom_counter(&mut out, "aq_numeric_outliers_total", "sampled rows outside their layer's calibration envelope", outliers);
+        prom_gauge(&mut out, "aq_numeric_drift_layers", "layers currently in the drifting state", drift_layers as u64);
+        if !ns.layers.is_empty() {
+            out.push_str("# HELP aq_numeric_layer_drift 1 when the layer's drift detector is armed\n");
+            out.push_str("# TYPE aq_numeric_layer_drift gauge\n");
+            for l in &ns.layers {
+                out.push_str(&format!(
+                    "aq_numeric_layer_drift{{layer=\"{}\"}} {}\n",
+                    l.layer,
+                    u8::from(l.drifting)
+                ));
+            }
+            out.push_str("# HELP aq_numeric_layer_outlier_frac envelope-outlier fraction of the layer's sampled rows\n");
+            out.push_str("# TYPE aq_numeric_layer_outlier_frac gauge\n");
+            for l in &ns.layers {
+                out.push_str(&format!(
+                    "aq_numeric_layer_outlier_frac{{layer=\"{}\"}} {}\n",
+                    l.layer, l.outlier_frac
+                ));
+            }
+        }
+        prom_counter(&mut out, "aq_numeric_probes_total", "cross-bit-width divergence probes run", ns.div.probes);
+        prom_counter(&mut out, "aq_numeric_probe_agree_total", "divergence probes whose top-1 token agreed", ns.div.agree);
+        prom_gauge_f64(&mut out, "aq_numeric_top1_agree_pct", "top-1 agreement between serving and draft bit-widths (percent)", ns.div.agree_pct());
+        prom_gauge_f64(&mut out, "aq_numeric_max_logit_delta", "max |logit delta| between serving and draft bit-widths", ns.div.max_logit_delta as f64);
     }
 
     // sampled kernel timing is process-global, not per-server

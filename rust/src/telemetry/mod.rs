@@ -13,11 +13,14 @@
 //!
 //! Layout: [`hist`] (log-scale mergeable histograms), [`journal`] (bounded
 //! ring of events), [`trace`] (per-request spans), [`kernel`]
-//! (process-global sampled GEMM/head timing).
+//! (process-global sampled GEMM/head timing), [`numeric`] (sampled
+//! per-layer activation stats, calibration-drift detection, cross-bit-width
+//! divergence accounting).
 
 pub mod hist;
 pub mod journal;
 pub mod kernel;
+pub mod numeric;
 pub mod trace;
 
 use std::fmt::Write as _;
@@ -55,6 +58,9 @@ pub struct Telemetry {
     pub decode_rows: AtomicU64,
     pub traces: TraceStore,
     pub journal: Journal,
+    /// Numeric-health state: live per-layer activation stats vs the baked
+    /// calibration envelopes + the cross-bit-width divergence accumulator.
+    pub numeric: numeric::NumericHealth,
 }
 
 impl Telemetry {
@@ -73,6 +79,7 @@ impl Telemetry {
             decode_rows: AtomicU64::new(0),
             traces: TraceStore::new(TRACE_CAP),
             journal: Journal::new(JOURNAL_CAP),
+            numeric: numeric::NumericHealth::default(),
         })
     }
 }
@@ -206,6 +213,43 @@ impl Recorder {
             t.ticks.fetch_add(1, Ordering::Relaxed);
             t.prefill_rows.fetch_add(prefill_rows as u64, Ordering::Relaxed);
             t.decode_rows.fetch_add(decode_rows as u64, Ordering::Relaxed);
+            // drift windows close on tick boundaries; transitions journal
+            t.numeric.evaluate(&t.journal);
+        }
+    }
+
+    /// Numeric-health handle for the decode observation hook; `None` when
+    /// telemetry is disabled, so sampling costs one branch there.
+    #[inline]
+    pub fn numeric(&self) -> Option<&numeric::NumericHealth> {
+        self.0.as_deref().map(|t| &t.numeric)
+    }
+
+    /// Install the baked calibration envelopes at session start (no-op when
+    /// disabled).
+    pub fn numeric_install(
+        &self,
+        envelopes: Vec<numeric::Envelope>,
+        serve_bits: u32,
+        draft_bits: Option<u32>,
+    ) {
+        if let Some(t) = &self.0 {
+            t.numeric.install(envelopes, serve_bits, draft_bits);
+        }
+    }
+
+    /// Record one cross-bit-width divergence probe; disagreements land in
+    /// the journal (they are the acceptance-rate misses).
+    #[inline]
+    pub fn numeric_divergence(&self, agree: bool, max_logit_delta: f32, group_delta: &[f32]) {
+        if let Some(t) = &self.0 {
+            t.numeric.record_divergence(agree, max_logit_delta, group_delta);
+            if !agree {
+                t.journal.push(
+                    "numeric_divergence",
+                    format!("cross-bit-width top-1 disagreement (max logit delta {max_logit_delta:.3})"),
+                );
+            }
         }
     }
 
@@ -238,6 +282,13 @@ pub fn prom_counter(out: &mut String, name: &str, help: &str, v: u64) {
 
 /// Append one gauge sample.
 pub fn prom_gauge(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Append one float-valued gauge sample.
+pub fn prom_gauge_f64(out: &mut String, name: &str, help: &str, v: f64) {
     let _ = writeln!(out, "# HELP {name} {help}");
     let _ = writeln!(out, "# TYPE {name} gauge");
     let _ = writeln!(out, "{name} {v}");
@@ -295,6 +346,9 @@ mod tests {
         r.tick(None, 1, 1);
         r.span(1, |s| s.tokens = 9);
         r.event("x", || unreachable!("detail closure must not run when disabled"));
+        r.numeric_install(Vec::new(), 4, None);
+        r.numeric_divergence(false, 1.0, &[0.5]);
+        assert!(r.numeric().is_none());
         assert!(r.telemetry().is_none());
     }
 

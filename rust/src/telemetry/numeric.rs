@@ -1,0 +1,564 @@
+//! Numeric-health observability: sampled per-layer activation statistics,
+//! calibration-drift detection, and cross-bit-width divergence accounting.
+//!
+//! PR 7's telemetry observes *latency*; this module observes *error*. At
+//! pack time the AQPM header bakes per-layer calibration artifacts
+//! (activation absmax/mean/var envelopes from a deterministic probe
+//! forward, plus weight quantization error — see `engine/packed.rs`). At
+//! serving time the scheduler samples 1-in-[`SAMPLE`] decode rows and
+//! streams the residual-stream input of every layer into per-layer
+//! [`Welford`] accumulators here, counts envelope outliers, and feeds a
+//! hysteresis [`DriftDetector`] per layer. A cross-bit-width divergence
+//! sampler (`sched.rs`) periodically re-runs a live sequence's window
+//! through a lower-bit draft variant and records top-1 agreement — the
+//! acceptance-rate proxy the speculative-decoding roadmap item needs.
+//!
+//! Everything here is observation-only: sampling happens behind the
+//! zero-cost-when-disabled `Recorder`, touches no model math, reads no
+//! clock, and never consumes scheduler RNG — greedy output is bit-identical
+//! with numeric sampling on or off (asserted by parity tests).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::journal::Journal;
+
+/// 1-in-N decode-row sampling rate for live activation statistics.
+pub const SAMPLE: u64 = 16;
+/// A sampled row is an envelope outlier when its |x| max exceeds the baked
+/// calibration absmax by more than this factor (strictly greater).
+pub const OUTLIER_TOL: f32 = 1.25;
+/// Divergence probes: first probe after this many decode-bearing ticks…
+pub const PROBE_WARMUP: u64 = 4;
+/// …then one probe every this many decode-bearing ticks.
+pub const PROBE_EVERY: u64 = 16;
+/// Token-window cap for one divergence probe (both bit-widths re-run this
+/// many trailing tokens of the sampled sequence).
+pub const PROBE_WINDOW: usize = 64;
+/// Layer groups divergence deltas are reported under.
+pub const PROBE_GROUPS: usize = 4;
+
+// ----------------------------------------------------------------- Welford
+
+/// Streaming mean/variance/absmax (Welford's online algorithm). Used both
+/// for the pack-time calibration envelopes and the live serving stats, so
+/// the two sides of the drift comparison share one definition.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    count: u64,
+    mean: f64,
+    m2: f64,
+    absmax: f32,
+}
+
+impl Welford {
+    #[inline]
+    pub fn push(&mut self, v: f32) {
+        self.count += 1;
+        let d = v as f64 - self.mean;
+        self.mean += d / self.count as f64;
+        self.m2 += d * (v as f64 - self.mean);
+        let a = v.abs();
+        if a > self.absmax {
+            self.absmax = a;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (matches the two-pass `sum((x-mu)^2)/n`).
+    pub fn var(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            self.m2 / self.count as f64
+        }
+    }
+
+    pub fn absmax(&self) -> f32 {
+        self.absmax
+    }
+}
+
+// ---------------------------------------------------------------- envelope
+
+/// Per-layer baked calibration artifact, loaded from the AQPM header.
+/// `count == 0` means the file predates calibration baking (or the model
+/// was never calibrated) — the layer then reports `no_data`, never drift.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Envelope {
+    /// Max |x| over the residual-stream inputs of this layer during the
+    /// calibration probe.
+    pub absmax: f32,
+    pub mean: f32,
+    pub var: f32,
+    /// Activation elements the calibration pass observed.
+    pub count: u64,
+    /// Mean squared dequant-vs-reference weight error over the layer's
+    /// quantized linears.
+    pub weight_mse: f32,
+    /// Max absolute dequant-vs-reference weight error.
+    pub weight_max_abs: f32,
+}
+
+impl Envelope {
+    /// Is a sampled row with this |x| max outside the envelope?
+    /// Strict inequality: a row *at* the tolerance boundary is in-envelope.
+    #[inline]
+    pub fn is_outlier(&self, row_absmax: f32) -> bool {
+        self.count > 0 && row_absmax > self.absmax * OUTLIER_TOL
+    }
+}
+
+// ----------------------------------------------------------- drift detector
+
+/// Hysteresis thresholds for the per-layer drift verdict.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftConfig {
+    /// Enter drift when a window's outlier fraction is >= this…
+    pub enter_frac: f32,
+    /// …exit when it is <= this (must be < `enter_frac`).
+    pub exit_frac: f32,
+    /// Consecutive qualifying windows required to arm a transition.
+    pub arm: u32,
+    /// Minimum sampled rows per evaluation window.
+    pub min_window: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> DriftConfig {
+        DriftConfig { enter_frac: 0.5, exit_frac: 0.1, arm: 2, min_window: 8 }
+    }
+}
+
+/// Two-threshold hysteresis state machine: a window fraction between
+/// `exit_frac` and `enter_frac` resets both streaks, so oscillating input
+/// can never flap the verdict.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DriftDetector {
+    drifting: bool,
+    hi_streak: u32,
+    lo_streak: u32,
+}
+
+impl DriftDetector {
+    /// Feed one evaluation window's outlier fraction. Returns `Some(state)`
+    /// when the verdict transitions (true = entered drift).
+    pub fn observe(&mut self, frac: f32, cfg: &DriftConfig) -> Option<bool> {
+        if frac >= cfg.enter_frac {
+            self.hi_streak += 1;
+        } else {
+            self.hi_streak = 0;
+        }
+        if frac <= cfg.exit_frac {
+            self.lo_streak += 1;
+        } else {
+            self.lo_streak = 0;
+        }
+        if !self.drifting && self.hi_streak >= cfg.arm {
+            self.drifting = true;
+            return Some(true);
+        }
+        if self.drifting && self.lo_streak >= cfg.arm {
+            self.drifting = false;
+            return Some(false);
+        }
+        None
+    }
+
+    pub fn drifting(&self) -> bool {
+        self.drifting
+    }
+}
+
+// ------------------------------------------------------------ NumericHealth
+
+#[derive(Clone, Default)]
+struct LayerLive {
+    stats: Welford,
+    /// Sampled rows observed (cumulative).
+    rows: u64,
+    /// Envelope outliers among them (cumulative).
+    outliers: u64,
+    /// Current evaluation window (reset by `evaluate`).
+    win_rows: u64,
+    win_outliers: u64,
+    det: DriftDetector,
+}
+
+/// Cross-bit-width divergence accumulator (speculative-decoding
+/// acceptance-rate proxy).
+#[derive(Clone, Debug, Default)]
+pub struct Divergence {
+    pub serve_bits: u32,
+    pub draft_bits: u32,
+    pub probes: u64,
+    /// Probes whose top-1 token agreed between the two bit-widths.
+    pub agree: u64,
+    pub max_logit_delta: f32,
+    pub sum_logit_delta: f64,
+    /// Max hidden-state |delta| seen per layer group, over all probes.
+    pub group_delta: Vec<f32>,
+}
+
+impl Divergence {
+    pub fn agree_pct(&self) -> f64 {
+        if self.probes == 0 {
+            0.0
+        } else {
+            100.0 * self.agree as f64 / self.probes as f64
+        }
+    }
+
+    pub fn mean_logit_delta(&self) -> f64 {
+        if self.probes == 0 {
+            0.0
+        } else {
+            self.sum_logit_delta / self.probes as f64
+        }
+    }
+}
+
+struct Inner {
+    envelopes: Vec<Envelope>,
+    layers: Vec<LayerLive>,
+    cfg: DriftConfig,
+    div: Divergence,
+    installed: bool,
+}
+
+/// Per-registry numeric-health state: baked envelopes, live per-layer
+/// streaming stats, drift detectors, and the divergence accumulator. Lives
+/// inside `Telemetry`; the decode path reaches it through
+/// `Recorder::numeric()` (None when telemetry is disabled, so the hot path
+/// pays a single branch).
+pub struct NumericHealth {
+    ticket: AtomicU64,
+    sample_every: u64,
+    inner: Mutex<Inner>,
+}
+
+impl Default for NumericHealth {
+    fn default() -> NumericHealth {
+        NumericHealth::new(SAMPLE)
+    }
+}
+
+/// One layer of [`NumericHealth::snapshot`]: baked envelope + live stats.
+#[derive(Clone, Debug, Default)]
+pub struct LayerReport {
+    pub layer: usize,
+    pub env: Envelope,
+    /// Sampled rows / elements folded into the live stats.
+    pub rows: u64,
+    pub count: u64,
+    pub mean: f64,
+    pub var: f64,
+    pub absmax: f32,
+    pub outliers: u64,
+    pub outlier_frac: f64,
+    pub drifting: bool,
+}
+
+impl LayerReport {
+    /// `drifting` > `no_data` > `ok`.
+    pub fn verdict(&self) -> &'static str {
+        if self.drifting {
+            "drifting"
+        } else if self.env.count == 0 || self.rows == 0 {
+            "no_data"
+        } else {
+            "ok"
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub layers: Vec<LayerReport>,
+    pub div: Divergence,
+}
+
+impl NumericHealth {
+    pub fn new(sample_every: u64) -> NumericHealth {
+        NumericHealth {
+            ticket: AtomicU64::new(0),
+            sample_every: sample_every.max(1),
+            inner: Mutex::new(Inner {
+                envelopes: Vec::new(),
+                layers: Vec::new(),
+                cfg: DriftConfig::default(),
+                div: Divergence::default(),
+                installed: false,
+            }),
+        }
+    }
+
+    /// Install the baked calibration envelopes (one per layer) at session
+    /// start. Idempotent; re-installing resets nothing live.
+    pub fn install(&self, envelopes: Vec<Envelope>, serve_bits: u32, draft_bits: Option<u32>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.layers.resize(envelopes.len(), LayerLive::default());
+        inner.envelopes = envelopes;
+        inner.div.serve_bits = serve_bits;
+        inner.div.draft_bits = draft_bits.unwrap_or(0);
+        inner.installed = true;
+    }
+
+    pub fn installed(&self) -> bool {
+        self.inner.lock().unwrap().installed
+    }
+
+    /// Should the next decode row be sampled? One relaxed fetch-add; the
+    /// decision stream is process-deterministic per `NumericHealth`.
+    #[inline]
+    pub fn sample(&self) -> bool {
+        self.ticket.fetch_add(1, Ordering::Relaxed) % self.sample_every == 0
+    }
+
+    /// Fold the listed rows of a layer's `(m, d)` input into its live
+    /// stats. Called by `decode::layer_forward` with the residual-stream
+    /// input *before* the pre-attention norm — the same quantity the
+    /// calibration probe enveloped.
+    pub fn record_rows(&self, layer: usize, x: &[f32], d: usize, rows: &[usize]) {
+        if rows.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if layer >= inner.layers.len() {
+            inner.layers.resize(layer + 1, LayerLive::default());
+        }
+        let env = inner.envelopes.get(layer).copied().unwrap_or_default();
+        let live = &mut inner.layers[layer];
+        for &r in rows {
+            let row = &x[r * d..(r + 1) * d];
+            let mut row_absmax = 0f32;
+            for &v in row {
+                live.stats.push(v);
+                let a = v.abs();
+                if a > row_absmax {
+                    row_absmax = a;
+                }
+            }
+            live.rows += 1;
+            live.win_rows += 1;
+            if env.is_outlier(row_absmax) {
+                live.outliers += 1;
+                live.win_outliers += 1;
+            }
+        }
+    }
+
+    /// Evaluate drift per layer: every layer whose current window holds at
+    /// least `min_window` sampled rows feeds its outlier fraction to its
+    /// hysteresis detector; transitions land in the journal. Called once
+    /// per scheduler tick (cheap: n_layers compares, uncontended lock).
+    pub fn evaluate(&self, journal: &Journal) {
+        let mut inner = self.inner.lock().unwrap();
+        let cfg = inner.cfg;
+        for (li, l) in inner.layers.iter_mut().enumerate() {
+            if l.win_rows < cfg.min_window {
+                continue;
+            }
+            let frac = l.win_outliers as f32 / l.win_rows as f32;
+            let wr = l.win_rows;
+            l.win_rows = 0;
+            l.win_outliers = 0;
+            if let Some(entered) = l.det.observe(frac, &cfg) {
+                let what = if entered { "entered" } else { "exited" };
+                journal.push(
+                    "numeric_drift",
+                    format!(
+                        "layer {li} {what} drift (outlier frac {frac:.2} over {wr} sampled rows)"
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Record one divergence probe result.
+    pub fn record_divergence(&self, agree: bool, max_logit_delta: f32, group_delta: &[f32]) {
+        let mut inner = self.inner.lock().unwrap();
+        let div = &mut inner.div;
+        div.probes += 1;
+        if agree {
+            div.agree += 1;
+        }
+        if max_logit_delta > div.max_logit_delta {
+            div.max_logit_delta = max_logit_delta;
+        }
+        div.sum_logit_delta += max_logit_delta as f64;
+        if div.group_delta.len() < group_delta.len() {
+            div.group_delta.resize(group_delta.len(), 0.0);
+        }
+        for (acc, &g) in div.group_delta.iter_mut().zip(group_delta) {
+            if g > *acc {
+                *acc = g;
+            }
+        }
+    }
+
+    /// Layers currently in the drifting state.
+    pub fn drift_layers(&self) -> usize {
+        self.inner.lock().unwrap().layers.iter().filter(|l| l.det.drifting()).count()
+    }
+
+    /// Consistent point-in-time copy of everything the surfaces render.
+    pub fn snapshot(&self) -> Snapshot {
+        let inner = self.inner.lock().unwrap();
+        let n = inner.envelopes.len().max(inner.layers.len());
+        let layers = (0..n)
+            .map(|li| {
+                let env = inner.envelopes.get(li).copied().unwrap_or_default();
+                let l = inner.layers.get(li).cloned().unwrap_or_default();
+                LayerReport {
+                    layer: li,
+                    env,
+                    rows: l.rows,
+                    count: l.stats.count(),
+                    mean: l.stats.mean(),
+                    var: l.stats.var(),
+                    absmax: l.stats.absmax(),
+                    outliers: l.outliers,
+                    outlier_frac: if l.rows == 0 {
+                        0.0
+                    } else {
+                        l.outliers as f64 / l.rows as f64
+                    },
+                    drifting: l.det.drifting(),
+                }
+            })
+            .collect();
+        Snapshot { layers, div: inner.div.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngx::Pcg32;
+
+    #[test]
+    fn welford_matches_two_pass_reference() {
+        let mut rng = Pcg32::seeded(3);
+        for n in [1usize, 2, 7, 100, 1000] {
+            let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0 - 1.0) as f32).collect();
+            let mut w = Welford::default();
+            for &v in &xs {
+                w.push(v);
+            }
+            let mu: f64 = xs.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+            let var: f64 =
+                xs.iter().map(|&v| (v as f64 - mu) * (v as f64 - mu)).sum::<f64>() / n as f64;
+            let absmax = xs.iter().fold(0f32, |a, &v| a.max(v.abs()));
+            assert_eq!(w.count(), n as u64);
+            assert!((w.mean() - mu).abs() <= 1e-9 * mu.abs().max(1.0), "n={n}");
+            if n >= 2 {
+                assert!((w.var() - var).abs() <= 1e-9 * var.max(1.0), "n={n}");
+            }
+            assert_eq!(w.absmax(), absmax);
+        }
+    }
+
+    #[test]
+    fn envelope_outlier_boundary_is_exact() {
+        let env = Envelope { absmax: 2.0, count: 10, ..Default::default() };
+        let edge = 2.0 * OUTLIER_TOL;
+        assert!(!env.is_outlier(edge), "a row exactly at the tolerance is in-envelope");
+        assert!(env.is_outlier(edge + edge * 1e-6));
+        assert!(!env.is_outlier(0.0));
+        // no envelope -> nothing is an outlier
+        let none = Envelope::default();
+        assert!(!none.is_outlier(f32::MAX));
+    }
+
+    #[test]
+    fn drift_detector_hysteresis_no_flap() {
+        let cfg = DriftConfig::default();
+        let mut det = DriftDetector::default();
+        // oscillating input straddling both thresholds must never arm
+        for _ in 0..50 {
+            assert_eq!(det.observe(0.9, &cfg), None);
+            assert_eq!(det.observe(0.0, &cfg), None);
+            assert!(!det.drifting());
+        }
+        // mid-band input (between exit and enter) also never transitions
+        for _ in 0..50 {
+            assert_eq!(det.observe(0.3, &cfg), None);
+        }
+        // sustained high enters after `arm` windows, exactly once
+        assert_eq!(det.observe(0.8, &cfg), None);
+        assert_eq!(det.observe(0.8, &cfg), Some(true));
+        assert_eq!(det.observe(0.8, &cfg), None);
+        assert!(det.drifting());
+        // mid-band while drifting holds the state
+        for _ in 0..10 {
+            assert_eq!(det.observe(0.3, &cfg), None);
+            assert!(det.drifting());
+        }
+        // sustained low exits after `arm` windows
+        assert_eq!(det.observe(0.05, &cfg), None);
+        assert_eq!(det.observe(0.0, &cfg), Some(false));
+        assert!(!det.drifting());
+    }
+
+    #[test]
+    fn record_and_snapshot_roundtrip() {
+        let nh = NumericHealth::new(1);
+        nh.install(
+            vec![Envelope { absmax: 1.0, mean: 0.0, var: 1.0, count: 100, ..Default::default() }],
+            4,
+            Some(2),
+        );
+        assert!(nh.installed());
+        // two rows: one inside the envelope, one outlier (2.0 > 1.0 * 1.25)
+        let x = vec![0.5f32, -0.5, 2.0, 0.0];
+        nh.record_rows(0, &x, 2, &[0, 1]);
+        let snap = nh.snapshot();
+        assert_eq!(snap.layers.len(), 1);
+        let l = &snap.layers[0];
+        assert_eq!(l.rows, 2);
+        assert_eq!(l.count, 4);
+        assert_eq!(l.outliers, 1);
+        assert_eq!(l.verdict(), "ok");
+        assert_eq!(l.absmax, 2.0);
+        assert_eq!(snap.div.serve_bits, 4);
+        assert_eq!(snap.div.draft_bits, 2);
+
+        nh.record_divergence(true, 0.25, &[0.1, 0.2]);
+        nh.record_divergence(false, 1.5, &[0.3, 0.1]);
+        let d = nh.snapshot().div;
+        assert_eq!(d.probes, 2);
+        assert_eq!(d.agree, 1);
+        assert_eq!(d.agree_pct(), 50.0);
+        assert_eq!(d.max_logit_delta, 1.5);
+        assert_eq!(d.group_delta, vec![0.3, 0.2]);
+    }
+
+    #[test]
+    fn evaluate_emits_journal_transitions() {
+        let journal = Journal::new(16);
+        let nh = NumericHealth::new(1);
+        nh.install(vec![Envelope { absmax: 0.1, count: 10, ..Default::default() }], 4, None);
+        // every row is an outlier (1.0 > 0.1 * 1.25); two windows arm drift
+        let x = vec![1.0f32; 8];
+        for _ in 0..2 {
+            for _ in 0..8 {
+                nh.record_rows(0, &x, 8, &[0]);
+            }
+            nh.evaluate(&journal);
+        }
+        assert_eq!(nh.drift_layers(), 1);
+        let events = journal.snapshot();
+        assert!(
+            events.iter().any(|e| e.kind == "numeric_drift" && e.detail.contains("entered")),
+            "{events:?}"
+        );
+    }
+}

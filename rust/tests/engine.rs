@@ -569,6 +569,60 @@ fn telemetry_on_is_bit_identical_to_telemetry_off() {
     assert!(span.ttft_ms >= 0.0 && span.total_ms >= span.ttft_ms);
 }
 
+/// Numeric-health sampling and the cross-bit-width divergence draft are
+/// observation only: with the recorder live and a w2 draft enabled, greedy
+/// completions stay bit-identical to the uninstrumented engine — while the
+/// per-layer sampler and the probe accumulator actually populate.
+#[test]
+fn numeric_sampling_and_draft_keep_greedy_bit_identical() {
+    use affinequant::telemetry::Recorder;
+
+    let ps = zoo::seeded_store("opt-s1", 42).unwrap();
+    let pm = PackedModel::from_store(&ps, QuantSpec::new(4, 128));
+    // from_store bakes the calibration probe into every layer
+    assert_eq!(pm.calib.len(), pm.cfg.n_layers, "one calibration record per layer");
+    for c in &pm.calib {
+        assert!(c.act_count > 0, "calibration probe must feed every layer");
+        assert!(c.weight_mse > 0.0, "quantization error is never exactly zero");
+    }
+
+    let reqs: Vec<Request> = (0..3)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: test_tokens(4 + 6 * i),
+            max_new: 24,
+            eos: None,
+        })
+        .collect();
+    let sched = SchedConfig { prefill_chunk: 4, ..SchedConfig::default() };
+
+    let mut plain = Engine::with_config(pm.clone(), 2, sched);
+    let (base, _) = plain.generate(reqs.clone(), Sampler::Greedy, 0).unwrap();
+
+    let mut observed = Engine::with_config(pm, 2, sched);
+    observed.recorder = Recorder::new_enabled();
+    observed.enable_draft(QuantSpec::new(2, 128));
+    let (got, _) = observed.generate(reqs, Sampler::Greedy, 0).unwrap();
+
+    assert_eq!(base.len(), got.len());
+    for (a, b) in base.iter().zip(&got) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.tokens, b.tokens, "request {}: numeric sampling changed the output", a.id);
+        assert_eq!(a.finish, b.finish);
+    }
+
+    let t = observed.recorder.telemetry().unwrap();
+    let snap = t.numeric.snapshot();
+    assert_eq!(snap.layers.len(), observed.model.cfg.n_layers);
+    let rows: u64 = snap.layers.iter().map(|l| l.rows).sum();
+    assert!(rows > 0, "1-in-16 sampling must hit at least one row");
+    assert!(snap.div.probes > 0, "divergence probe must fire after the warm-up ticks");
+    assert_eq!(snap.div.serve_bits, 4);
+    assert_eq!(snap.div.draft_bits, 2);
+    let pct = snap.div.agree_pct();
+    assert!((0.0..=100.0).contains(&pct), "agree_pct out of range: {pct}");
+}
+
 /// The per-tick `emitted()` stream — what the HTTP server forwards —
 /// reassembles into exactly the completions' token lists.
 #[test]

@@ -37,6 +37,14 @@ fn quiet_cfg() -> ServerConfig {
     ServerConfig { addr: "127.0.0.1:0".into(), workers: 4, ..ServerConfig::default() }
 }
 
+/// Like [`test_engine`] but with the w2 divergence draft enabled, so the
+/// numeric-health surface has cross-bit-width probes to report.
+fn numeric_engine(max_batch: usize) -> Engine {
+    let mut engine = test_engine(max_batch);
+    engine.enable_draft(QuantSpec::new(2, 128));
+    engine
+}
+
 // ------------------------------------------------------------ raw client
 
 struct Response {
@@ -589,6 +597,95 @@ fn telemetry_off_is_bit_identical_and_still_counts() {
     // stats JSON has no latency block
     let stats = jsonx::parse(&request(addr, "GET", "/v1/stats", "").body_str()).expect("stats");
     assert!(stats.get("latency").is_none());
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn numeric_health_endpoint_reports_layers_and_divergence() {
+    let handle = Server::spawn(numeric_engine(2), quiet_cfg()).expect("spawn server");
+    let addr = handle.addr;
+
+    // long enough to cross the probe warm-up (first probe at decode tick 4)
+    let body = "{\"prompt\": \"the bani \", \"max_tokens\": 24}";
+    assert_eq!(request(addr, "POST", "/v1/completions", body).status, 200);
+
+    let resp = request(addr, "GET", "/v1/health/numeric", "");
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let v = jsonx::parse(&resp.body_str()).expect("health json");
+    let status = v.req("status").as_str();
+    assert!(
+        status == "ok" || status == "drifting",
+        "calibrated engine must not report {status:?}"
+    );
+    let layers = match v.req("layers") {
+        Value::Arr(a) => a,
+        other => panic!("layers not an array: {other:?}"),
+    };
+    assert!(!layers.is_empty(), "baked envelopes must surface per-layer reports");
+    for l in layers {
+        let verdict = l.req("verdict").as_str();
+        assert!(
+            ["ok", "no_data", "drifting"].contains(&verdict),
+            "unknown verdict {verdict:?}"
+        );
+        let baked = l.req("baked");
+        assert!(baked.req("count").as_f64() > 0.0, "calibration envelope must be baked");
+        assert!(baked.req("weight_mse").as_f64() > 0.0, "weight quant error is never zero");
+        let live = l.req("live");
+        let frac = live.req("outlier_frac").as_f64();
+        assert!((0.0..=1.0).contains(&frac), "outlier_frac out of range: {frac}");
+    }
+
+    let div = v.req("divergence");
+    assert_eq!(div.req("serve_bits").as_f64(), 4.0);
+    assert_eq!(div.req("draft_bits").as_f64(), 2.0);
+    assert!(div.req("probes").as_f64() >= 1.0, "probe must fire after warm-up");
+    let pct = div.req("agree_pct").as_f64();
+    assert!((0.0..=100.0).contains(&pct), "agree_pct out of range: {pct}");
+    assert!(div.req("max_logit_delta").as_f64() >= 0.0);
+
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn numeric_metrics_families_serve_valid_prometheus() {
+    let handle = Server::spawn(numeric_engine(2), quiet_cfg()).expect("spawn server");
+    let addr = handle.addr;
+    let body = "{\"prompt\": \"the bani \", \"max_tokens\": 24}";
+    assert_eq!(request(addr, "POST", "/v1/completions", body).status, 200);
+
+    let m = request(addr, "GET", "/metrics", "");
+    assert_eq!(m.status, 200);
+    let text = m.body_str();
+    assert_prometheus_text(&text);
+    assert!(prom_value(&text, "aq_numeric_sampled_rows_total") >= 1.0, "{text}");
+    assert!(prom_value(&text, "aq_numeric_probes_total") >= 1.0, "{text}");
+    assert!(prom_value(&text, "aq_numeric_drift_layers") >= 0.0);
+    assert!(
+        text.contains("aq_numeric_layer_drift{layer=\"0\"}"),
+        "per-layer drift series missing:\n{text}"
+    );
+    assert!(text.contains("aq_numeric_layer_outlier_frac{layer=\"0\"}"));
+    let agree = prom_value(&text, "aq_numeric_top1_agree_pct");
+    assert!((0.0..=100.0).contains(&agree), "{agree}");
+    handle.shutdown();
+    handle.join();
+}
+
+#[test]
+fn numeric_health_404_when_telemetry_off() {
+    let cfg = ServerConfig { telemetry: false, ..quiet_cfg() };
+    let handle = Server::spawn(numeric_engine(2), cfg).expect("spawn server");
+    let addr = handle.addr;
+    assert_eq!(request(addr, "GET", "/v1/health/numeric", "").status, 404);
+    let m = request(addr, "GET", "/metrics", "");
+    assert_eq!(m.status, 200);
+    assert!(
+        !m.body_str().contains("aq_numeric_"),
+        "numeric families only exist with telemetry on"
+    );
     handle.shutdown();
     handle.join();
 }

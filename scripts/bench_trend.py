@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Merge the root BENCH_*.json snapshots into results/bench_trend.md.
+
+Each PR's perf bench (`cargo bench --bench perf_engine` /
+`cargo run --release --bin perf_engine`) writes one `BENCH_<pr>.json` at
+the repo root. This script folds every snapshot found there into a single
+markdown trend report so throughput regressions are visible across the
+stacked PR sequence without opening each JSON by hand.
+
+Stdlib only — no third-party imports. Safe to run with zero snapshots
+(emits a stub report saying so).
+
+Usage: python3 scripts/bench_trend.py
+"""
+
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "results" / "bench_trend.md"
+
+
+def load_snapshots():
+    """[(order, filename, parsed)] sorted by the number in the filename."""
+    snaps = []
+    for path in sorted(ROOT.glob("BENCH_*.json")):
+        m = re.search(r"BENCH_(\d+)", path.name)
+        order = int(m.group(1)) if m else -1
+        try:
+            snaps.append((order, path.name, json.loads(path.read_text())))
+        except (json.JSONDecodeError, OSError) as e:
+            print(f"warning: skipping {path.name}: {e}", file=sys.stderr)
+    snaps.sort(key=lambda s: (s[0], s[1]))
+    return snaps
+
+
+def flatten(value, prefix=""):
+    """Dotted-path scalars from nested dicts/lists; non-numbers dropped."""
+    out = {}
+    if isinstance(value, dict):
+        for k, v in value.items():
+            out.update(flatten(v, f"{prefix}{k}."))
+    elif isinstance(value, list):
+        for i, v in enumerate(value):
+            out.update(flatten(v, f"{prefix}{i}."))
+    elif isinstance(value, bool):
+        pass  # bools are ints in python; keep them out of numeric trends
+    elif isinstance(value, (int, float)):
+        out[prefix.rstrip(".")] = value
+    return out
+
+
+def fmt(v):
+    if isinstance(v, float) and not v.is_integer():
+        return f"{v:.4g}"
+    return str(int(v)) if isinstance(v, float) else str(v)
+
+
+def main():
+    snaps = load_snapshots()
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+
+    lines = ["# Bench trend", ""]
+    if not snaps:
+        lines += [
+            "No `BENCH_*.json` snapshots found at the repo root yet.",
+            "Run the perf bench to produce one, then re-run this script.",
+            "",
+        ]
+        OUT.write_text("\n".join(lines))
+        print(f"wrote {OUT.relative_to(ROOT)} (no snapshots)")
+        return
+
+    names = [name for _, name, _ in snaps]
+    lines += [
+        f"{len(snaps)} snapshot(s) merged, oldest to newest: "
+        + ", ".join(f"`{n}`" for n in names),
+        "",
+    ]
+
+    flat = [flatten(data) for _, _, data in snaps]
+
+    # headline row: per-snapshot metadata that is present in every file
+    lines += ["| snapshot | pr | threads |", "|---|---|---|"]
+    for name, f in zip(names, flat):
+        pr = fmt(f["pr"]) if "pr" in f else "-"
+        threads = fmt(f["threads"]) if "threads" in f else "-"
+        lines.append(f"| `{name}` | {pr} | {threads} |")
+    lines.append("")
+
+    # one table per top-level section, metrics as rows, snapshots as
+    # columns — a metric missing from an older snapshot renders as "-"
+    sections = []
+    for f in flat:
+        for key in f:
+            section = key.split(".", 1)[0]
+            if section not in ("pr", "threads") and section not in sections:
+                sections.append(section)
+
+    for section in sections:
+        keys = []
+        for f in flat:
+            for key in f:
+                if key.split(".", 1)[0] == section and key not in keys:
+                    keys.append(key)
+        lines += [f"## {section}", ""]
+        header = "| metric | " + " | ".join(f"`{n}`" for n in names) + " |"
+        lines += [header, "|---" * (len(names) + 1) + "|"]
+        for key in keys:
+            short = key.split(".", 1)[1] if "." in key else key
+            cells = [fmt(f[key]) if key in f else "-" for f in flat]
+            lines.append(f"| {short} | " + " | ".join(cells) + " |")
+        lines.append("")
+
+    OUT.write_text("\n".join(lines))
+    print(f"wrote {OUT.relative_to(ROOT)} ({len(snaps)} snapshot(s))")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,6 +44,12 @@ cargo test -q --no-default-features --test server metrics_
 echo "== shared-prompt KV paging smoke (no-default-features)"
 cargo test -q --no-default-features --test server shared_
 
+# numeric-health gate: /v1/health/numeric must serve per-layer drift
+# verdicts + cross-bit-width divergence over a real socket, and /metrics
+# must expose the aq_numeric_* families as valid Prometheus text
+echo "== numeric-health smoke (no-default-features)"
+cargo test -q --no-default-features --test server numeric_
+
 if [[ "${1:-}" == "--with-pjrt" ]]; then
     echo "== cargo build --release (default features)"
     cargo build --release
