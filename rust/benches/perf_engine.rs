@@ -15,7 +15,10 @@
 //! fake-quant baseline at batch 16 on the same thread count.
 
 use affinequant::benchx::{bench, Table};
-use affinequant::engine::gemm::{packed_gemm, packed_matvec_grouped, PackedWeight};
+use affinequant::engine::gemm::{
+    packed_gemm, packed_gemm_with, packed_matvec_grouped, PackedWeight,
+};
+use affinequant::engine::kernels;
 use affinequant::engine::kv::KvCache;
 use affinequant::engine::packed::PackedLinear;
 use affinequant::engine::{Engine, KvConfig, Request, Sampler, SchedConfig, Scheduler};
@@ -26,11 +29,11 @@ use affinequant::report::{save_json, save_table};
 use affinequant::rngx::Pcg32;
 use affinequant::tensor::Tensor;
 
-/// The perf-trajectory snapshot this bench persists (`BENCH_9.json`): the
+/// The perf-trajectory snapshot this bench persists (`BENCH_10.json`): the
 /// ROADMAP asks every PR to leave a machine-readable record so the next
 /// re-anchor can see regressions, not just today's stdout. Anchored to the
 /// manifest dir (the repo root) so it lands there regardless of cwd.
-const BENCH_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_9.json");
+const BENCH_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_10.json");
 
 fn main() -> anyhow::Result<()> {
     let mut json_gemm: Vec<Value> = Vec::new();
@@ -123,12 +126,108 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    // --------------------- kernel dispatch sweep: specialization per variant
+    // For each bit width, run the threaded packed GEMM (batch 16) through
+    // the runtime-generic scalar baseline (the pre-dispatch loop) and every
+    // ISA variant the host can actually run. tok/s counts batch rows per
+    // call; GB/s counts the packed-weight + activation + output traffic.
+    // Every variant's output is asserted bit-identical to the baseline —
+    // the dispatch layer's acceptance invariant.
+    let mut kt = Table::new(
+        "kernel dispatch GEMM sweep (1024x1024, batch 16)",
+        &["config", "kernel", "tok_s", "gb_s", "vs_generic"],
+    );
+    let mut json_kernel: Vec<Value> = Vec::new();
+    let kernel_sel = kernels::info();
+    let mut w4_best_tok_s = 0.0f64;
+    let mut w4_generic_tok_s = 0.0f64;
+    {
+        let m = 16usize;
+        let xk = Tensor::randn(&[m, din], 1.0, &mut rng);
+        for (label, spec) in [
+            ("w2g64", QuantSpec::new(2, 64)),
+            ("w3g128", QuantSpec::new(3, 128)),
+            ("w4g128", QuantSpec::new(4, 128)),
+            ("w8g128", QuantSpec::new(8, 128)),
+        ] {
+            let pl = PackedLinear::pack("w", &w, spec);
+            let (scales, zps) = pl.params();
+            let pw = PackedWeight {
+                packed: &pl.packed,
+                bits: spec.bits,
+                din,
+                dout,
+                group_len: spec.group_len(din),
+                scales,
+                zps,
+            };
+            let bytes = (pl.packed.len() + (xk.data.len() + m * dout) * 4) as f64;
+            let mut base = vec![0.0f32; m * dout];
+            packed_gemm_with(kernels::reference_kernel(), &pw, &xk.data, &mut base, m);
+
+            let mut row_kernels = vec![("generic", kernels::reference_kernel())];
+            for v in kernels::available() {
+                row_kernels.push((v.name(), kernels::select_for(v, spec.bits, pw.group_len)));
+            }
+            let mut generic_tok_s = 0.0f64;
+            for (vname, k) in row_kernels {
+                let r = bench(&format!("{label} kernel {}", k.name), 2, 8, || {
+                    let mut y = vec![0.0f32; m * dout];
+                    packed_gemm_with(k, &pw, &xk.data, &mut y, m);
+                    std::hint::black_box(y);
+                });
+                let mut y = vec![0.0f32; m * dout];
+                packed_gemm_with(k, &pw, &xk.data, &mut y, m);
+                assert_eq!(y, base, "kernel {} diverges from the generic baseline", k.name);
+                let tok_s = m as f64 / r.median_s;
+                let gb_s = bytes / r.median_s / 1e9;
+                if vname == "generic" {
+                    generic_tok_s = tok_s;
+                }
+                let vs_generic = tok_s / generic_tok_s.max(1e-12);
+                if label == "w4g128" {
+                    if vname == "generic" {
+                        w4_generic_tok_s = tok_s;
+                    } else {
+                        w4_best_tok_s = w4_best_tok_s.max(tok_s);
+                    }
+                }
+                json_kernel.push(jsonx::obj(vec![
+                    ("config", jsonx::s(label)),
+                    ("bits", jsonx::num(spec.bits as f64)),
+                    ("variant", jsonx::s(vname)),
+                    ("kernel", jsonx::s(k.name)),
+                    ("tok_s", jsonx::num(tok_s)),
+                    ("gb_s", jsonx::num(gb_s)),
+                    ("speedup_vs_generic", jsonx::num(vs_generic)),
+                ]));
+                kt.row(vec![
+                    label.to_string(),
+                    k.name.to_string(),
+                    format!("{tok_s:.0}"),
+                    format!("{gb_s:.2}"),
+                    format!("{vs_generic:.2}x"),
+                ]);
+                kt.print_last();
+            }
+        }
+    }
+    println!(
+        "\nselected kernel: {} ({}); w4g128 b16 specialized {:.0} tok/s vs generic {:.0} \
+         ({:.2}x)",
+        kernel_sel.selected,
+        kernel_sel.source,
+        w4_best_tok_s,
+        w4_generic_tok_s,
+        w4_best_tok_s / w4_generic_tok_s.max(1e-12),
+    );
+
     // ---------------------------------------- end-to-end engine decode
     // Each batch point runs twice: telemetry off (the zero-cost default)
     // and telemetry on with sampled kernel timing — the on-run must stay
     // within a few % tokens/s AND produce identical greedy tokens, which
     // is the serving-overhead acceptance the telemetry layer signed up
-    // for. The ratio and the latency percentiles land in BENCH_9.json.
+    // for. The ratio and the latency percentiles land in BENCH_10.json.
     let mut dt = Table::new(
         "engine decode throughput (opt-s2, w4g128, greedy)",
         &["batch", "tok_s_off", "tok_s_on", "on_off_ratio", "ttft_p50_ms", "it_p50_ms", "it_p99_ms", "kv_mb"],
@@ -341,7 +440,7 @@ fn main() -> anyhow::Result<()> {
     // Three identical greedy workloads: recorder off, recorder on (numeric
     // sampling live at 1-in-16 decode rows), and recorder on + the w2
     // divergence sampler. Acceptance: numeric sampling costs <= 2% tok/s
-    // and never changes a greedy token; both land in BENCH_9.json.
+    // and never changes a greedy token; both land in BENCH_10.json.
     let mut nt = Table::new(
         "numeric-health sampling overhead (opt-s2, w4g128, batch 8, greedy)",
         &["mode", "tok_s", "vs_off", "sampled_rows", "probes", "w2_agree_pct"],
@@ -423,11 +522,13 @@ fn main() -> anyhow::Result<()> {
     };
 
     t.print();
+    kt.print();
     dt.print();
     tt.print();
     sh.print();
     nt.print();
     save_table(&t, "perf_engine_gemm")?;
+    save_table(&kt, "perf_engine_kernels")?;
     save_table(&dt, "perf_engine_decode")?;
     save_table(&tt, "perf_engine_ttft")?;
     save_table(&sh, "perf_engine_sharing")?;
@@ -435,9 +536,23 @@ fn main() -> anyhow::Result<()> {
     save_json(
         BENCH_JSON,
         &jsonx::obj(vec![
-            ("pr", jsonx::num(9.0)),
+            ("pr", jsonx::num(10.0)),
             ("bench", jsonx::s("perf_engine")),
             ("threads", jsonx::num(std::thread::available_parallelism()?.get() as f64)),
+            (
+                "kernel",
+                jsonx::obj(vec![
+                    ("selected", jsonx::s(kernel_sel.selected.name())),
+                    ("source", jsonx::s(kernel_sel.source)),
+                    ("w4g128_b16_best_tok_s", jsonx::num(w4_best_tok_s)),
+                    ("w4g128_b16_generic_tok_s", jsonx::num(w4_generic_tok_s)),
+                    (
+                        "w4g128_b16_speedup_vs_generic",
+                        jsonx::num(w4_best_tok_s / w4_generic_tok_s.max(1e-12)),
+                    ),
+                ]),
+            ),
+            ("kernel_gemm_sweep_1024x1024_b16", Value::Arr(json_kernel)),
             ("gemm_1024x1024", Value::Arr(json_gemm)),
             ("decode_opt_s2_w4g128", Value::Arr(json_decode)),
             ("ttft_ll_s1_256tok_w4g128", Value::Arr(json_ttft)),

@@ -16,7 +16,10 @@
 //! produced. The paged cache is append-only — out-of-window pages are
 //! released only at step start ([`KvCache::trim`]), never mid-chunk — so
 //! the interleave survives any page size, with or without prefix sharing.
-//! Tests in `rust/tests/engine.rs` assert exact equality.
+//! Every GEMM goes through the model's per-linear dispatch kernel
+//! ([`super::kernels`]), fixed at pack/load time and bit-identical across
+//! ISA variants, so the contract holds for any `--kernel`/`AQ_KERNEL`
+//! selection too. Tests in `rust/tests/engine.rs` assert exact equality.
 
 use crate::rngx::Pcg32;
 use crate::telemetry::numeric::{NumericHealth, Welford};

@@ -8,18 +8,29 @@
 //! `O(stripe_width)` and the dequant cost is amortized over the batch.
 //!
 //! Threading: output columns are split into SIMD-width-aligned stripes
-//! (widths a multiple of [`STRIPE_ALIGN`] = 16 f32 lanes, except the
-//! ragged tail), at least one stripe per core when the column count
-//! permits. A pool of scoped `std::thread` workers drains the stripes
-//! in a static round-robin; each stripe's partial buffer is computed
-//! privately and copied into `y` after join. Every `y[i][j]` is
+//! (widths a multiple of [`STRIPE_ALIGN`], i.e. `2 ×` [`SIMD_LANES`] f32
+//! lanes, except the merged ragged tail — `plan_stripes` debug-asserts
+//! those invariants for every `dout`), at least one stripe per core when
+//! the column count permits. A pool of scoped `std::thread` workers drains
+//! the stripes in a static round-robin; each stripe's partial buffer is
+//! computed privately and copied into `y` after join. Every `y[i][j]` is
 //! accumulated serially over `k` in ascending order inside exactly one
 //! stripe, and the inner FMA is unrolled [`SIMD_LANES`] wide over *columns*
 //! only (each column keeps its own accumulation chain), so results are
 //! **bit-identical for any m, any thread count, and any stripe partition**
 //! — the property the engine's "incremental decode == full forward"
 //! guarantee rests on.
+//!
+//! The stripe inner loop itself lives in [`super::kernels`]: it is
+//! monomorphized per `(bits, group)` and stamped into per-ISA
+//! `#[target_feature]` entry points selected once per model load by CPU
+//! feature detection. [`packed_gemm_with`] runs an explicit kernel (what
+//! `PackedLinear` resolved at pack/load time); bare [`packed_gemm`]
+//! resolves the process-wide selection per call. Every kernel variant
+//! executes the same arithmetic in the same order, so the bit-identity
+//! contract above holds across variants too.
 
+use super::kernels::{self, Kernel};
 use crate::tensor::num_threads;
 
 /// f32 lanes the inner FMA/dequant loops are unrolled for — one 256-bit
@@ -81,8 +92,17 @@ impl PackedWeight<'_> {
 }
 
 /// `y (m, dout) += x (m, din) @ dequant(W)`. `y` must be pre-zeroed by the
-/// caller if `+=` semantics are not wanted.
+/// caller if `+=` semantics are not wanted. Resolves the process-wide
+/// kernel selection per call; hot paths holding a `PackedLinear` go through
+/// [`packed_gemm_with`] with the kernel resolved once at pack/load.
 pub fn packed_gemm(w: &PackedWeight, x: &[f32], y: &mut [f32], m: usize) {
+    packed_gemm_with(kernels::select(w.bits, w.group_len), w, x, y, m)
+}
+
+/// [`packed_gemm`] through an explicit dispatch kernel (see
+/// [`super::kernels`]). The kernel only changes which ISA executes the
+/// stripe loop — outputs are bit-identical across every variant.
+pub fn packed_gemm_with(kernel: Kernel, w: &PackedWeight, x: &[f32], y: &mut [f32], m: usize) {
     w.check();
     assert_eq!(x.len(), m * w.din, "x len vs (m={m}, din={})", w.din);
     assert_eq!(y.len(), m * w.dout, "y len vs (m={m}, dout={})", w.dout);
@@ -92,7 +112,7 @@ pub fn packed_gemm(w: &PackedWeight, x: &[f32], y: &mut [f32], m: usize) {
     run_stripes(
         &stripes,
         m,
-        |j0, j1, part| gemm_stripe(w, x, m, j0, j1, part),
+        |j0, j1, part| kernel.run(w, x, m, j0, j1, part),
         |j0, j1, part| {
             let bw = j1 - j0;
             for i in 0..m {
@@ -178,7 +198,9 @@ where
 fn plan_stripes(m: usize, din: usize, dout: usize) -> Vec<(usize, usize)> {
     let work = m * din * dout;
     if work < 32 * 128 * 128 || dout < 2 * STRIPE_ALIGN {
-        return vec![(0, dout)];
+        let plan = vec![(0, dout)];
+        debug_check_plan(&plan, dout);
+        return plan;
     }
     let threads = num_threads();
     let mut width = STRIPE_WIDTH;
@@ -197,38 +219,54 @@ fn plan_stripes(m: usize, din: usize, dout: usize) -> Vec<(usize, usize)> {
         out.push((j, hi));
         j = hi;
     }
+    debug_check_plan(&out, dout);
     out
 }
 
-/// Serial kernel over columns `[j0, j1)`: stream code rows, dequant into a
-/// stripe-wide buffer, FMA into each of the `m` partial rows. Inner loops
-/// are unrolled [`SIMD_LANES`] wide over columns; every column's
-/// accumulator chain is untouched by the unroll, so the kernel is
-/// bit-identical to the scalar form.
-fn gemm_stripe(w: &PackedWeight, x: &[f32], m: usize, j0: usize, j1: usize, part: &mut [f32]) {
-    let bw = j1 - j0;
-    let mut crow = vec![0u8; bw];
-    let mut wrow = vec![0.0f32; bw];
-    for k in 0..w.din {
-        let gi = k / w.group_len;
-        unpack_seg(w.packed, w.bits, k * w.dout + j0, &mut crow);
-        let sc = &w.scales[gi * w.dout + j0..gi * w.dout + j1];
-        let zp = &w.zps[gi * w.dout + j0..gi * w.dout + j1];
-        dequant_row(&crow, sc, zp, &mut wrow);
-        for i in 0..m {
-            let a = x[i * w.din + k];
-            if a != 0.0 {
-                axpy(a, &wrow, &mut part[i * bw..(i + 1) * bw]);
-            }
+/// Debug-only plan invariants: gap-free coverage of `[0, dout)`, every
+/// stripe start on the [`STRIPE_ALIGN`] lane grid, and every stripe width a
+/// [`STRIPE_ALIGN`] multiple except the final one (which absorbs the merged
+/// ragged tail). Holds for every `dout`, including the single-stripe fast
+/// path.
+fn debug_check_plan(plan: &[(usize, usize)], dout: usize) {
+    if !cfg!(debug_assertions) || dout == 0 {
+        return;
+    }
+    debug_assert_eq!(plan.first().map(|s| s.0), Some(0), "plan must start at 0: {plan:?}");
+    debug_assert_eq!(plan.last().map(|s| s.1), Some(dout), "plan must cover dout: {plan:?}");
+    for w in plan.windows(2) {
+        debug_assert_eq!(w[0].1, w[1].0, "stripes must tile without gaps: {plan:?}");
+    }
+    for (i, &(j0, j1)) in plan.iter().enumerate() {
+        debug_assert!(j1 > j0, "empty stripe {i}: {plan:?}");
+        debug_assert_eq!(j0 % STRIPE_ALIGN, 0, "stripe {i} start off the lane grid: {plan:?}");
+        if i + 1 < plan.len() {
+            debug_assert_eq!(
+                (j1 - j0) % STRIPE_ALIGN,
+                0,
+                "interior stripe {i} width off the lane grid: {plan:?}"
+            );
         }
     }
 }
 
+/// Serial scalar-reference kernel over columns `[j0, j1)`: stream code
+/// rows, dequant into a stripe-wide buffer, FMA into each of the `m`
+/// partial rows. The loop body now lives in [`super::kernels`] (where it is
+/// also monomorphized per `(bits, group)` and stamped into per-ISA entry
+/// points); this wrapper is the always-safe runtime-generic form the
+/// partition-invariance test compares against.
+#[cfg(test)]
+fn gemm_stripe(w: &PackedWeight, x: &[f32], m: usize, j0: usize, j1: usize, part: &mut [f32]) {
+    kernels::reference(w, x, m, j0, j1, part)
+}
+
 /// `out[j] = (codes[j] - zp[j]) * sc[j]`, processed in [`SIMD_LANES`]-wide
 /// blocks whose exact trip count lets LLVM drop bounds checks and emit
-/// vector code.
-#[inline]
-fn dequant_row(codes: &[u8], sc: &[f32], zp: &[f32], out: &mut [f32]) {
+/// vector code. `#[inline(always)]` so the [`super::kernels`] entry points
+/// absorb it under their `#[target_feature]` sets.
+#[inline(always)]
+pub(crate) fn dequant_row(codes: &[u8], sc: &[f32], zp: &[f32], out: &mut [f32]) {
     let mut o = out.chunks_exact_mut(SIMD_LANES);
     let mut c = codes.chunks_exact(SIMD_LANES);
     let mut s = sc.chunks_exact(SIMD_LANES);
@@ -246,9 +284,11 @@ fn dequant_row(codes: &[u8], sc: &[f32], zp: &[f32], out: &mut [f32]) {
 
 /// `dst[j] += a * src[j]` in [`SIMD_LANES`]-wide blocks. Column-only
 /// blocking: each `dst[j]` keeps its private accumulation chain over `k`,
-/// so this is bit-identical to the scalar loop.
-#[inline]
-fn axpy(a: f32, src: &[f32], dst: &mut [f32]) {
+/// so this is bit-identical to the scalar loop. `#[inline(always)]` so the
+/// [`super::kernels`] entry points absorb it under their
+/// `#[target_feature]` sets.
+#[inline(always)]
+pub(crate) fn axpy(a: f32, src: &[f32], dst: &mut [f32]) {
     let mut d = dst.chunks_exact_mut(SIMD_LANES);
     let mut s = src.chunks_exact(SIMD_LANES);
     for (db, sb) in (&mut d).zip(&mut s) {

@@ -1,0 +1,618 @@
+//! Runtime-specialized GEMM stripe kernels.
+//!
+//! The fused unpack→dequant→FMA stripe loop in [`super::gemm`] is the hot
+//! path under every decode tick. This module monomorphizes that inner loop
+//! per `(bit_width, group_size)` via const generics — the unpacker collapses
+//! to the fixed codes-per-byte layout of w2/w4/w8 (w3 const-folds the
+//! generic shifter), and `k / group_len` becomes a shift for the common
+//! group sizes — and stamps each specialization into per-ISA entry points:
+//!
+//! | variant  | target features    | compiled when                         |
+//! |----------|--------------------|---------------------------------------|
+//! | `scalar` | none (baseline)    | always                                |
+//! | `avx2`   | avx2               | `x86_64`                              |
+//! | `avx512` | avx512f + avx512bw | `x86_64` + `avx512` cargo feature     |
+//! | `neon`   | neon               | `aarch64`                             |
+//!
+//! Selection happens once per `PackedLinear` at pack/load time:
+//! `--kernel` CLI override > `AQ_KERNEL` env > auto (best variant whose CPU
+//! features runtime detection confirms, preferring avx512 > avx2 > neon >
+//! scalar). An explicit request for an unavailable variant falls back to
+//! auto and the fallback is surfaced in [`KernelInfo`] (`/v1/stats`, the
+//! `aq_kernel_info` metric, and the `doctor` exhibit all report it).
+//!
+//! **Bit-stability.** Every entry point runs the *same* Rust loop body —
+//! `#[target_feature]` only widens the instruction selection LLVM may use
+//! to vectorize it. rustc never contracts separate mul+add into FMA, the
+//! unpackers produce identical code bytes, and the dequant/FMA helpers
+//! block over *columns* only (each output column keeps its own f32
+//! accumulation chain over ascending `k`), so every variant is
+//! **bit-identical** to the scalar reference — the engine's greedy outputs
+//! do not depend on the selected kernel, the thread count, or the stripe
+//! partition. A property test in `rust/tests/engine.rs` asserts this across
+//! all compiled variants × bit-widths × group sizes × ragged tails.
+//!
+//! Safety model: specialized entries are `unsafe fn` (calling one on a CPU
+//! without the ISA is undefined behavior). They are reachable only through
+//! [`Kernel::run`], and [`select_for`] hands out an entry only after
+//! `is_x86_feature_detected!`/`is_aarch64_feature_detected!` confirms the
+//! features (scalar otherwise), which makes the call sound. Generic
+//! functions cannot carry `#[target_feature]`, so the const-generic body is
+//! `#[inline(always)]` and the macro stamps concrete wrappers around it —
+//! the body inlines into the wrapper and inherits its feature set.
+
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+use super::gemm::{axpy, dequant_row, unpack_seg, PackedWeight};
+
+/// Signature shared by every stripe entry point: accumulate
+/// `part (m, j1-j0) += x (m, din) @ dequant(W[:, j0..j1])`.
+///
+/// `unsafe`: specialized entries require their ISA to be present; call
+/// through [`Kernel::run`], never directly.
+pub type StripeFn = for<'w, 'p, 'x, 'o> unsafe fn(
+    &'w PackedWeight<'p>,
+    &'x [f32],
+    usize,
+    usize,
+    usize,
+    &'o mut [f32],
+);
+
+// ------------------------------------------------------------------ body
+
+/// The one stripe loop, monomorphized by the const parameters. `BITS == 0`
+/// / `GROUP == 0` mean "read the runtime value from the weight" (the
+/// generic fallback entries); nonzero consts must match the weight and
+/// let the compiler specialize the unpacker and the group division.
+#[inline(always)]
+fn stripe_body<const BITS: u32, const GROUP: usize>(
+    w: &PackedWeight<'_>,
+    x: &[f32],
+    m: usize,
+    j0: usize,
+    j1: usize,
+    part: &mut [f32],
+) {
+    let bits = if BITS == 0 { w.bits } else { BITS };
+    let group_len = if GROUP == 0 { w.group_len } else { GROUP };
+    debug_assert_eq!(bits, w.bits, "kernel monomorphized for other bits");
+    debug_assert_eq!(group_len, w.group_len, "kernel monomorphized for other group");
+    let bw = j1 - j0;
+    let mut crow = vec![0u8; bw];
+    let mut wrow = vec![0.0f32; bw];
+    for k in 0..w.din {
+        let gi = k / group_len;
+        unpack_row::<BITS>(w.packed, bits, k * w.dout + j0, &mut crow);
+        let sc = &w.scales[gi * w.dout + j0..gi * w.dout + j1];
+        let zp = &w.zps[gi * w.dout + j0..gi * w.dout + j1];
+        dequant_row(&crow, sc, zp, &mut wrow);
+        for i in 0..m {
+            let a = x[i * w.din + k];
+            if a != 0.0 {
+                axpy(a, &wrow, &mut part[i * bw..(i + 1) * bw]);
+            }
+        }
+    }
+}
+
+/// Compile-time unpack dispatch: the const `BITS` selects a fixed-layout
+/// decoder where one exists; other widths (and the runtime-`BITS` fallback)
+/// go through the generic shifter, with the shift counts const-folded when
+/// `BITS` is known.
+#[inline(always)]
+fn unpack_row<const BITS: u32>(packed: &[u8], bits: u32, start: usize, out: &mut [u8]) {
+    match BITS {
+        2 => unpack_w2(packed, start, out),
+        4 => unpack_w4(packed, start, out),
+        8 => unpack_w8(packed, start, out),
+        0 => unpack_seg(packed, bits, start, out),
+        _ => unpack_seg(packed, BITS, start, out),
+    }
+}
+
+/// 2-bit codes: 4 per byte, little-endian within the byte (`pack_bits`
+/// layout). Handles an arbitrary element offset — a stripe's `start` =
+/// `k * dout + j0` can land mid-byte.
+#[inline(always)]
+fn unpack_w2(packed: &[u8], start: usize, out: &mut [u8]) {
+    if out.is_empty() {
+        return;
+    }
+    let mut i = 0;
+    let mut byte = start / 4;
+    let lead = start % 4;
+    if lead != 0 {
+        let b = packed[byte];
+        let mut off = lead;
+        while off < 4 && i < out.len() {
+            out[i] = (b >> (2 * off)) & 3;
+            i += 1;
+            off += 1;
+        }
+        byte += 1;
+    }
+    while out.len() - i >= 4 {
+        let b = packed[byte];
+        out[i] = b & 3;
+        out[i + 1] = (b >> 2) & 3;
+        out[i + 2] = (b >> 4) & 3;
+        out[i + 3] = b >> 6;
+        i += 4;
+        byte += 1;
+    }
+    if i < out.len() {
+        let b = packed[byte];
+        let mut off = 0;
+        while i < out.len() {
+            out[i] = (b >> (2 * off)) & 3;
+            i += 1;
+            off += 1;
+        }
+    }
+}
+
+/// 4-bit codes: 2 per byte, low nibble first (`pack_bits` layout), with an
+/// odd `start` beginning on a high nibble.
+#[inline(always)]
+fn unpack_w4(packed: &[u8], start: usize, out: &mut [u8]) {
+    if out.is_empty() {
+        return;
+    }
+    let mut i = 0;
+    let mut byte = start / 2;
+    if start % 2 == 1 {
+        out[i] = packed[byte] >> 4;
+        i += 1;
+        byte += 1;
+    }
+    while out.len() - i >= 2 {
+        let b = packed[byte];
+        out[i] = b & 0x0f;
+        out[i + 1] = b >> 4;
+        i += 2;
+        byte += 1;
+    }
+    if i < out.len() {
+        out[i] = packed[byte] & 0x0f;
+    }
+}
+
+/// 8-bit codes are bytes: a straight copy.
+#[inline(always)]
+fn unpack_w8(packed: &[u8], start: usize, out: &mut [u8]) {
+    let n = out.len();
+    out.copy_from_slice(&packed[start..start + n]);
+}
+
+// --------------------------------------------------------------- stamping
+
+/// Stamp one concrete entry point around [`stripe_body`]. Entries are
+/// `unsafe fn` (uniform signature with the `#[target_feature]` variants) so
+/// they all coerce to [`StripeFn`].
+macro_rules! stamp_entry {
+    ($(#[$attr:meta])* $name:ident, $bits:literal, $group:literal) => {
+        $(#[$attr])*
+        pub(super) unsafe fn $name(
+            w: &PackedWeight<'_>,
+            x: &[f32],
+            m: usize,
+            j0: usize,
+            j1: usize,
+            part: &mut [f32],
+        ) {
+            stripe_body::<$bits, $group>(w, x, m, j0, j1, part)
+        }
+    };
+}
+
+/// Stamp a full ISA module: every (bits ∈ {2,3,4,8}, group ∈ {32,64,128,
+/// runtime}) specialization plus the fully-generic fallback, and a
+/// `lookup` that maps a weight shape to the matching entry + its name.
+macro_rules! stamp_isa {
+    ($mod_name:ident $(, $feat:literal)*) => {
+        mod $mod_name {
+            use super::*;
+
+            stamp_entry!($(#[target_feature(enable = $feat)])* w2_g32, 2, 32);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w2_g64, 2, 64);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w2_g128, 2, 128);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w2_gx, 2, 0);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w3_g32, 3, 32);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w3_g64, 3, 64);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w3_g128, 3, 128);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w3_gx, 3, 0);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w4_g32, 4, 32);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w4_g64, 4, 64);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w4_g128, 4, 128);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w4_gx, 4, 0);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w8_g32, 8, 32);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w8_g64, 8, 64);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w8_g128, 8, 128);
+            stamp_entry!($(#[target_feature(enable = $feat)])* w8_gx, 8, 0);
+            stamp_entry!($(#[target_feature(enable = $feat)])* generic, 0, 0);
+
+            /// Entry + display name for a `(bits, group_len)` weight shape.
+            /// (Spelled out arm-by-arm: a helper macro here would need the
+            /// unstable `$$` escape to survive the outer expansion.)
+            pub(super) fn lookup(bits: u32, group_len: usize) -> (&'static str, StripeFn) {
+                match (bits, group_len) {
+                    (2, 32) => (concat!(stringify!($mod_name), "/w2g32"), w2_g32 as StripeFn),
+                    (2, 64) => (concat!(stringify!($mod_name), "/w2g64"), w2_g64 as StripeFn),
+                    (2, 128) => (concat!(stringify!($mod_name), "/w2g128"), w2_g128 as StripeFn),
+                    (2, _) => (concat!(stringify!($mod_name), "/w2gx"), w2_gx as StripeFn),
+                    (3, 32) => (concat!(stringify!($mod_name), "/w3g32"), w3_g32 as StripeFn),
+                    (3, 64) => (concat!(stringify!($mod_name), "/w3g64"), w3_g64 as StripeFn),
+                    (3, 128) => (concat!(stringify!($mod_name), "/w3g128"), w3_g128 as StripeFn),
+                    (3, _) => (concat!(stringify!($mod_name), "/w3gx"), w3_gx as StripeFn),
+                    (4, 32) => (concat!(stringify!($mod_name), "/w4g32"), w4_g32 as StripeFn),
+                    (4, 64) => (concat!(stringify!($mod_name), "/w4g64"), w4_g64 as StripeFn),
+                    (4, 128) => (concat!(stringify!($mod_name), "/w4g128"), w4_g128 as StripeFn),
+                    (4, _) => (concat!(stringify!($mod_name), "/w4gx"), w4_gx as StripeFn),
+                    (8, 32) => (concat!(stringify!($mod_name), "/w8g32"), w8_g32 as StripeFn),
+                    (8, 64) => (concat!(stringify!($mod_name), "/w8g64"), w8_g64 as StripeFn),
+                    (8, 128) => (concat!(stringify!($mod_name), "/w8g128"), w8_g128 as StripeFn),
+                    (8, _) => (concat!(stringify!($mod_name), "/w8gx"), w8_gx as StripeFn),
+                    _ => (concat!(stringify!($mod_name), "/generic"), generic as StripeFn),
+                }
+            }
+        }
+    };
+}
+
+stamp_isa!(scalar);
+#[cfg(target_arch = "x86_64")]
+stamp_isa!(avx2, "avx2");
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+stamp_isa!(avx512, "avx512f", "avx512bw");
+#[cfg(target_arch = "aarch64")]
+stamp_isa!(neon, "neon");
+
+/// The always-available scalar loop with runtime bits/group — exactly the
+/// pre-dispatch `gemm_stripe` body, callable safely. Every specialized
+/// variant must match it bit-for-bit.
+pub fn reference(
+    w: &PackedWeight<'_>,
+    x: &[f32],
+    m: usize,
+    j0: usize,
+    j1: usize,
+    part: &mut [f32],
+) {
+    stripe_body::<0, 0>(w, x, m, j0, j1, part)
+}
+
+// -------------------------------------------------------------- selection
+
+/// ISA variant of a kernel entry. All four names are always accepted by
+/// the `--kernel` flag / `AQ_KERNEL` env; variants the binary was not
+/// compiled for (wrong arch, or `avx512` without the cargo feature) simply
+/// never report as compiled/available.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Scalar,
+    Avx2,
+    Avx512,
+    Neon,
+}
+
+/// Every variant, in `auto()` preference order (widest vectors first,
+/// scalar last).
+pub const ALL: [Variant; 4] = [Variant::Avx512, Variant::Avx2, Variant::Neon, Variant::Scalar];
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Scalar => "scalar",
+            Variant::Avx2 => "avx2",
+            Variant::Avx512 => "avx512",
+            Variant::Neon => "neon",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Variant::Scalar),
+            "avx2" => Some(Variant::Avx2),
+            "avx512" | "avx512f" => Some(Variant::Avx512),
+            "neon" => Some(Variant::Neon),
+            _ => None,
+        }
+    }
+
+    /// Entry points for this variant exist in the binary.
+    pub fn compiled(self) -> bool {
+        match self {
+            Variant::Scalar => true,
+            Variant::Avx2 => cfg!(target_arch = "x86_64"),
+            Variant::Avx512 => cfg!(all(target_arch = "x86_64", feature = "avx512")),
+            Variant::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// Compiled *and* the CPU the process is running on has the features —
+    /// the soundness gate for handing out this variant's entries.
+    pub fn detected(self) -> bool {
+        if !self.compiled() {
+            return false;
+        }
+        match self {
+            Variant::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Variant::Avx2 => std::is_x86_feature_detected!("avx2"),
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            Variant::Avx512 => {
+                std::is_x86_feature_detected!("avx512f")
+                    && std::is_x86_feature_detected!("avx512bw")
+            }
+            #[cfg(target_arch = "aarch64")]
+            Variant::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+}
+
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Variants whose entry points exist in this binary.
+pub fn compiled() -> Vec<Variant> {
+    ALL.iter().copied().filter(|v| v.compiled()).collect()
+}
+
+/// Variants this process may actually run (compiled + CPU-detected).
+pub fn available() -> Vec<Variant> {
+    ALL.iter().copied().filter(|v| v.detected()).collect()
+}
+
+/// Best available variant: avx512 > avx2 > neon > scalar.
+pub fn auto() -> Variant {
+    ALL.iter().copied().find(|v| v.detected()).unwrap_or(Variant::Scalar)
+}
+
+static CLI_REQUEST: OnceLock<Variant> = OnceLock::new();
+
+/// Install the `--kernel` CLI override (wins over `AQ_KERNEL`). Must name a
+/// known variant; an unavailable-but-known one is accepted and falls back
+/// at selection time (observable via [`info`]). First call wins; call
+/// before the model is packed/loaded.
+pub fn set_requested(name: &str) -> Result<()> {
+    match Variant::parse(name) {
+        Some(v) => {
+            let _ = CLI_REQUEST.set(v);
+            Ok(())
+        }
+        None => bail!("unknown kernel variant {name:?} (expected scalar|avx2|avx512|neon)"),
+    }
+}
+
+/// How the process-wide variant was chosen, for observability surfaces.
+#[derive(Clone, Debug)]
+pub struct KernelInfo {
+    /// What [`select`] hands out.
+    pub selected: Variant,
+    /// The raw explicit request (`--kernel`/`AQ_KERNEL`), when one was made
+    /// — may name an unavailable or unknown variant.
+    pub requested: Option<String>,
+    /// `"flag"`, `"env"`, or `"auto"`.
+    pub source: &'static str,
+    /// True when an explicit request could not be honored on this
+    /// CPU/build and selection fell back to auto.
+    pub fell_back: bool,
+    pub compiled: Vec<Variant>,
+    pub available: Vec<Variant>,
+}
+
+/// Snapshot of the current selection state (`/v1/stats`, `aq_kernel_info`,
+/// `doctor`).
+pub fn info() -> KernelInfo {
+    let (selected, requested, source, fell_back) = resolve();
+    KernelInfo {
+        selected,
+        requested,
+        source,
+        fell_back,
+        compiled: compiled(),
+        available: available(),
+    }
+}
+
+/// The variant [`select`] currently resolves to.
+pub fn selected() -> Variant {
+    resolve().0
+}
+
+fn resolve() -> (Variant, Option<String>, &'static str, bool) {
+    if let Some(&v) = CLI_REQUEST.get() {
+        return honor(v.name().to_string(), Some(v), "flag");
+    }
+    match std::env::var("AQ_KERNEL") {
+        Ok(s) if !s.trim().is_empty() => {
+            let v = Variant::parse(&s);
+            honor(s, v, "env")
+        }
+        _ => (auto(), None, "auto", false),
+    }
+}
+
+fn honor(
+    raw: String,
+    v: Option<Variant>,
+    source: &'static str,
+) -> (Variant, Option<String>, &'static str, bool) {
+    match v {
+        Some(v) if v.detected() => (v, Some(raw), source, false),
+        _ => (auto(), Some(raw), source, true),
+    }
+}
+
+// --------------------------------------------------------------- kernels
+
+/// A resolved dispatch entry: ISA variant + the `(bits, group)`
+/// monomorphization for one weight shape. `Copy` — each `PackedLinear`
+/// stores its kernel at pack/load time, so the hot path never re-resolves.
+#[derive(Clone, Copy)]
+pub struct Kernel {
+    pub variant: Variant,
+    /// `<variant>/<specialization>`, e.g. `"avx2/w4g128"`.
+    pub name: &'static str,
+    f: StripeFn,
+}
+
+impl Kernel {
+    /// Run the stripe kernel: `part (m, j1-j0) += x @ dequant(W[:, j0..j1])`.
+    #[inline]
+    pub fn run(
+        &self,
+        w: &PackedWeight<'_>,
+        x: &[f32],
+        m: usize,
+        j0: usize,
+        j1: usize,
+        part: &mut [f32],
+    ) {
+        // SAFETY: `select_for` hands out a specialized entry only when
+        // runtime feature detection confirmed its ISA on this CPU (scalar
+        // needs no features), so the target-feature contract is met.
+        unsafe { (self.f)(w, x, m, j0, j1, part) }
+    }
+}
+
+impl std::fmt::Debug for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Kernel").field("name", &self.name).finish()
+    }
+}
+
+/// Resolve the dispatch kernel for a `(bits, group_len)` weight shape under
+/// the process-wide selection (override > env > auto).
+pub fn select(bits: u32, group_len: usize) -> Kernel {
+    select_for(selected(), bits, group_len)
+}
+
+/// Resolve for an explicit variant (tests, benches, `PackedModel::
+/// force_kernel`). Falls back to scalar when the variant is not runnable
+/// here — the returned kernel is always sound to call.
+pub fn select_for(variant: Variant, bits: u32, group_len: usize) -> Kernel {
+    let v = if variant.detected() { variant } else { Variant::Scalar };
+    let (name, f) = match v {
+        Variant::Scalar => scalar::lookup(bits, group_len),
+        #[cfg(target_arch = "x86_64")]
+        Variant::Avx2 => avx2::lookup(bits, group_len),
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        Variant::Avx512 => avx512::lookup(bits, group_len),
+        #[cfg(target_arch = "aarch64")]
+        Variant::Neon => neon::lookup(bits, group_len),
+        _ => scalar::lookup(bits, group_len),
+    };
+    Kernel { variant: v, name, f }
+}
+
+/// The runtime-generic scalar entry wrapped as a [`Kernel`] — exactly the
+/// pre-dispatch stripe loop. Benches and tests use it as the baseline every
+/// specialized variant must match bit-for-bit (and beat on throughput).
+pub fn reference_kernel() -> Kernel {
+    let (name, f) = scalar::lookup(0, 0);
+    Kernel { variant: Variant::Scalar, name, f }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack_bits;
+    use crate::rngx::Pcg32;
+
+    #[test]
+    fn specialized_unpackers_match_generic() {
+        let mut rng = Pcg32::seeded(21);
+        for bits in [2u32, 4, 8] {
+            let n = 513;
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            let packed = pack_bits(&codes, bits);
+            for &(s, l) in
+                &[(0usize, 8usize), (1, 7), (2, 5), (3, 64), (5, 1), (7, 2), (130, 96), (509, 4)]
+            {
+                let mut want = vec![0u8; l];
+                unpack_seg(&packed, bits, s, &mut want);
+                let mut got = vec![0u8; l];
+                match bits {
+                    2 => unpack_w2(&packed, s, &mut got),
+                    4 => unpack_w4(&packed, s, &mut got),
+                    8 => unpack_w8(&packed, s, &mut got),
+                    _ => unreachable!(),
+                }
+                assert_eq!(got, want, "bits={bits} start={s} len={l}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_always_available_and_auto_never_empty() {
+        assert!(Variant::Scalar.compiled());
+        assert!(Variant::Scalar.detected());
+        assert!(compiled().contains(&Variant::Scalar));
+        assert!(available().contains(&Variant::Scalar));
+        assert!(auto().detected());
+    }
+
+    #[test]
+    fn select_for_falls_back_to_scalar_when_unavailable() {
+        for v in ALL {
+            let k = select_for(v, 4, 128);
+            assert!(k.variant.detected(), "{v} selection must be runnable");
+            if !v.detected() {
+                assert_eq!(k.variant, Variant::Scalar);
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_names_follow_variant_and_shape() {
+        assert_eq!(select_for(Variant::Scalar, 4, 128).name, "scalar/w4g128");
+        assert_eq!(select_for(Variant::Scalar, 3, 64).name, "scalar/w3g64");
+        assert_eq!(select_for(Variant::Scalar, 2, 48).name, "scalar/w2gx");
+        assert_eq!(select_for(Variant::Scalar, 5, 64).name, "scalar/generic");
+        let k = select_for(auto(), 4, 128);
+        assert!(k.name.starts_with(k.variant.name()), "{} vs {}", k.name, k.variant);
+    }
+
+    #[test]
+    fn variants_bit_identical_on_one_stripe() {
+        let mut rng = Pcg32::seeded(22);
+        let (din, dout, m) = (128, 75, 3);
+        for (bits, group_len) in [(2u32, 32usize), (3, 64), (4, 64), (8, 128), (4, 25)] {
+            let group_len = if din % group_len == 0 { group_len } else { din };
+            let codes: Vec<u8> = (0..din * dout).map(|_| rng.below(1 << bits) as u8).collect();
+            let packed = pack_bits(&codes, bits);
+            let ng = din / group_len;
+            let scales: Vec<f32> = (0..ng * dout).map(|_| 0.01 + rng.uniform() as f32).collect();
+            let zps: Vec<f32> = (0..ng * dout).map(|_| rng.below(1 << bits) as f32).collect();
+            let w = PackedWeight {
+                packed: &packed,
+                bits,
+                din,
+                dout,
+                group_len,
+                scales: &scales,
+                zps: &zps,
+            };
+            let x: Vec<f32> = (0..m * din).map(|_| rng.normal() as f32).collect();
+            // ragged sub-stripe on purpose: j0=8, j1=dout
+            let (j0, j1) = (8, dout);
+            let mut want = vec![0.0f32; m * (j1 - j0)];
+            reference(&w, &x, m, j0, j1, &mut want);
+            for v in available() {
+                let k = select_for(v, bits, group_len);
+                let mut got = vec![0.0f32; m * (j1 - j0)];
+                k.run(&w, &x, m, j0, j1, &mut got);
+                assert_eq!(got, want, "kernel {} diverges from scalar reference", k.name);
+            }
+        }
+    }
+}

@@ -9,6 +9,10 @@
 //!   single-file serialization (jsonx header + raw blobs).
 //! * [`gemm`]   — fused unpack→dequant→matmul microkernels (w2/w3/w4/w8,
 //!   per-group and per-channel), column-striped `std::thread` workers.
+//! * [`kernels`] — runtime-specialized stripe kernels: const-generic
+//!   `(bits, group)` monomorphization stamped into per-ISA
+//!   `#[target_feature]` entry points, selected once per model load by CPU
+//!   feature detection (`AQ_KERNEL`/`--kernel` overridable).
 //! * [`kv`]     — paged KV cache: refcounted fixed-size pages, per-slot
 //!   page tables, copy-on-write prompt-prefix sharing, LRU reclamation.
 //! * [`decode`] — host transformer forward (both families) + sampling;
@@ -21,6 +25,7 @@
 
 pub mod decode;
 pub mod gemm;
+pub mod kernels;
 pub mod kv;
 pub mod packed;
 pub mod sched;
@@ -35,6 +40,7 @@ use crate::telemetry::Recorder;
 pub use decode::{
     forward_full, forward_window, hidden_full, probe_divergence, DivergenceProbe, Sampler,
 };
+pub use kernels::{KernelInfo, Variant as KernelVariant};
 pub use kv::{worst_case_pages_for, KvConfig, KvStats, Reclaim, DEFAULT_PAGE_TOKENS};
 pub use packed::{default_probe, LayerCalib, PackedLinear, PackedModel};
 pub use sched::{

@@ -18,7 +18,8 @@ use crate::model::{ModelConfig, ParamStore};
 use crate::quant::{pack_bits, quantize_codes, QuantSpec};
 use crate::tensor::{numel, Tensor};
 
-use super::gemm::{packed_gemm, PackedWeight};
+use super::gemm::{packed_gemm_with, PackedWeight};
+use super::kernels::{self, Kernel};
 
 // ------------------------------------------------------------------- f16
 // IEEE 754 binary16 conversion (the `half` crate is not vendored offline).
@@ -112,6 +113,10 @@ pub struct PackedLinear {
     /// f32 decode of the params, kept hot for the GEMM.
     scales: Vec<f32>,
     zps: Vec<f32>,
+    /// Dispatch kernel for this (bits, group) shape, resolved once at
+    /// pack/load time under the process-wide ISA selection
+    /// (`engine::kernels`) — the hot path never re-resolves.
+    kernel: Kernel,
 }
 
 impl PackedLinear {
@@ -134,6 +139,7 @@ impl PackedLinear {
             zps16,
             scales,
             zps,
+            kernel: kernels::select(spec.bits, spec.group_len(din)),
         }
     }
 
@@ -157,7 +163,8 @@ impl PackedLinear {
         }
         let scales = scales16.iter().map(|&h| f16_decode(h)).collect();
         let zps = zps16.iter().map(|&h| f16_decode(h)).collect();
-        Ok(PackedLinear { name, din, dout, spec, packed, scales16, zps16, scales, zps })
+        let kernel = kernels::select(spec.bits, spec.group_len(din));
+        Ok(PackedLinear { name, din, dout, spec, packed, scales16, zps16, scales, zps, kernel })
     }
 
     /// The f16-decoded (scales, zero-points), row-major (ngroups, dout).
@@ -177,16 +184,29 @@ impl PackedLinear {
         }
     }
 
-    /// `y (m, dout) = x (m, din) @ dequant(W)` through the fused kernel.
+    /// `y (m, dout) = x (m, din) @ dequant(W)` through the fused kernel
+    /// this linear resolved at pack/load time.
     pub fn matmul(&self, x: &[f32], m: usize) -> Vec<f32> {
         let mut y = vec![0.0f32; m * self.dout];
-        packed_gemm(&self.weight(), x, &mut y, m);
+        packed_gemm_with(self.kernel, &self.weight(), x, &mut y, m);
         y
     }
 
     /// Accumulating variant: `y += x @ dequant(W)`.
     pub fn matmul_into(&self, x: &[f32], y: &mut [f32], m: usize) {
-        packed_gemm(&self.weight(), x, y, m);
+        packed_gemm_with(self.kernel, &self.weight(), x, y, m);
+    }
+
+    /// Name of the dispatch kernel the matmuls ride, e.g. `"avx2/w4g128"`.
+    pub fn kernel_name(&self) -> &'static str {
+        self.kernel.name
+    }
+
+    /// Re-resolve dispatch onto an explicit ISA variant (tests/tools; falls
+    /// back to scalar when the variant is unavailable on this CPU, so the
+    /// result is always runnable). Outputs are bit-identical either way.
+    pub fn set_kernel(&mut self, variant: kernels::Variant) {
+        self.kernel = kernels::select_for(variant, self.spec.bits, self.spec.group_len(self.din));
     }
 
     /// Quantization error vs the pre-quant reference weights: `(sum of
@@ -399,6 +419,28 @@ impl PackedModel {
             blocks.push(PackedBlock::new(linears, b.f32s.clone()));
         }
         PackedModel { cfg: self.cfg.clone(), spec, globals: self.globals.clone(), blocks, calib }
+    }
+
+    /// Dispatch kernel name of the serving linears (they share one spec, so
+    /// one kernel), e.g. `"avx2/w4g128"`. Falls back to resolving the spec
+    /// directly when the model has no quantized linears.
+    pub fn kernel_name(&self) -> &'static str {
+        self.blocks
+            .iter()
+            .find_map(|b| b.linears.first())
+            .map(|l| l.kernel_name())
+            .unwrap_or_else(|| kernels::select(self.spec.bits, self.spec.group).name)
+    }
+
+    /// Force every linear onto an explicit kernel variant (tests, `doctor`,
+    /// benches; scalar fallback when unavailable). Greedy output is
+    /// bit-identical across variants — asserted by the engine test suite.
+    pub fn force_kernel(&mut self, variant: kernels::Variant) {
+        for b in &mut self.blocks {
+            for l in &mut b.linears {
+                l.set_kernel(variant);
+            }
+        }
     }
 
     pub fn global(&self, name: &str) -> &Tensor {

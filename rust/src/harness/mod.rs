@@ -278,6 +278,7 @@ pub fn engine_table(
         &format!("Packed engine — {model}"),
         &[
             "config",
+            "kernel",
             "hidden_maxdiff",
             "mem_vs_fp16",
             "engine_tok_s_b16",
@@ -324,6 +325,9 @@ pub fn engine_table(
             }
         }
         let mem_ratio = pm.fp16_linear_bytes() as f64 / pm.packed_bytes() as f64;
+        // GEMM dispatch the packed linears resolved at pack time (captured
+        // here — the model moves into the engine next)
+        let kernel = pm.kernel_name().to_string();
 
         // engine throughput: 16 concurrent greedy decodes, chunked prefill;
         // a live recorder rides along so the table also reports inter-token
@@ -377,6 +381,7 @@ pub fn engine_table(
 
         t.row(vec![
             config.clone(),
+            kernel,
             format!("{max_diff:.2e}"),
             format!("{mem_ratio:.2}x"),
             format!("{engine_tok_s:.0}"),

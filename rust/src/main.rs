@@ -3,13 +3,16 @@
 //! Subcommands:
 //!   generate  --model NAME [--config w4a16g128] [--prompt "the "] [--n N]
 //!             [--max-new N] [--topk K] [--temp=T] [--batch B] [--seed S]
-//!             [--prefill-chunk N] [--token-budget N]
+//!             [--prefill-chunk N] [--token-budget N] [--kernel V]
 //!             [--ckpt DIR] [--save-packed PATH | --load-packed PATH]
 //!             — packed-weight engine decode; pure host, no artifacts.
 //!             `--prefill-chunk` (default 16, 0 = whole prompt) pushes that
 //!             many prompt tokens per scheduler tick; `--token-budget`
-//!             caps total rows per tick (0 = unlimited). Greedy output is
-//!             bit-identical for any setting.
+//!             caps total rows per tick (0 = unlimited). `--kernel`
+//!             (scalar|avx2|avx512|neon; also the `AQ_KERNEL` env) pins
+//!             the GEMM dispatch variant, scalar-falling-back when the
+//!             CPU/build lacks it. Greedy output is bit-identical for any
+//!             setting, kernel variant included.
 //!   serve     --model NAME [--config C] [--addr 127.0.0.1] [--port 8080]
 //!             [--batch B] [--queue-cap N] [--client-cap N] [--workers N]
 //!             [--deadline-ms D] [--max-new N] [--prefill-chunk N]
@@ -17,7 +20,7 @@
 //!             [--kv-pages N] [--kv-page-tokens N]
 //!             [--fault-tick-ms N] [--fault-admit-ms N]
 //!             [--fault-drop-after N] [--no-telemetry] [--log-requests]
-//!             [--draft-bits B]
+//!             [--draft-bits B] [--kernel V]
 //!             — overload-safe HTTP serving over the packed engine:
 //!             POST /v1/completions (OpenAI-style, `"stream": true` for
 //!             SSE), GET /healthz, GET /v1/stats, GET /metrics
@@ -33,7 +36,7 @@
 //!             page count is reservable (429 otherwise). Pure host, no
 //!             artifacts.
 //!   profile   --model NAME [--config C] [--batch B] [--max-new N]
-//!             [--n N] [--prefill-chunk N] [--token-budget N]
+//!             [--n N] [--prefill-chunk N] [--token-budget N] [--kernel V]
 //!             [--ckpt DIR] [--load-packed PATH]
 //!             — run a canned mixed-length greedy workload with telemetry
 //!             and sampled kernel timing enabled, then print the latency
@@ -41,11 +44,13 @@
 //!             kernels) and save it to results/profile_latency.{md,csv}.
 //!             Pure host, no artifacts.
 //!   doctor    --model NAME [--config C] [--batch B] [--max-new N]
-//!             [--n N] [--draft-bits B] [--ckpt DIR] [--load-packed PATH]
+//!             [--n N] [--draft-bits B] [--kernel V] [--ckpt DIR]
+//!             [--load-packed PATH]
 //!             — numeric-health exhibit: canned workload with sampled
 //!             activation stats, per-layer drift verdicts against the
-//!             baked calibration envelopes, and the w-serve vs w-draft
-//!             divergence summary; saves results/numeric_health.{md,csv}.
+//!             baked calibration envelopes, the w-serve vs w-draft
+//!             divergence summary, and the active GEMM kernel dispatch;
+//!             saves results/numeric_health.{md,csv}.
 //!             Pure host, no artifacts.
 //!   train     --model NAME | --all  [--steps N] [--out DIR]      (pjrt)
 //!   quantize  --model NAME --method M --config w3a16g128 [--alpha A]
@@ -91,8 +96,25 @@ fn main() -> Result<()> {
 /// `generate` and `serve` run fully offline.
 fn build_engine(cli: &Cli, tag: &str) -> Result<affinequant::engine::Engine> {
     use affinequant::cli::parse_config;
-    use affinequant::engine::{Engine, SchedConfig};
+    use affinequant::engine::{kernels, Engine, SchedConfig};
     use affinequant::model::zoo;
+
+    // pin the GEMM dispatch variant before any weight is packed/loaded —
+    // every PackedLinear resolves its kernel at construction time
+    if let Some(k) = cli.get("kernel") {
+        kernels::set_requested(k)?;
+    }
+    let ki = kernels::info();
+    eprintln!(
+        "[{tag}] kernel dispatch: {} ({}{})",
+        ki.selected,
+        ki.source,
+        if ki.fell_back {
+            format!(", fell back from {:?}", ki.requested.as_deref().unwrap_or("?"))
+        } else {
+            String::new()
+        },
+    );
 
     let model = cli.str_or("model", "opt-s1");
     let max_batch = cli.usize_or("batch", 8);
@@ -333,6 +355,18 @@ fn cmd_doctor(cli: &Cli) -> Result<()> {
         eprintln!("[doctor] divergence sampler: w{serve_bits} serve vs w{draft_bits} draft");
     }
     eprintln!("[doctor] {}", engine.memory_report());
+    {
+        use affinequant::engine::kernels;
+        let ki = kernels::info();
+        let avail: Vec<&str> = ki.available.iter().map(|v| v.name()).collect();
+        eprintln!(
+            "[doctor] kernel: {} (selection {}{}; available: {})",
+            engine.model.kernel_name(),
+            ki.source,
+            if ki.fell_back { ", fell back" } else { "" },
+            avail.join(","),
+        );
+    }
 
     // same canned mixed-length workload as `profile`; decode tails are long
     // enough that the divergence sampler fires (first probe at decode tick

@@ -165,6 +165,12 @@ struct Ctx {
     /// Live when `cfg.telemetry`; shares the registry with the engine
     /// thread's scheduler session.
     recorder: Recorder,
+    /// GEMM dispatch the model's linears resolved at load (e.g.
+    /// "avx2/w4g128") — captured before the engine moves to its thread.
+    kernel_name: &'static str,
+    /// Selection snapshot (variant, override source, fallback flag) for
+    /// `/v1/stats` and the `aq_kernel_info` metric.
+    kernel: crate::engine::kernels::KernelInfo,
 }
 
 /// A running server; dropping the handle does NOT stop it — call
@@ -275,6 +281,8 @@ impl Server {
 
         let ctx = Arc::new(Ctx {
             model_name: engine.model.cfg.name.clone(),
+            kernel_name: engine.model.kernel_name(),
+            kernel: crate::engine::kernels::info(),
             max_batch,
             kv_window,
             kv_page_tokens,
@@ -780,8 +788,23 @@ fn stats_json(ctx: &Ctx) -> String {
     let a = &ctx.admission;
     let k = &ctx.gauges.kv;
     let n = |v: u64| jsonx::num(v as f64);
+    let ki = &ctx.kernel;
     let mut fields = vec![
         ("draining", Value::Bool(ctx.draining.load(Ordering::SeqCst))),
+        (
+            "kernel",
+            jsonx::obj(vec![
+                ("name", jsonx::s(ctx.kernel_name)),
+                ("variant", jsonx::s(ki.selected.name())),
+                ("source", jsonx::s(ki.source)),
+                ("requested", jsonx::s(ki.requested.as_deref().unwrap_or(""))),
+                ("fell_back", Value::Bool(ki.fell_back)),
+                (
+                    "available",
+                    Value::Arr(ki.available.iter().map(|v| jsonx::s(v.name())).collect()),
+                ),
+            ]),
+        ),
         ("max_batch", jsonx::num(ctx.max_batch as f64)),
         ("queue_cap", jsonx::num(ctx.cfg.queue_cap as f64)),
         ("in_flight", jsonx::num(a.in_flight() as f64)),
@@ -1012,6 +1035,21 @@ fn metrics_text(ctx: &Ctx) -> String {
     let a = &ctx.admission;
     let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
     let mut out = String::new();
+
+    // GEMM dispatch info gauge: constant 1, labels carry the selection —
+    // the Prometheus idiom for build/runtime facts (cf. node_exporter's
+    // *_info families). `fell_back` flags an explicit request the CPU or
+    // build could not honor.
+    let ki = &ctx.kernel;
+    out.push_str("# HELP aq_kernel_info active packed-GEMM kernel dispatch (constant 1; labels carry the selection)\n");
+    out.push_str("# TYPE aq_kernel_info gauge\n");
+    out.push_str(&format!(
+        "aq_kernel_info{{variant=\"{}\",kernel=\"{}\",source=\"{}\",fell_back=\"{}\"}} 1\n",
+        ki.selected.name(),
+        ctx.kernel_name,
+        ki.source,
+        ki.fell_back,
+    ));
 
     // HTTP front door
     prom_counter(&mut out, "aq_http_connections_total", "TCP connections accepted", ld(&m.connections));

@@ -802,3 +802,47 @@ fn admin_shutdown_drains_gracefully() {
     // fresh connections are refused once the listener is gone
     wait_until("listener closed", || TcpStream::connect(addr).is_err());
 }
+
+/// Smoke check for the GEMM dispatch observability surfaces: `/v1/stats`
+/// carries the `kernel` block (name + a known variant + the available
+/// list) and `/metrics` exports the `aq_kernel_info` gauge. Named with the
+/// `kernel_` prefix so `scripts/ci.sh` can run it as a targeted smoke.
+#[test]
+fn kernel_stats_and_metric_report_dispatch() {
+    let handle = spawn(2, quiet_cfg());
+    let addr = handle.addr;
+
+    let stats = jsonx::parse(&request(addr, "GET", "/v1/stats", "").body_str()).expect("stats");
+    let k = stats.req("kernel");
+    let name = k.req("name").as_str();
+    let variant = k.req("variant").as_str();
+    assert!(!name.is_empty(), "kernel.name must be populated");
+    assert!(
+        name.starts_with(&format!("{variant}/")),
+        "kernel name {name:?} must be namespaced under the variant {variant:?}"
+    );
+    assert!(
+        ["scalar", "avx2", "avx512", "neon"].contains(&variant),
+        "unknown kernel variant {variant:?}"
+    );
+    let available = match k.req("available") {
+        Value::Arr(a) => a.iter().map(|v| v.as_str().to_string()).collect::<Vec<_>>(),
+        other => panic!("kernel.available not an array: {other:?}"),
+    };
+    assert!(
+        available.iter().any(|v| v == "scalar"),
+        "scalar must always be available (got {available:?})"
+    );
+
+    let m = request(addr, "GET", "/metrics", "");
+    assert_eq!(m.status, 200);
+    assert_prometheus_text(&m.body_str());
+    let needle = format!("aq_kernel_info{{variant=\"{variant}\"");
+    assert!(
+        m.body_str().contains(&needle),
+        "metrics must export aq_kernel_info for {variant:?}"
+    );
+
+    handle.shutdown();
+    handle.join();
+}

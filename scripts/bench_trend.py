@@ -82,12 +82,23 @@ def main():
 
     flat = [flatten(data) for _, _, data in snaps]
 
-    # headline row: per-snapshot metadata that is present in every file
-    lines += ["| snapshot | pr | threads |", "|---|---|---|"]
-    for name, f in zip(names, flat):
+    # headline row: per-snapshot metadata that is present in every file.
+    # `kernel` (the GEMM dispatch variant the bench host selected, PR 10+)
+    # and its best-variant w4 throughput come from the raw snapshot — the
+    # flattener drops strings.
+    lines += [
+        "| snapshot | pr | threads | kernel | w4_best_tok_s |",
+        "|---|---|---|---|---|",
+    ]
+    for (name, f), (_, _, raw) in zip(zip(names, flat), snaps):
         pr = fmt(f["pr"]) if "pr" in f else "-"
         threads = fmt(f["threads"]) if "threads" in f else "-"
-        lines.append(f"| `{name}` | {pr} | {threads} |")
+        kinfo = raw.get("kernel") if isinstance(raw, dict) else None
+        kinfo = kinfo if isinstance(kinfo, dict) else {}
+        kernel = kinfo.get("selected") or "-"
+        best = kinfo.get("w4g128_b16_best_tok_s")
+        best = fmt(float(best)) if isinstance(best, (int, float)) else "-"
+        lines.append(f"| `{name}` | {pr} | {threads} | {kernel} | {best} |")
     lines.append("")
 
     # one table per top-level section, metrics as rows, snapshots as

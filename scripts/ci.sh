@@ -50,6 +50,17 @@ cargo test -q --no-default-features --test server shared_
 echo "== numeric-health smoke (no-default-features)"
 cargo test -q --no-default-features --test server numeric_
 
+# kernel-dispatch gate, both halves:
+#  1. the engine suite re-runs with the dispatch pinned to the scalar
+#     baseline via the AQ_KERNEL env override — greedy outputs and every
+#     GEMM property must hold on the non-specialized path too;
+#  2. /v1/stats + /metrics must report the active kernel over a real socket
+echo "== engine tests with AQ_KERNEL=scalar (no-default-features)"
+AQ_KERNEL=scalar cargo test -q --no-default-features --test engine
+
+echo "== kernel dispatch stats smoke (no-default-features)"
+cargo test -q --no-default-features --test server kernel_
+
 if [[ "${1:-}" == "--with-pjrt" ]]; then
     echo "== cargo build --release (default features)"
     cargo build --release
